@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 1 (ERT machine characterization) and measure
+//! the sweep cost. Prints paper-vs-ours ceiling rows.
+
+use hroofline::bench_harness::{black_box, Bench};
+use hroofline::device::GpuSpec;
+use hroofline::ert::modeled;
+use hroofline::ert::sweep::SweepConfig;
+
+fn main() {
+    // Correctness/shape first: print the reproduction table.
+    let artifact = hroofline::report::fig1::generate().expect("fig1");
+    println!("{}", artifact.text);
+    let _ = artifact.write_to(std::path::Path::new("out/report"));
+
+    // Then the harness cost (modeled sweep is a hot analysis path).
+    let mut b = Bench::new("fig1_ceilings");
+    b.case("modeled_sweep_quick", || {
+        let spec = GpuSpec::v100();
+        let c = modeled::characterize(&spec, &SweepConfig::quick());
+        black_box(c.compute_gflops.len() as u64)
+    });
+    b.case("modeled_sweep_standard", || {
+        let spec = GpuSpec::v100();
+        let c = modeled::characterize(&spec, &SweepConfig::standard());
+        black_box(c.compute_gflops.len() as u64)
+    });
+    b.run();
+}

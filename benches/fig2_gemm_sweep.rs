@@ -1,0 +1,44 @@
+//! Bench: regenerate Fig. 2 (tensor-core GEMM vs matrix size), and —
+//! when artifacts are present — anchor the small sizes with *real*
+//! Pallas GEMM executions through PJRT.
+
+use hroofline::bench_harness::{black_box, Bench};
+use hroofline::device::GpuSpec;
+use hroofline::ert::gemm::gemm_sweep;
+use hroofline::runtime::engine::literal_f32;
+use hroofline::runtime::{ArtifactStore, Engine};
+
+fn main() {
+    let artifact = hroofline::report::fig2::generate().expect("fig2");
+    println!("{}", artifact.text);
+    let _ = artifact.write_to(std::path::Path::new("out/report"));
+
+    let mut b = Bench::new("fig2_gemm_sweep");
+    b.case("modeled_sweep", || {
+        let spec = GpuSpec::v100();
+        black_box(gemm_sweep(&spec).len() as u64)
+    });
+    b.run();
+
+    // Real small-GEMM anchor: execute the Pallas gemm artifact and report
+    // attained host FLOP/s (documents that the same harness runs real
+    // kernels; absolute numbers are host-CPU-scale).
+    match ArtifactStore::open_default().and_then(|store| {
+        let engine = Engine::cpu()?;
+        let module = engine.load(&store, "gemm_256")?;
+        let n = 256usize;
+        let x = literal_f32(&vec![1.0f32; n * n], &[n, n])?;
+        let w = literal_f32(&vec![0.5f32; n * n], &[n, n])?;
+        engine.run_timed(&module, &[x, w], 2, 10)
+    }) {
+        Ok(timed) => {
+            let flops = 2.0 * 256f64.powi(3);
+            println!(
+                "real pallas gemm_256 via PJRT: median {:.3} ms -> {}",
+                timed.secs.median * 1e3,
+                hroofline::util::fmt::si_flops(flops / timed.secs.median)
+            );
+        }
+        Err(e) => println!("(skipping real-GEMM anchor: {e:#})"),
+    }
+}

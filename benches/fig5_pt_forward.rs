@@ -1,0 +1,17 @@
+//! Bench: regenerate fig5 (hierarchical Roofline of DeepCAM) and time
+//! the full analysis pipeline (lower -> profile -> roofline -> SVG).
+
+use hroofline::bench_harness::{black_box, Bench};
+
+fn main() {
+    let artifact = hroofline::report::generate("fig5").expect("fig5");
+    println!("{}", artifact.text);
+    let _ = artifact.write_to(std::path::Path::new("out/report"));
+
+    let mut b = Bench::new("fig5_pt_forward").iters(10);
+    b.case("generate", || {
+        let a = hroofline::report::generate("fig5").unwrap();
+        black_box(a.svg.map(|s| s.len()).unwrap_or(0) as u64)
+    });
+    b.run();
+}

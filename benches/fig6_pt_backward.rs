@@ -1,0 +1,17 @@
+//! Bench: regenerate fig6 (hierarchical Roofline of DeepCAM) and time
+//! the full analysis pipeline (lower -> profile -> roofline -> SVG).
+
+use hroofline::bench_harness::{black_box, Bench};
+
+fn main() {
+    let artifact = hroofline::report::generate("fig6").expect("fig6");
+    println!("{}", artifact.text);
+    let _ = artifact.write_to(std::path::Path::new("out/report"));
+
+    let mut b = Bench::new("fig6_pt_backward").iters(10);
+    b.case("generate", || {
+        let a = hroofline::report::generate("fig6").unwrap();
+        black_box(a.svg.map(|s| s.len()).unwrap_or(0) as u64)
+    });
+    b.run();
+}

@@ -1,0 +1,114 @@
+//! Hot-path micro-benches for the §Perf optimization pass (L3 targets):
+//!
+//! * the analytic cache/cycle simulator (per-kernel cost),
+//! * profiler session throughput (kernels/second through a standard
+//!   metric collection),
+//! * SVG chart emission,
+//! * the exact set-associative cache simulator (ablation: exact vs
+//!   analytic),
+//! * PJRT train-step execution (when artifacts are present) — the only
+//!   real-hardware hot path.
+
+use hroofline::bench_harness::{black_box, Bench};
+use hroofline::device::{GpuSpec, Precision};
+use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
+use hroofline::dl::lower::{lower, Framework, Phase};
+use hroofline::dl::Policy;
+use hroofline::profiler::Session;
+use hroofline::roofline::chart::RooflineChart;
+use hroofline::roofline::model::RooflineModel;
+use hroofline::sim::{self, cache_sim, KernelDesc};
+
+fn main() {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let all = trace.all();
+    let n_inv: u64 = all.iter().map(|i| i.invocations).sum();
+
+    let mut b = Bench::new("hotpath");
+
+    // single-kernel simulation cost
+    let k = KernelDesc::gemm("bench", 2048, 2048, 2048, Precision::Fp16, true, 128, &spec);
+    b.case("simulate_one_kernel", move || {
+        let spec = GpuSpec::v100();
+        let c = sim::simulate(&spec, &k);
+        black_box(c.elapsed_seconds());
+        1
+    });
+
+    // framework lowering
+    {
+        let graph = graph.clone();
+        b.case("lower_pytorch_paper", move || {
+            let t = lower(&graph, Framework::PyTorch, Policy::O1);
+            black_box(t.all().len() as u64)
+        });
+    }
+
+    // full profiling session over the whole training step
+    {
+        let all = all.clone();
+        b.case("profile_full_step", move || {
+            let spec = GpuSpec::v100();
+            let p = Session::standard(&spec).profile(&all);
+            black_box(p.n_kernels() as u64);
+            n_inv
+        });
+    }
+
+    // roofline + SVG emission
+    {
+        let spec2 = GpuSpec::v100();
+        let profile = Session::standard(&spec2).profile(trace.phase(Phase::Backward));
+        b.case("chart_svg_emit", move || {
+            let spec = GpuSpec::v100();
+            let model = RooflineModel::from_profile(&spec, &profile);
+            let chart = RooflineChart::hierarchical(&model, "bench");
+            black_box(chart.to_svg().len() as u64)
+        });
+    }
+
+    // ablation: exact set-associative simulation vs the analytic model
+    b.case("cache_exact_100k_accesses", || {
+        let mut h = cache_sim::v100_scaled(64);
+        let mut rng = hroofline::util::Rng::new(1);
+        for _ in 0..100_000 {
+            h.access(rng.below(1 << 24));
+        }
+        black_box(h.mem_bytes);
+        100_000
+    });
+    b.case("cache_analytic_100k_kernels", || {
+        let spec = GpuSpec::v100();
+        let cm = sim::CacheModel::new(&spec);
+        let k = KernelDesc::streaming_elementwise("x", 1 << 16, Precision::Fp32, 2);
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            acc = acc.wrapping_add(cm.traffic(&k).hbm_bytes);
+        }
+        black_box(acc);
+        100_000
+    });
+
+    b.run();
+
+    // Real PJRT hot path (separate group; skipped without artifacts).
+    if let Ok(store) = hroofline::runtime::ArtifactStore::open_default() {
+        let engine = hroofline::runtime::Engine::cpu().expect("cpu client");
+        if let Ok(module) = engine.load(&store, "gemm_128") {
+            let x = hroofline::runtime::engine::literal_f32(&vec![1.0; 128 * 128], &[128, 128])
+                .unwrap();
+            let w = hroofline::runtime::engine::literal_f32(&vec![0.5; 128 * 128], &[128, 128])
+                .unwrap();
+            let mut b2 = Bench::new("hotpath_pjrt").iters(20);
+            b2.case("gemm128_execute", move || {
+                let out = engine.run(&module, &[x.clone(), w.clone()]).unwrap();
+                black_box(out.len() as u64)
+            });
+            b2.run();
+        }
+    } else {
+        println!("(hotpath_pjrt skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Table I (the FP16 CUDA-core tuning ladder) and
+//! validate each rung against the paper's measurement.
+
+use hroofline::bench_harness::{black_box, Bench};
+use hroofline::device::GpuSpec;
+use hroofline::ert::fp16_ladder::ladder;
+
+fn main() {
+    let artifact = hroofline::report::tab1::generate().expect("tab1");
+    println!("{}", artifact.text);
+    let _ = artifact.write_to(std::path::Path::new("out/report"));
+
+    let mut b = Bench::new("tab1_fp16_ladder");
+    b.case("ladder_eval", || {
+        let spec = GpuSpec::v100();
+        let total: f64 = ladder().iter().map(|v| v.tflops(&spec)).sum();
+        black_box(total as u64)
+    });
+    b.run();
+}

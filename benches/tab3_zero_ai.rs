@@ -1,0 +1,21 @@
+//! Bench: regenerate Table III (zero-AI invocation census) and time the
+//! census path (lowering both frameworks + counting).
+
+use hroofline::bench_harness::{black_box, Bench};
+use hroofline::dl::lower::Framework;
+use hroofline::report::tab3;
+
+fn main() {
+    let artifact = tab3::generate().expect("tab3");
+    println!("{}", artifact.text);
+    let _ = artifact.write_to(std::path::Path::new("out/report"));
+
+    let mut b = Bench::new("tab3_zero_ai").iters(10);
+    b.case("census", || {
+        let c = tab3::census();
+        black_box(
+            c.total_zero_ai(Framework::TensorFlow) + c.total_zero_ai(Framework::PyTorch),
+        )
+    });
+    b.run();
+}

@@ -1,0 +1,74 @@
+//! AMP study (paper §IV-C, Figs 4, 6, 8, 9): profile the DeepCAM
+//! backward pass under every mixed-precision policy and report runtime,
+//! tensor-core utilization and cast overhead per policy — including the
+//! manual-FP16 ≈ AMP equivalence that Fig. 8 demonstrates.
+//!
+//! Run: `cargo run --release --example amp_study`
+
+use hroofline::device::GpuSpec;
+use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
+use hroofline::dl::lower::{lower, Framework, Phase};
+use hroofline::dl::Policy;
+use hroofline::profiler::Session;
+use hroofline::util::{fmt, Table};
+
+fn main() -> anyhow::Result<()> {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+
+    println!("AMP policy study — DeepCAM backward pass on the simulated V100\n");
+    for fw in [Framework::TensorFlow, Framework::PyTorch] {
+        let mut table = Table::new(&[
+            "policy",
+            "bwd time",
+            "speedup vs O0",
+            "TC time share",
+            "cast launches",
+        ]);
+        let mut t_o0 = None;
+        for policy in [Policy::O0, Policy::O1, Policy::O2, Policy::ManualFp16] {
+            let trace = lower(&graph, fw, policy);
+            let profile = Session::standard(&spec).profile(trace.phase(Phase::Backward));
+            let total = profile.total_seconds();
+            if policy == Policy::O0 {
+                t_o0 = Some(total);
+            }
+            let tc_time: f64 = profile
+                .by_time()
+                .iter()
+                .filter(|k| k.is_tensor_dominated())
+                .map(|k| k.seconds())
+                .sum();
+            let casts: u64 = trace
+                .phase(Phase::Backward)
+                .iter()
+                .chain(trace.phase(Phase::Forward))
+                .filter(|i| i.kernel.name.contains("cast") || i.kernel.name.contains("autocast"))
+                .map(|i| i.invocations)
+                .sum();
+            table.row(&[
+                policy.name().to_string(),
+                fmt::duration(total),
+                format!("{:.2}x", t_o0.unwrap() / total),
+                fmt::pct(if total > 0.0 { tc_time / total } else { 0.0 }),
+                casts.to_string(),
+            ]);
+        }
+        println!("== {} ==\n{}", fw.name(), table.render());
+    }
+
+    // The Fig. 8 equivalence, quantified.
+    let tf_amp = Session::standard(&spec)
+        .profile(lower(&graph, Framework::TensorFlow, Policy::O1).phase(Phase::Backward))
+        .total_seconds();
+    let tf_manual = Session::standard(&spec)
+        .profile(lower(&graph, Framework::TensorFlow, Policy::ManualFp16).phase(Phase::Backward))
+        .total_seconds();
+    println!(
+        "Fig. 8 check: TF manual-FP16 backward {} vs AMP backward {} ({:+.2}%)",
+        fmt::duration(tf_manual),
+        fmt::duration(tf_amp),
+        (tf_manual / tf_amp - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the 60-second tour of hroofline.
+//!
+//! 1. build the V100 device model and extract its Roofline ceilings;
+//! 2. describe three kernels (a TC GEMM, a streaming FMA, a zero-AI
+//!    cast) and profile them with the Nsight-analog session;
+//! 3. print the hierarchical-roofline kernel table and write an SVG.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hroofline::device::{GpuSpec, Precision};
+use hroofline::profiler::Session;
+use hroofline::roofline::chart::RooflineChart;
+use hroofline::roofline::model::RooflineModel;
+use hroofline::sim::kernel::{KernelDesc, KernelInvocation};
+use hroofline::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. machine characterization -----------------------------------
+    let spec = GpuSpec::v100();
+    println!("device: {}", spec.name);
+    for p in Precision::ALL {
+        println!(
+            "  {:10} ceiling: {}",
+            p.name(),
+            fmt::si_flops(spec.achievable_flops(p))
+        );
+    }
+    println!(
+        "  TensorCore ceiling: {}",
+        fmt::si_flops(spec.achievable_tensor_flops())
+    );
+
+    // --- 2. application characterization -------------------------------
+    let trace = vec![
+        KernelInvocation::once(KernelDesc::gemm(
+            "volta_h884gemm_demo", 4096, 4096, 4096, Precision::Fp16, true, 128, &spec,
+        )),
+        KernelInvocation {
+            kernel: KernelDesc::streaming_elementwise("saxpy_demo", 1 << 22, Precision::Fp32, 2),
+            invocations: 16,
+            stream: 0,
+        },
+        KernelInvocation {
+            kernel: KernelDesc::streaming_elementwise("cast_f2h_demo", 1 << 22, Precision::Fp16, 0),
+            invocations: 8,
+            stream: 0,
+        },
+    ];
+    let profile = Session::standard(&spec).profile(&trace);
+    println!(
+        "\nprofiled {} kernels / {} invocations, total GPU time {}",
+        profile.n_kernels(),
+        profile.total_invocations(),
+        fmt::duration(profile.total_seconds())
+    );
+    let (zero, total) = profile.zero_ai_census();
+    println!("zero-AI invocations: {zero}/{total}");
+
+    // --- 3. the hierarchical roofline -----------------------------------
+    let model = RooflineModel::from_profile(&spec, &profile);
+    model.validate_bounds().expect("all kernels under the roofline");
+    let chart = RooflineChart::hierarchical(&model, "Quickstart — three kernels on a V100");
+    println!("\n{}", chart.to_table().render());
+    std::fs::create_dir_all("out/quickstart")?;
+    std::fs::write("out/quickstart/roofline.svg", chart.to_svg())?;
+    println!("wrote out/quickstart/roofline.svg");
+    Ok(())
+}

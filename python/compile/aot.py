@@ -1,0 +1,173 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.json.
+
+This is the only place Python runs in the system: `make artifacts`
+invokes it once; the Rust runtime then loads the HLO text via
+`HloModuleProto::from_text_file` (PJRT). HLO *text* — not serialized
+protos — is the interchange format: jax >= 0.5 emits 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Exported modules (see ArtifactStore on the Rust side):
+  * forward      — DeepCAM-lite inference: (params..., x) -> (logits,)
+  * train_step   — full fwd+bwd+SGD: (params..., momentum..., x, labels)
+                   -> (new_params..., new_momentum..., loss)
+  * gemm_<M>     — standalone Pallas GEMM probes for runtime tests and
+                   the Fig. 2 small-size empirical anchors
+  * ert_fma      — the Pallas ERT micro-kernel probe
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ert, gemm
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tensor_spec(x) -> dict:
+    dt = jnp.result_type(x)
+    name = {"float32": "f32", "int32": "s32", "bfloat16": "bf16"}.get(str(dt), str(dt))
+    return {"dims": list(x.shape), "dtype": name}
+
+
+def flops_estimate(lowered) -> float | None:
+    """Analytic FLOPs from XLA's cost analysis, when available."""
+    try:
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return float(cost.get("flops", 0.0)) or None
+    except Exception:
+        return None
+
+
+def lower_module(name, fn, example_args, out_dir, manifest, meta=None, with_flops=True):
+    print(f"[aot] lowering {name} ...", flush=True)
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(text)
+    outputs = jax.eval_shape(fn, *example_args)
+    flat_out, _ = jax.tree_util.tree_flatten(outputs)
+    flat_in, _ = jax.tree_util.tree_flatten(example_args)
+    manifest["modules"][name] = {
+        "hlo_file": hlo_file,
+        "inputs": [tensor_spec(a) for a in flat_in],
+        "outputs": [tensor_spec(o) for o in flat_out],
+        "flops_per_run": flops_estimate(lowered) if with_flops else None,
+        "meta": meta or {},
+    }
+    print(f"[aot]   wrote {hlo_file} ({len(text)} chars)", flush=True)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact output dir")
+    parser.add_argument("--height", type=int, default=32)
+    parser.add_argument("--width", type=int, default=32)
+    parser.add_argument("--batch", type=int, default=2)
+    args = parser.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = model.DeepCamConfig.lite(height=args.height, width=args.width, batch=args.batch)
+    params = model.init_params(cfg, seed=0)
+    momentum = model.zero_momentum(params)
+    x, labels = model.synthetic_batch(cfg, seed=0)
+
+    flat_params, params_def = jax.tree_util.tree_flatten(params)
+    flat_mom, _ = jax.tree_util.tree_flatten(momentum)
+    n_p = len(flat_params)
+
+    manifest = {"modules": {}, "config": {
+        "height": cfg.height, "width": cfg.width, "batch": cfg.batch,
+        "in_channels": cfg.in_channels, "classes": cfg.classes,
+        "n_param_tensors": n_p, "n_params": model.n_params(params),
+    }}
+
+    # ---- forward ----
+    def forward_flat(*args_):
+        p = jax.tree_util.tree_unflatten(params_def, args_[:n_p])
+        return (model.forward(p, args_[n_p], cfg),)
+
+    lower_module(
+        "forward",
+        forward_flat,
+        (*flat_params, x),
+        out_dir,
+        manifest,
+        meta={"params": str(model.n_params(params))},
+    )
+
+    # ---- train_step ----
+    def train_step_flat(*args_):
+        p = jax.tree_util.tree_unflatten(params_def, args_[:n_p])
+        m = jax.tree_util.tree_unflatten(params_def, args_[n_p : 2 * n_p])
+        xb, lb = args_[2 * n_p], args_[2 * n_p + 1]
+        new_p, new_m, loss = model.train_step(p, m, xb, lb, cfg)
+        fp, _ = jax.tree_util.tree_flatten(new_p)
+        fm, _ = jax.tree_util.tree_flatten(new_m)
+        return (*fp, *fm, loss)
+
+    lower_module(
+        "train_step",
+        train_step_flat,
+        (*flat_params, *flat_mom, x, labels),
+        out_dir,
+        manifest,
+        meta={"params": str(model.n_params(params))},
+    )
+
+    # ---- standalone GEMM probes ----
+    for m_size in (128, 256):
+        a = jnp.ones((m_size, m_size), jnp.float32)
+
+        def gemm_fn(x_, w_):
+            return (gemm.matmul_nocustom(x_, w_),)
+
+        lower_module(
+            f"gemm_{m_size}",
+            gemm_fn,
+            (a, a),
+            out_dir,
+            manifest,
+            meta={"flops_analytic": str(2 * m_size**3)},
+        )
+
+    # ---- ERT probe ----
+    buf = jnp.ones((4096, 64), jnp.float32)
+
+    def ert_fn(x_):
+        return (ert.ert_fma(x_, iters=64),)
+
+    lower_module(
+        "ert_fma",
+        ert_fn,
+        (buf,),
+        out_dir,
+        manifest,
+        meta={"flops_analytic": str(ert.ert_flops(buf.shape, 64))},
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] manifest with {len(manifest['modules'])} modules -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Layer-1 convolution kernels: im2col + Pallas GEMM.
+
+The paper's dominant DeepCAM kernels are cuDNN implicit-GEMM
+convolutions; the TPU re-expression lowers every conv to an explicit
+patch extraction (pure data movement, differentiable) followed by the
+Pallas tiled GEMM of :mod:`gemm` — so the network's FLOP hot path runs
+through the L1 kernel in both the forward and backward pass (the GEMM
+carries a custom VJP built from more Pallas GEMMs).
+
+Layout: NHWC activations, HWIO weights (JAX convention).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import gemm
+
+
+def _same_pads(size: int, stride: int, kernel: int) -> tuple[int, int]:
+    """TF-style SAME padding for one spatial dim."""
+    out = -(-size // stride)
+    pad = max(0, (out - 1) * stride + kernel - size)
+    return pad // 2, pad - pad // 2
+
+
+def im2col(x, kh: int, kw: int, stride: int, dilation: int = 1):
+    """Extract conv patches: (N,H,W,C) -> (N*OH*OW, KH*KW*C).
+
+    Pure data movement (lax.conv_general_dilated_patches), fully
+    differentiable; all FLOPs happen in the Pallas GEMM that follows.
+    """
+    n, h, w, _c = x.shape
+    pads = (
+        _same_pads(h, stride, (kh - 1) * dilation + 1),
+        _same_pads(w, stride, (kw - 1) * dilation + 1),
+    )
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=pads,
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # patches: (N, OH, OW, C*KH*KW) with channel-major patch layout.
+    oh, ow = patches.shape[1], patches.shape[2]
+    return patches.reshape(n * oh * ow, patches.shape[3]), (n, oh, ow)
+
+
+def conv2d(x, w, b=None, *, stride: int = 1, dilation: int = 1):
+    """2-D convolution with SAME padding via im2col + Pallas GEMM.
+
+    x: (N, H, W, C); w: (KH, KW, C, OC); b: (OC,) or None.
+    """
+    kh, kw, c, oc = w.shape
+    if x.shape[3] != c:
+        raise ValueError(f"conv2d channels: x {x.shape} vs w {w.shape}")
+    cols, (n, oh, ow) = im2col(x, kh, kw, stride, dilation)
+    # Patch layout is (C, KH, KW)-major: transpose weights to match.
+    w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, oc)
+    y = gemm.matmul(cols, w2)
+    y = y.reshape(n, oh, ow, oc)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv2d_transpose(x, w, b=None, *, stride: int = 2):
+    """Transposed convolution (decoder upsampling), built as input
+    dilation (zero insertion — pure movement) + stride-1 Pallas conv.
+
+    x: (N, H, W, C); w: (KH, KW, C, OC). Output spatial = H*stride.
+    """
+    if stride > 1:
+        n, h, w_, c = x.shape
+        # Interior padding inserts stride-1 zeros between elements.
+        x = lax.pad(
+            x,
+            jnp.zeros((), x.dtype),
+            ((0, 0, 0), (0, stride - 1, stride - 1), (0, stride - 1, stride - 1), (0, 0, 0)),
+        )
+        # lax.pad with interior puts zeros *between* and after; trim the
+        # trailing zeros to get exactly H*stride.
+        x = x[:, : h * stride, : w_ * stride, :]
+    # Spatially flip the kernel (transposed conv = correlation with
+    # flipped kernel over the dilated input).
+    w_flipped = w[::-1, ::-1, :, :]
+    return conv2d(x, w_flipped, b, stride=1)
+
+
+def avg_pool_global(x):
+    """Global average pool (ASPP image-level feature): (N,H,W,C)->(N,1,1,C)."""
+    return jnp.mean(x, axis=(1, 2), keepdims=True)
+
+
+def conv_flops(x_shape, w_shape, stride: int = 1) -> int:
+    """Analytic FLOPs of conv2d (2 * N*OH*OW * KH*KW*C * OC), used by the
+    AOT manifest and cross-checked against the Rust dl/ lowering."""
+    n, h, w_, _ = x_shape
+    kh, kw, c, oc = w_shape
+    oh, ow = -(-h // stride), -(-w_ // stride)
+    return 2 * n * oh * ow * kh * kw * c * oc

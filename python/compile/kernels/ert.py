@@ -1,0 +1,52 @@
+"""Layer-1 ERT micro-kernel in Pallas: the chained-FMA probe of §II-A,
+as a real kernel artifact.
+
+The Rust ERT's *empirical* mode measures native host loops; this Pallas
+variant is additionally AOT-lowered so the runtime integration tests can
+execute an ERT probe through the exact PJRT path the model artifacts
+use (machine characterization and application characterization sharing
+one execution substrate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ert_kernel(x_ref, o_ref, *, iters: int, alpha: float, beta: float):
+    v = x_ref[...]
+    def body(_, acc):
+        return acc * alpha + beta
+    v = jax.lax.fori_loop(0, iters, body, v.astype(jnp.float32))
+    o_ref[...] = v.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def ert_fma(x, *, iters: int = 64, alpha: float = 1.000001, beta: float = 0.999999):
+    """Run the FMA chain over a 2-D buffer, blocked over rows.
+
+    FLOPs = 2 * iters * x.size (one FMA per element per iteration).
+    """
+    rows, cols = x.shape
+    br = min(256, rows)
+    pad = -rows % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    y = pl.pallas_call(
+        functools.partial(_ert_kernel, iters=iters, alpha=alpha, beta=beta),
+        grid=((rows + pad) // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=True,
+    )(xp)
+    return y[:rows] if pad else y
+
+
+def ert_flops(shape, iters: int) -> int:
+    """Analytic FLOP count for the manifest."""
+    n = 1
+    for d in shape:
+        n *= d
+    return 2 * iters * n

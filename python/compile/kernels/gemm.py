@@ -1,0 +1,101 @@
+"""Layer-1 Pallas tiled-GEMM kernel — the compute hot-spot of DeepCAM-lite.
+
+This is the TPU re-expression of the paper's tensor-core GEMM study
+(§II-A2): instead of WMMA fragments + shared-memory staging, the kernel
+tiles the output into (block_m, block_n) MXU-friendly blocks via
+``BlockSpec`` (the HBM->VMEM schedule) and lets the MXU-shaped ``jnp.dot``
+with ``preferred_element_type=float32`` express the systolic matmul
+(bf16 inputs are the TPU analog of FP16 tensor-core inputs).
+
+VMEM footprint per grid cell (see DESIGN.md §8):
+    (block_m*K + K*block_n + block_m*block_n) * dtype_bytes
+e.g. 64x1152 + 1152x64 + 64x64 f32 = ~608 KiB << 16 MiB VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs
+from the Rust runtime.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (block_m, block_n) output tile: full-K panel contraction."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _round_up(v: int, to: int) -> int:
+    return -(-v // to) * to
+
+
+def _pad_to(x, rows: int, cols: int):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul_nocustom(x, w, *, block_m: int = 64, block_n: int = 64):
+    """Pallas GEMM without a custom VJP (building block; padded/tiled).
+
+    x: (M, K), w: (K, N) -> (M, N) in float32 accumulation.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"matmul shapes {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    xp = _pad_to(x, mp, k)
+    wp = _pad_to(w, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable Pallas GEMM: ``x @ w`` with fp32 accumulation.
+
+    The backward pass is two more Pallas GEMMs (dx = g w^T, dw = x^T g),
+    so the L1 kernel carries the training hot path end to end.
+    """
+    return matmul_nocustom(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_nocustom(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    g = g.astype(jnp.float32)
+    dx = matmul_nocustom(g, w.T).astype(x.dtype)
+    dw = matmul_nocustom(x.T, g).astype(w.dtype)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_bf16(x, w):
+    """Mixed-precision GEMM: bf16 inputs, fp32 accumulate (the TPU analog
+    of FP16 tensor-core GEMM; used by the AMP-enabled model variants)."""
+    return matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16))

@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth against which pytest (and hypothesis sweeps)
+check the L1 kernels — the build-time equivalent of the paper's concern
+that profiled kernels be deterministic and correct before measurement.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """Reference GEMM with fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x, w, b=None, *, stride: int = 1, dilation: int = 1):
+    """Reference conv (SAME padding) via lax.conv_general_dilated."""
+    kh, kw = w.shape[0], w.shape[1]
+    h, wd = x.shape[1], x.shape[2]
+
+    def same_pads(size, k):
+        out = -(-size // stride)
+        pad = max(0, (out - 1) * stride + (k - 1) * dilation + 1 - size)
+        return pad // 2, pad - pad // 2
+
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=(same_pads(h, kh), same_pads(wd, kw)),
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv2d_transpose_ref(x, w, b=None, *, stride: int = 2):
+    """Reference transposed conv: zero-dilate input, flip kernel, conv."""
+    if stride > 1:
+        n, h, wd, c = x.shape
+        x = lax.pad(
+            x,
+            jnp.zeros((), x.dtype),
+            ((0, 0, 0), (0, stride - 1, stride - 1), (0, stride - 1, stride - 1), (0, 0, 0)),
+        )
+        x = x[:, : h * stride, : wd * stride, :]
+    return conv2d_ref(x, w[::-1, ::-1, :, :], b, stride=1)
+
+
+def batch_norm_relu_ref(x, gamma, beta, *, eps: float = 1e-5):
+    """Reference train-mode batch norm + ReLU over NHWC."""
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    y = (x - mean) * gamma * lax.rsqrt(var + eps) + beta
+    return jnp.maximum(y, 0.0)
+
+
+def scale_shift_relu_ref(x2d, scale, shift):
+    """Reference fused scale-shift-relu over (rows, C)."""
+    return jnp.maximum(x2d * scale + shift, 0.0)
+
+
+def ert_fma_ref(x, iters: int, alpha: float = 1.000001, beta: float = 0.999999):
+    """Reference ERT FMA chain: x <- alpha*x + beta, `iters` times."""
+    def body(_, v):
+        return alpha * v + beta
+    return lax.fori_loop(0, iters, body, x.astype(jnp.float32))

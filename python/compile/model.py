@@ -1,0 +1,285 @@
+"""Layer-2 JAX model: DeepCAM-lite — a DeepLabv3+-style encoder-decoder
+for climate-pattern segmentation (the paper's profiling subject, §III-B),
+built entirely on the Layer-1 Pallas kernels.
+
+Architecture (scaled-down but structurally faithful to DeepCAM):
+  * encoder — conv stem + residual blocks with strided downsampling
+    (ResNet-style, the paper's encoder is ResNet-50);
+  * ASPP — atrous spatial pyramid pooling: parallel 3x3 convs at
+    dilations {1, 2, 4}, a 1x1 branch and an image-level branch, fused
+    by a 1x1 conv;
+  * decoder — nine layers: two transposed-conv upsampling stages with
+    skip connections from the stem and mid-encoder, interleaved with
+    3x3 convs, and a final 1x1 classifier (3 classes: background /
+    tropical cyclone / atmospheric river).
+
+Every conv goes through the Pallas im2col GEMM; every BN+ReLU through
+the fused Pallas scale-shift kernel; their custom VJPs keep the backward
+pass on Pallas GEMMs too. All functions are pure and jit/lower-able —
+`compile/aot.py` exports `forward` and `train_step` to HLO text.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bn, conv, gemm
+
+
+@dataclass(frozen=True)
+class DeepCamConfig:
+    """Model hyper-parameters. `lite()` is the AOT/e2e configuration;
+    `paper()` mirrors DeepCAM's published scale for the Rust-side trace
+    generator (never compiled here — too large for interpret mode)."""
+
+    height: int = 64
+    width: int = 64
+    in_channels: int = 4
+    classes: int = 3
+    stem_channels: int = 16
+    encoder_channels: tuple = (16, 32, 64)
+    blocks_per_stage: int = 1
+    aspp_channels: int = 32
+    decoder_channels: int = 32
+    batch: int = 2
+    amp: bool = False  # bf16 GEMM inputs (the TPU analog of AMP FP16)
+
+    @staticmethod
+    def lite(**kw):
+        return DeepCamConfig(**kw)
+
+    @staticmethod
+    def tiny(**kw):
+        """Unit-test scale."""
+        base = dict(
+            height=16,
+            width=16,
+            stem_channels=4,
+            encoder_channels=(4, 8),
+            aspp_channels=8,
+            decoder_channels=8,
+            batch=1,
+        )
+        base.update(kw)
+        return DeepCamConfig(**base)
+
+
+# --------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+    return w * (2.0 / fan_in) ** 0.5
+
+
+def _bn_init(c):
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+def init_params(cfg: DeepCamConfig, seed: int = 0):
+    """Build the parameter pytree (nested dicts keyed by layer name)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 64))
+    p = {}
+
+    # Stem: 3x3 stride-2.
+    p["stem"] = {
+        "w": _conv_init(next(keys), 3, 3, cfg.in_channels, cfg.stem_channels),
+        "bn": _bn_init(cfg.stem_channels),
+    }
+
+    # Encoder stages: each downsamples 2x then runs residual blocks.
+    cin = cfg.stem_channels
+    p["encoder"] = []
+    for ch in cfg.encoder_channels:
+        stage = {
+            "down": {
+                "w": _conv_init(next(keys), 3, 3, cin, ch),
+                "bn": _bn_init(ch),
+            },
+            "blocks": [],
+        }
+        for _ in range(cfg.blocks_per_stage):
+            stage["blocks"].append(
+                {
+                    "w1": _conv_init(next(keys), 3, 3, ch, ch),
+                    "bn1": _bn_init(ch),
+                    "w2": _conv_init(next(keys), 3, 3, ch, ch),
+                    "bn2": _bn_init(ch),
+                }
+            )
+        p["encoder"].append(stage)
+        cin = ch
+
+    # ASPP: dilations 1/2/4 + 1x1 + image pooling, fused by 1x1.
+    ac = cfg.aspp_channels
+    p["aspp"] = {
+        "b0": {"w": _conv_init(next(keys), 1, 1, cin, ac), "bn": _bn_init(ac)},
+        "b1": {"w": _conv_init(next(keys), 3, 3, cin, ac), "bn": _bn_init(ac)},
+        "b2": {"w": _conv_init(next(keys), 3, 3, cin, ac), "bn": _bn_init(ac)},
+        "b3": {"w": _conv_init(next(keys), 3, 3, cin, ac), "bn": _bn_init(ac)},
+        "pool": {"w": _conv_init(next(keys), 1, 1, cin, ac)},
+        "fuse": {"w": _conv_init(next(keys), 1, 1, 5 * ac, ac), "bn": _bn_init(ac)},
+    }
+
+    # Decoder (nine layers, two skips).
+    dc = cfg.decoder_channels
+    mid_ch = cfg.encoder_channels[0]
+    p["decoder"] = {
+        # layer 1: deconv x2
+        "up1": {"w": _conv_init(next(keys), 3, 3, ac, dc)},
+        # layer 2: fuse skip from encoder stage 0
+        "skip1": {"w": _conv_init(next(keys), 1, 1, dc + mid_ch, dc), "bn": _bn_init(dc)},
+        # layers 3-4: convs
+        "c1": {"w": _conv_init(next(keys), 3, 3, dc, dc), "bn": _bn_init(dc)},
+        "c2": {"w": _conv_init(next(keys), 3, 3, dc, dc), "bn": _bn_init(dc)},
+        # layer 5: deconv x2
+        "up2": {"w": _conv_init(next(keys), 3, 3, dc, dc)},
+        # layer 6: fuse skip from stem
+        "skip2": {"w": _conv_init(next(keys), 1, 1, dc + cfg.stem_channels, dc), "bn": _bn_init(dc)},
+        # layers 7-8: convs
+        "c3": {"w": _conv_init(next(keys), 3, 3, dc, dc), "bn": _bn_init(dc)},
+        "c4": {"w": _conv_init(next(keys), 3, 3, dc, dc), "bn": _bn_init(dc)},
+        # layer 9: the 1x1 per-pixel classifier
+        "cls": {"w": _conv_init(next(keys), 1, 1, dc, cfg.classes)},
+    }
+    return p
+
+
+def n_params(params) -> int:
+    """Total scalar parameter count."""
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------
+
+
+def _maybe_amp(x, cfg: DeepCamConfig):
+    return x.astype(jnp.bfloat16) if cfg.amp else x
+
+
+def _conv_bn_relu(x, layer, cfg, *, stride=1, dilation=1):
+    y = conv.conv2d(_maybe_amp(x, cfg), _maybe_amp(layer["w"], cfg), stride=stride, dilation=dilation)
+    return bn.batch_norm_relu(y, layer["bn"]["gamma"], layer["bn"]["beta"])
+
+
+def _res_block(x, blk, cfg):
+    y = _conv_bn_relu(x, {"w": blk["w1"], "bn": blk["bn1"]}, cfg)
+    y = conv.conv2d(_maybe_amp(y, cfg), _maybe_amp(blk["w2"], cfg))
+    # BN without ReLU before the residual add, ReLU after (ResNet order,
+    # folded: scale-shift then add then relu).
+    g, b = blk["bn2"]["gamma"], blk["bn2"]["beta"]
+    mean = jnp.mean(y, axis=(0, 1, 2))
+    var = jnp.var(y, axis=(0, 1, 2))
+    y = (y - mean) * g * jax.lax.rsqrt(var + 1e-5) + b
+    return jnp.maximum(y + x, 0.0)
+
+
+def forward(params, x, cfg: DeepCamConfig):
+    """DeepCAM-lite forward: (N, H, W, C) -> per-pixel logits
+    (N, H, W, classes)."""
+    # Stem (keeps a full-res skip).
+    stem = _conv_bn_relu(x, params["stem"], cfg, stride=1)
+
+    # Encoder.
+    feats = stem
+    skips = [stem]
+    for stage in params["encoder"]:
+        feats = _conv_bn_relu(feats, stage["down"], cfg, stride=2)
+        for blk in stage["blocks"]:
+            feats = _res_block(feats, blk, cfg)
+        skips.append(feats)
+    mid = skips[1]  # after first stage: the decoder's mid-level skip
+
+    # ASPP.
+    a = params["aspp"]
+    b0 = _conv_bn_relu(feats, a["b0"], cfg)
+    b1 = _conv_bn_relu(feats, a["b1"], cfg, dilation=1)
+    b2 = _conv_bn_relu(feats, a["b2"], cfg, dilation=2)
+    b3 = _conv_bn_relu(feats, a["b3"], cfg, dilation=4)
+    pooled = conv.avg_pool_global(feats)
+    pooled = conv.conv2d(_maybe_amp(pooled, cfg), _maybe_amp(a["pool"]["w"], cfg))
+    pooled = jnp.broadcast_to(pooled, b0.shape)
+    y = jnp.concatenate([b0, b1, b2, b3, pooled], axis=-1)
+    y = _conv_bn_relu(y, a["fuse"], cfg)
+
+    # Decoder: 9 layers, 2 skips, 3 upsampling stages (total 2^3 = the
+    # encoder's downsampling factor: stem(1) * stages(2^n)).
+    d = params["decoder"]
+    y = conv.conv2d_transpose(_maybe_amp(y, cfg), _maybe_amp(d["up1"]["w"], cfg), stride=2)
+    if y.shape[1] != mid.shape[1]:
+        # Resize by nearest-neighbour to the skip resolution (covers
+        # encoder depths > 2).
+        fy = mid.shape[1] // y.shape[1]
+        y = jnp.repeat(jnp.repeat(y, fy, axis=1), fy, axis=2)
+    y = jnp.concatenate([y, mid], axis=-1)
+    y = _conv_bn_relu(y, d["skip1"], cfg)
+    y = _conv_bn_relu(y, d["c1"], cfg)
+    y = _conv_bn_relu(y, d["c2"], cfg)
+    y = conv.conv2d_transpose(_maybe_amp(y, cfg), _maybe_amp(d["up2"]["w"], cfg), stride=2)
+    if y.shape[1] != stem.shape[1]:
+        fy = stem.shape[1] // y.shape[1]
+        y = jnp.repeat(jnp.repeat(y, fy, axis=1), fy, axis=2)
+    y = jnp.concatenate([y, stem], axis=-1)
+    y = _conv_bn_relu(y, d["skip2"], cfg)
+    y = _conv_bn_relu(y, d["c3"], cfg)
+    y = _conv_bn_relu(y, d["c4"], cfg)
+    logits = conv.conv2d(_maybe_amp(y, cfg), _maybe_amp(d["cls"]["w"], cfg))
+    return logits.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------
+# Loss + training step
+# --------------------------------------------------------------------
+
+
+def loss_fn(params, x, labels, cfg: DeepCamConfig):
+    """Class-weighted softmax cross-entropy over pixels (climate events
+    are rare: background dominates, as in DeepCAM)."""
+    logits = forward(params, x, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.classes, dtype=jnp.float32)
+    weights = jnp.asarray([0.2, 1.0, 1.0][: cfg.classes], jnp.float32)
+    pixel_w = jnp.take(weights, labels)
+    ce = -(onehot * logp).sum(-1)
+    return (ce * pixel_w).mean()
+
+
+def sgd_momentum_step(params, momentum, grads, lr=0.02, mu=0.9):
+    """The PyTorch-DeepCAM 'optimizer' step (the memory-bound streaming
+    phase of Fig. 7): v <- mu v + g ; p <- p - lr v."""
+    new_m = jax.tree_util.tree_map(lambda m, g: mu * m + g, momentum, grads)
+    new_p = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, new_m
+
+
+def train_step(params, momentum, x, labels, cfg: DeepCamConfig):
+    """One full training step: fwd + bwd + update. Returns
+    (new_params, new_momentum, loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, labels, cfg)
+    new_p, new_m = sgd_momentum_step(params, momentum, grads)
+    return new_p, new_m, loss
+
+
+def zero_momentum(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def synthetic_batch(cfg: DeepCamConfig, seed: int = 0):
+    """Synthetic climate tiles: smooth random fields (data values never
+    matter to the paper's analysis; shapes/dtypes do)."""
+    key = jax.random.PRNGKey(seed)
+    kx, kl = jax.random.split(key)
+    x = jax.random.normal(kx, (cfg.batch, cfg.height, cfg.width, cfg.in_channels), jnp.float32)
+    # Smooth with a cheap box blur to get weather-ish structure.
+    x = (x + jnp.roll(x, 1, 1) + jnp.roll(x, 1, 2) + jnp.roll(x, -1, 1) + jnp.roll(x, -1, 2)) / 5.0
+    labels = (jax.random.uniform(kl, (cfg.batch, cfg.height, cfg.width)) * cfg.classes).astype(
+        jnp.int32
+    )
+    return x, labels

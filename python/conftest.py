@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root by putting the
+python/ package directory (which holds `compile/`) on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

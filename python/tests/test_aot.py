@@ -1,0 +1,76 @@
+"""AOT pipeline tests: manifest structure, HLO text sanity, ERT kernel."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ert, ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestErtKernel:
+    def test_matches_reference(self):
+        x = jnp.linspace(0.0, 1.0, 64 * 8).reshape(64, 8).astype(jnp.float32)
+        got = ert.ert_fma(x, iters=16)
+        want = ref.ert_fma_ref(x, 16)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_flop_accounting(self):
+        assert ert.ert_flops((64, 8), 16) == 2 * 16 * 64 * 8
+
+    @settings(max_examples=10, deadline=None)
+    @given(rows=st.integers(1, 300), iters=st.sampled_from([1, 4, 32]))
+    def test_property_sweep(self, rows, iters):
+        x = jnp.ones((rows, 4), jnp.float32) * 0.5
+        got = ert.ert_fma(x, iters=iters)
+        want = ref.ert_fma_ref(x, iters)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_modules_present(self, manifest):
+        mods = set(manifest["modules"])
+        assert {"forward", "train_step", "gemm_128", "gemm_256", "ert_fma"} <= mods
+
+    def test_hlo_files_exist_and_are_text(self, manifest):
+        for name, entry in manifest["modules"].items():
+            path = os.path.join(ARTIFACTS, entry["hlo_file"])
+            assert os.path.exists(path), name
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{name}: not HLO text"
+
+    def test_train_step_io_arity(self, manifest):
+        ts = manifest["modules"]["train_step"]
+        n_p = manifest["config"]["n_param_tensors"]
+        # inputs: params + momentum + x + labels
+        assert len(ts["inputs"]) == 2 * n_p + 2
+        # outputs: params + momentum + loss
+        assert len(ts["outputs"]) == 2 * n_p + 1
+        assert ts["outputs"][-1]["dims"] == []
+
+    def test_input_shapes_match_config(self, manifest):
+        cfg = manifest["config"]
+        fwd = manifest["modules"]["forward"]
+        x_spec = fwd["inputs"][-1]
+        assert x_spec["dims"] == [cfg["batch"], cfg["height"], cfg["width"], cfg["in_channels"]]
+
+    def test_gemm_flops_meta(self, manifest):
+        g = manifest["modules"]["gemm_128"]
+        assert int(g["meta"]["flops_analytic"]) == 2 * 128**3

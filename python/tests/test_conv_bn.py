@@ -1,0 +1,120 @@
+"""Conv (im2col + Pallas GEMM), transposed conv, and fused BN+ReLU vs
+their jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bn, conv, ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestConv2d:
+    @pytest.mark.parametrize("stride", [1, 2])
+    @pytest.mark.parametrize("k", [1, 3])
+    def test_stride_kernel_grid(self, stride, k):
+        x = rand(0, (2, 11, 13, 3))
+        w = rand(1, (k, k, 3, 5))
+        got = conv.conv2d(x, w, stride=stride)
+        want = ref.conv2d_ref(x, w, stride=stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dilation", [1, 2, 4])
+    def test_dilation_atrous(self, dilation):
+        # The ASPP branches: dilated 3x3 convs.
+        x = rand(0, (1, 16, 16, 4))
+        w = rand(1, (3, 3, 4, 6))
+        got = conv.conv2d(x, w, dilation=dilation)
+        want = ref.conv2d_ref(x, w, dilation=dilation)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_bias(self):
+        x = rand(0, (1, 6, 6, 2))
+        w = rand(1, (3, 3, 2, 4))
+        b = rand(2, (4,))
+        np.testing.assert_allclose(
+            conv.conv2d(x, w, b), ref.conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_channel_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            conv.conv2d(rand(0, (1, 4, 4, 3)), rand(1, (3, 3, 5, 2)))
+
+    def test_grad_matches_reference(self):
+        x = rand(0, (1, 8, 8, 3))
+        w = rand(1, (3, 3, 3, 4))
+
+        gp = jax.grad(lambda w: jnp.sum(conv.conv2d(x, w) ** 2))(w)
+        gr = jax.grad(lambda w: jnp.sum(ref.conv2d_ref(x, w) ** 2))(w)
+        np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-3)
+
+
+class TestConvTranspose:
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_upsampling(self, stride):
+        x = rand(0, (1, 5, 5, 4))
+        w = rand(1, (3, 3, 4, 2))
+        got = conv.conv2d_transpose(x, w, stride=stride)
+        want = ref.conv2d_transpose_ref(x, w, stride=stride)
+        assert got.shape[1] == 5 * stride
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestBatchNormRelu:
+    def test_matches_reference(self):
+        x = rand(0, (2, 8, 8, 5))
+        gamma, beta = rand(1, (5,)) * 0.1 + 1.0, rand(2, (5,)) * 0.1
+        np.testing.assert_allclose(
+            bn.batch_norm_relu(x, gamma, beta),
+            ref.batch_norm_relu_ref(x, gamma, beta),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_output_nonnegative(self):
+        x = rand(0, (1, 4, 4, 3))
+        y = bn.batch_norm_relu(x, jnp.ones((3,)), jnp.zeros((3,)))
+        assert float(y.min()) >= 0.0
+
+    def test_grad_finite_and_matches(self):
+        x = rand(0, (1, 6, 6, 4))
+        gamma, beta = jnp.ones((4,)), jnp.zeros((4,))
+
+        gp = jax.grad(lambda x: jnp.sum(bn.batch_norm_relu(x, gamma, beta) ** 2))(x)
+        gr = jax.grad(lambda x: jnp.sum(ref.batch_norm_relu_ref(x, gamma, beta) ** 2))(x)
+        np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-3)
+
+    def test_scale_shift_relu_kernel_direct(self):
+        x2d = rand(0, (100, 7))
+        scale = rand(1, (1, 7))
+        shift = rand(2, (1, 7))
+        np.testing.assert_allclose(
+            bn.scale_shift_relu(x2d, scale, shift),
+            ref.scale_shift_relu_ref(x2d, scale, shift),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    w=st.integers(4, 20),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv_property_sweep(h, w, cin, cout, stride):
+    x = rand(h * 31 + w, (1, h, w, cin))
+    wt = rand(cin * 7 + cout, (3, 3, cin, cout))
+    np.testing.assert_allclose(
+        conv.conv2d(x, wt, stride=stride),
+        ref.conv2d_ref(x, wt, stride=stride),
+        rtol=1e-3,
+        atol=1e-3,
+    )

@@ -1,0 +1,107 @@
+"""Pallas GEMM kernel vs the pure-jnp oracle — the core L1 correctness
+signal, swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+class TestMatmulBasic:
+    def test_square(self):
+        x, w = rand(0, (64, 64)), rand(1, (64, 64))
+        np.testing.assert_allclose(gemm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_rectangular(self):
+        x, w = rand(0, (37, 19)), rand(1, (19, 53))
+        np.testing.assert_allclose(gemm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_non_tile_aligned(self):
+        # Shapes that force padding in every dimension.
+        x, w = rand(0, (65, 77)), rand(1, (77, 129))
+        np.testing.assert_allclose(gemm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_vector_edge(self):
+        x, w = rand(0, (1, 8)), rand(1, (8, 1))
+        np.testing.assert_allclose(gemm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            gemm.matmul_nocustom(jnp.ones((4, 5)), jnp.ones((6, 4)))
+
+    def test_block_sizes_dont_change_result(self):
+        # Different BlockSpec tilings change XLA fusion shapes and hence
+        # float summation micro-order; results agree to normal f32 slack.
+        x, w = rand(0, (100, 60)), rand(1, (60, 90))
+        a = gemm.matmul_nocustom(x, w, block_m=32, block_n=32)
+        b = gemm.matmul_nocustom(x, w, block_m=64, block_n=128)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+class TestMatmulGrad:
+    def test_custom_vjp_matches_jnp_grad(self):
+        x, w = rand(0, (24, 16)), rand(1, (16, 8))
+
+        def loss_pallas(x, w):
+            return jnp.sum(gemm.matmul(x, w) ** 2)
+
+        def loss_ref(x, w):
+            return jnp.sum(ref.matmul_ref(x, w) ** 2)
+
+        gx_p, gw_p = jax.grad(loss_pallas, argnums=(0, 1))(x, w)
+        gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+    def test_grad_through_chain(self):
+        x = rand(0, (8, 8))
+        w1, w2 = rand(1, (8, 8)), rand(2, (8, 8))
+
+        def f(w1, w2):
+            return jnp.mean(gemm.matmul(gemm.matmul(x, w1), w2))
+
+        g1, g2 = jax.grad(f, argnums=(0, 1))(w1, w2)
+        assert np.all(np.isfinite(g1)) and np.all(np.isfinite(g2))
+
+
+class TestMatmulBf16:
+    def test_bf16_close_to_f32(self):
+        x, w = rand(0, (32, 32)), rand(1, (32, 32))
+        y16 = gemm.matmul_bf16(x, w)
+        y32 = ref.matmul_ref(x, w)
+        assert y16.dtype == jnp.float32  # fp32 accumulate
+        np.testing.assert_allclose(y16, y32, rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_property_sweep(m, k, n, seed):
+    """Hypothesis sweep: arbitrary small shapes match the oracle."""
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        gemm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]), m=st.integers(8, 40))
+def test_matmul_dtype_sweep(dtype, m):
+    x = rand(0, (m, m)).astype(dtype)
+    w = rand(1, (m, m)).astype(dtype)
+    out = gemm.matmul(x, w)
+    expect = ref.matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol)

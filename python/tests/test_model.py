@@ -1,0 +1,102 @@
+"""DeepCAM-lite model tests: shapes, loss behaviour, gradient flow, AMP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model.DeepCamConfig.tiny()
+    params = model.init_params(cfg, seed=0)
+    x, labels = model.synthetic_batch(cfg, seed=0)
+    return cfg, params, x, labels
+
+
+class TestForward:
+    def test_logits_shape(self, tiny):
+        cfg, params, x, _ = tiny
+        logits = model.forward(params, x, cfg)
+        assert logits.shape == (cfg.batch, cfg.height, cfg.width, cfg.classes)
+        assert logits.dtype == jnp.float32
+
+    def test_forward_finite(self, tiny):
+        cfg, params, x, _ = tiny
+        assert bool(jnp.all(jnp.isfinite(model.forward(params, x, cfg))))
+
+    def test_deterministic(self, tiny):
+        cfg, params, x, _ = tiny
+        a = model.forward(params, x, cfg)
+        b = model.forward(params, x, cfg)
+        np.testing.assert_array_equal(a, b)
+
+    def test_amp_variant_close(self, tiny):
+        cfg, params, x, _ = tiny
+        import dataclasses
+        amp_cfg = dataclasses.replace(cfg, amp=True)
+        y32 = model.forward(params, x, cfg)
+        y16 = model.forward(params, x, amp_cfg)
+        # bf16 mantissa: loose agreement.
+        np.testing.assert_allclose(y16, y32, rtol=0.15, atol=0.15)
+
+
+class TestTraining:
+    def test_loss_positive_scalar(self, tiny):
+        cfg, params, x, labels = tiny
+        loss = model.loss_fn(params, x, labels, cfg)
+        assert loss.shape == ()
+        assert float(loss) > 0.0
+
+    def test_loss_decreases_over_steps(self, tiny):
+        cfg, params, x, labels = tiny
+        m = model.zero_momentum(params)
+        losses = []
+        p = params
+        for _ in range(5):
+            p, m, loss = model.train_step(p, m, x, labels, cfg)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+    def test_grads_nonzero_everywhere(self, tiny):
+        cfg, params, x, labels = tiny
+        grads = jax.grad(model.loss_fn)(params, x, labels, cfg)
+        flat, _ = jax.tree_util.tree_flatten(grads)
+        n_zero = sum(int(jnp.all(g == 0)) for g in flat)
+        # Every parameter tensor should receive gradient signal.
+        assert n_zero == 0, f"{n_zero}/{len(flat)} grads identically zero"
+
+    def test_momentum_accumulates(self, tiny):
+        cfg, params, x, labels = tiny
+        m = model.zero_momentum(params)
+        _, m1, _ = model.train_step(params, m, x, labels, cfg)
+        flat, _ = jax.tree_util.tree_flatten(m1)
+        assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+class TestParams:
+    def test_param_count_scales_with_channels(self):
+        small = model.init_params(model.DeepCamConfig.tiny(), 0)
+        big = model.init_params(
+            model.DeepCamConfig.tiny(stem_channels=8, encoder_channels=(8, 16)), 0
+        )
+        assert model.n_params(big) > model.n_params(small)
+
+    def test_init_deterministic_by_seed(self):
+        cfg = model.DeepCamConfig.tiny()
+        a = model.init_params(cfg, seed=3)
+        b = model.init_params(cfg, seed=3)
+        fa, _ = jax.tree_util.tree_flatten(a)
+        fb, _ = jax.tree_util.tree_flatten(b)
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(x, y)
+
+    def test_synthetic_batch_shapes(self):
+        cfg = model.DeepCamConfig.tiny()
+        x, labels = model.synthetic_batch(cfg, 0)
+        assert x.shape == (cfg.batch, cfg.height, cfg.width, cfg.in_channels)
+        assert labels.shape == (cfg.batch, cfg.height, cfg.width)
+        assert labels.dtype == jnp.int32
+        assert int(labels.max()) < cfg.classes

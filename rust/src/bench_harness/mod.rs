@@ -1,0 +1,176 @@
+//! Benchmark harness substrate (no `criterion` offline). Benches are
+//! `harness = false` binaries that build a [`Bench`] set, register
+//! closures, and call [`Bench::run`], which prints criterion-style
+//! lines:
+//!
+//! ```text
+//! fig3_tf_forward/profile   time: [1.234 ms 1.250 ms 1.271 ms]  n=50
+//! ```
+//!
+//! Timings are wall-clock medians over warmup + measured iterations;
+//! a machine-readable JSON blob is appended to `out/bench/<name>.json`
+//! so the §Perf iteration log in EXPERIMENTS.md can diff runs.
+
+use crate::util::{fmt, Json, Summary};
+use std::time::Instant;
+
+/// One registered benchmark case.
+struct Case {
+    name: String,
+    f: Box<dyn FnMut() -> u64>, // returns a "work units" count for throughput lines (0 = none)
+}
+
+/// A named group of benchmark cases with shared iteration policy.
+pub struct Bench {
+    group: String,
+    warmup_iters: u32,
+    iters: u32,
+    cases: Vec<Case>,
+}
+
+/// Result of one case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub secs: Summary,
+    pub work_units: u64,
+}
+
+impl Bench {
+    /// New bench group. Iteration counts can be overridden by the env
+    /// vars `HROOFLINE_BENCH_ITERS` / `HROOFLINE_BENCH_WARMUP` (used by
+    /// `make bench` smoke configs).
+    pub fn new(group: &str) -> Bench {
+        let iters = env_u32("HROOFLINE_BENCH_ITERS", 30);
+        let warmup_iters = env_u32("HROOFLINE_BENCH_WARMUP", 3);
+        Bench {
+            group: group.to_string(),
+            warmup_iters,
+            iters,
+            cases: Vec::new(),
+        }
+    }
+
+    /// Override the per-case measured iteration count.
+    pub fn iters(mut self, n: u32) -> Bench {
+        self.iters = env_u32("HROOFLINE_BENCH_ITERS", n);
+        self
+    }
+
+    /// Register a case. The closure runs once per iteration; its return
+    /// value is a work-unit count (e.g. kernels profiled) for throughput
+    /// reporting — return 0 if not meaningful.
+    pub fn case(&mut self, name: &str, f: impl FnMut() -> u64 + 'static) -> &mut Bench {
+        self.cases.push(Case {
+            name: name.to_string(),
+            f: Box::new(f),
+        });
+        self
+    }
+
+    /// Run all cases, print report lines, persist JSON, return results.
+    pub fn run(&mut self) -> Vec<CaseResult> {
+        println!("== bench group: {} (iters={}) ==", self.group, self.iters);
+        let mut results = Vec::new();
+        for case in &mut self.cases {
+            for _ in 0..self.warmup_iters {
+                let _ = (case.f)();
+            }
+            let mut times = Vec::with_capacity(self.iters as usize);
+            let mut work = 0u64;
+            for _ in 0..self.iters {
+                let t0 = Instant::now();
+                work = (case.f)();
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let secs = Summary::of(&times);
+            let mut line = format!(
+                "{}/{:<28} time: [{} {} {}]  n={}",
+                self.group,
+                case.name,
+                fmt::duration(secs.p05),
+                fmt::duration(secs.median),
+                fmt::duration(secs.p95),
+                secs.n,
+            );
+            if work > 0 {
+                let rate = work as f64 / secs.median;
+                line.push_str(&format!("  thrpt: {}", fmt::si(rate, "elem/s")));
+            }
+            println!("{line}");
+            results.push(CaseResult {
+                name: case.name.clone(),
+                secs,
+                work_units: work,
+            });
+        }
+        self.persist(&results);
+        results
+    }
+
+    fn persist(&self, results: &[CaseResult]) {
+        let doc = Json::obj(vec![
+            ("group", Json::str(&self.group)),
+            ("iters", Json::num(self.iters as f64)),
+            (
+                "cases",
+                Json::arr(results.iter().map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(&r.name)),
+                        ("median_s", Json::num(r.secs.median)),
+                        ("mean_s", Json::num(r.secs.mean)),
+                        ("p05_s", Json::num(r.secs.p05)),
+                        ("p95_s", Json::num(r.secs.p95)),
+                        ("work_units", Json::num(r.work_units as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        let dir = std::path::Path::new("out/bench");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.json", self.group));
+            let _ = std::fs::write(path, doc.to_string_pretty());
+        }
+    }
+}
+
+fn env_u32(name: &str, default: u32) -> u32 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Prevent the optimizer from discarding a computed value (stable-Rust
+/// black_box replacement good enough for our coarse-grained benches).
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66; use it directly.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("HROOFLINE_BENCH_ITERS", "5");
+        std::env::set_var("HROOFLINE_BENCH_WARMUP", "1");
+        let mut b = Bench::new("selftest");
+        b.case("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+            1000
+        });
+        let results = b.run();
+        std::env::remove_var("HROOFLINE_BENCH_ITERS");
+        std::env::remove_var("HROOFLINE_BENCH_WARMUP");
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].secs.n, 5);
+        assert!(results[0].secs.median >= 0.0);
+        assert_eq!(results[0].work_units, 1000);
+    }
+}

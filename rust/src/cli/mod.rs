@@ -1,0 +1,310 @@
+//! Declarative command-line parsing substrate (the offline vendor set has
+//! no `clap`). Supports subcommands, `--flag value`, `--flag=value`,
+//! boolean switches, defaults, and auto-generated `--help`.
+//!
+//! ```
+//! use hroofline::cli::{Cmd, Parsed};
+//! let cmd = Cmd::new("ert", "Run machine characterization")
+//!     .flag("mode", "modeled", "empirical|modeled|both")
+//!     .switch("quick", "Reduced sweep for smoke runs");
+//! let parsed = cmd.parse(&["--mode".into(), "both".into(), "--quick".into()]).unwrap();
+//! assert_eq!(parsed.get("mode"), "both");
+//! assert!(parsed.has("quick"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// A flag specification.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    default: Option<String>,
+    help: String,
+    is_switch: bool,
+}
+
+/// A (sub)command specification.
+#[derive(Clone, Debug)]
+pub struct Cmd {
+    pub name: String,
+    pub about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parse result: resolved flag values.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+/// CLI parse error with a user-facing message.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Cmd {
+    pub fn new(name: &str, about: &str) -> Cmd {
+        Cmd {
+            name: name.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+        }
+    }
+
+    /// Value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Cmd {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            default: Some(default.to_string()),
+            help: help.to_string(),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Required value flag (no default).
+    pub fn flag_required(mut self, name: &str, help: &str) -> Cmd {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Boolean switch (present/absent).
+    pub fn switch(mut self, name: &str, help: &str) -> Cmd {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_switch: true,
+        });
+        self
+    }
+
+    /// Render usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let head = if f.is_switch {
+                format!("  --{}", f.name)
+            } else if let Some(d) = &f.default {
+                format!("  --{} <value>  (default: {})", f.name, d)
+            } else {
+                format!("  --{} <value>  (required)", f.name)
+            };
+            out.push_str(&format!("{head}\n        {}\n", f.help));
+        }
+        out.push_str("  --help\n        Show this message\n");
+        out
+    }
+
+    /// Parse an argument list (without the subcommand name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        for f in &self.flags {
+            if f.is_switch {
+                switches.insert(f.name.clone(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            let Some(body) = arg.strip_prefix("--") else {
+                return Err(CliError(format!(
+                    "unexpected positional argument '{arg}' (try --help)"
+                )));
+            };
+            let (name, inline_value) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let Some(spec) = self.flags.iter().find(|f| f.name == name) else {
+                return Err(CliError(format!("unknown flag '--{name}' (try --help)")));
+            };
+            if spec.is_switch {
+                if inline_value.is_some() {
+                    return Err(CliError(format!("switch '--{name}' takes no value")));
+                }
+                switches.insert(name.to_string(), true);
+                i += 1;
+            } else {
+                let value = match inline_value {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("flag '--{name}' needs a value")))?
+                    }
+                };
+                values.insert(name.to_string(), value);
+                i += 1;
+            }
+        }
+
+        // Check required flags.
+        for f in &self.flags {
+            if !f.is_switch && f.default.is_none() && !values.contains_key(&f.name) {
+                return Err(CliError(format!("missing required flag '--{}'", f.name)));
+            }
+        }
+        Ok(Parsed { values, switches })
+    }
+}
+
+impl Parsed {
+    /// Get a value flag (panics if the flag was not declared — programmer
+    /// error, not user error).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag '{name}' not declared"))
+    }
+
+    /// Parse a flag value into any FromStr type.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("flag '--{name}': cannot parse '{}'", self.get(name))))
+    }
+
+    /// Whether a switch was passed.
+    pub fn has(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch '{name}' not declared"))
+    }
+}
+
+/// A multi-command application: dispatches `argv[1]` to a subcommand.
+pub struct App {
+    pub name: String,
+    pub about: String,
+    pub commands: Vec<Cmd>,
+}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> App {
+        App {
+            name: name.to_string(),
+            about: about.to_string(),
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, cmd: Cmd) -> App {
+        self.commands.push(cmd);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nCommands:\n", self.name, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun '<command> --help' for command flags.\n");
+        out
+    }
+
+    /// Resolve argv into (command name, parsed flags).
+    pub fn dispatch(&self, argv: &[String]) -> Result<(String, Parsed), CliError> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(CliError(self.usage()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError(self.usage()));
+        }
+        let Some(cmd) = self.commands.iter().find(|c| &c.name == cmd_name) else {
+            return Err(CliError(format!(
+                "unknown command '{cmd_name}'\n\n{}",
+                self.usage()
+            )));
+        };
+        let parsed = cmd.parse(&argv[1..])?;
+        Ok((cmd.name.clone(), parsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cmd = Cmd::new("x", "t").flag("mode", "modeled", "h").switch("quick", "h");
+        let p = cmd.parse(&argv(&[])).unwrap();
+        assert_eq!(p.get("mode"), "modeled");
+        assert!(!p.has("quick"));
+        let p = cmd.parse(&argv(&["--mode=empirical", "--quick"])).unwrap();
+        assert_eq!(p.get("mode"), "empirical");
+        assert!(p.has("quick"));
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let cmd = Cmd::new("x", "t").flag("steps", "100", "h");
+        let p = cmd.parse(&argv(&["--steps", "250"])).unwrap();
+        assert_eq!(p.get_as::<usize>("steps").unwrap(), 250);
+    }
+
+    #[test]
+    fn required_flag_enforced() {
+        let cmd = Cmd::new("x", "t").flag_required("out", "h");
+        assert!(cmd.parse(&argv(&[])).is_err());
+        assert!(cmd.parse(&argv(&["--out", "/tmp"])).is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let cmd = Cmd::new("x", "t");
+        let err = cmd.parse(&argv(&["--bogus"])).unwrap_err();
+        assert!(err.0.contains("unknown flag"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let cmd = Cmd::new("x", "t").flag("mode", "a", "h");
+        assert!(cmd.parse(&argv(&["--mode"])).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        let cmd = Cmd::new("x", "t").switch("quick", "h");
+        assert!(cmd.parse(&argv(&["--quick=1"])).is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App::new("repro", "t")
+            .command(Cmd::new("ert", "a").flag("mode", "modeled", "h"))
+            .command(Cmd::new("report", "b"));
+        let (name, p) = app.dispatch(&argv(&["ert", "--mode", "both"])).unwrap();
+        assert_eq!(name, "ert");
+        assert_eq!(p.get("mode"), "both");
+        assert!(app.dispatch(&argv(&["nope"])).is_err());
+        assert!(app.dispatch(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn get_as_parse_error() {
+        let cmd = Cmd::new("x", "t").flag("steps", "abc", "h");
+        let p = cmd.parse(&argv(&[])).unwrap();
+        assert!(p.get_as::<usize>("steps").is_err());
+    }
+}

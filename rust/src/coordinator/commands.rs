@@ -1,0 +1,278 @@
+//! CLI command implementations (dispatched from `main.rs`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cli::Parsed;
+use crate::device::{GpuSpec, MemLevel};
+use crate::dl::deepcam::{deepcam, DeepCamConfig};
+use crate::dl::lower::{lower, Framework, Phase};
+use crate::dl::Policy;
+use crate::ert::sweep::SweepConfig;
+use crate::ert::{empirical, modeled};
+use crate::profiler::{MetricRegistry, Session};
+use crate::roofline::chart::RooflineChart;
+use crate::roofline::model::RooflineModel;
+use crate::util::{fmt, Json, Table};
+
+/// `repro ert` — machine characterization.
+pub fn cmd_ert(p: &Parsed) -> Result<()> {
+    let out_dir = p.get("out").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+    let config = if p.has("quick") {
+        SweepConfig::quick()
+    } else {
+        SweepConfig::standard()
+    };
+    let mode = p.get("mode");
+
+    if mode == "modeled" || mode == "both" {
+        let spec = GpuSpec::v100();
+        let ceilings = modeled::characterize(&spec, &config);
+        let mut t = Table::new(&["ceiling", "value"]);
+        for (label, gf) in &ceilings.compute_gflops {
+            t.row(&[label.clone(), fmt::si_flops(gf * 1e9)]);
+        }
+        for (level, gb) in &ceilings.bandwidth_gbs {
+            t.row(&[format!("{} bandwidth", level.name()), fmt::si(gb * 1e9, "B/s")]);
+        }
+        println!("== modeled V100 (Fig. 1) ==\n{}", t.render());
+        let artifact = crate::report::fig1::generate()?;
+        artifact.write_to(Path::new(&out_dir))?;
+        println!("wrote {out_dir}/fig1.{{txt,json,svg}}");
+    }
+
+    if mode == "empirical" || mode == "both" {
+        println!("== empirical host CPU sweep (this machine) ==");
+        for result in empirical::characterize(&config) {
+            let peak = result.peak_gflops();
+            println!(
+                "{}: compute {}  L1 {}  L2 {}  DRAM {}",
+                result.label,
+                fmt::si_flops(peak * 1e9),
+                fmt::si(result.peak_bandwidth(MemLevel::L1) * 1e9, "B/s"),
+                fmt::si(result.peak_bandwidth(MemLevel::L2) * 1e9, "B/s"),
+                fmt::si(result.peak_bandwidth(MemLevel::Hbm) * 1e9, "B/s"),
+            );
+            let doc = Json::obj(vec![
+                ("label", Json::str(&result.label)),
+                ("peak_gflops", Json::num(peak)),
+                (
+                    "points",
+                    Json::arr(result.points.iter().map(|pt| {
+                        Json::obj(vec![
+                            ("ws", Json::num(pt.working_set_bytes as f64)),
+                            ("fpe", Json::num(pt.flops_per_elem as f64)),
+                            ("gflops", Json::num(pt.gflops)),
+                            ("gbytes", Json::num(pt.gbytes)),
+                        ])
+                    })),
+                ),
+            ]);
+            std::fs::write(
+                Path::new(&out_dir).join(format!("empirical_{}.json", result.label)),
+                doc.to_string_pretty(),
+            )?;
+        }
+        println!("wrote {out_dir}/empirical_*.json");
+    }
+    Ok(())
+}
+
+/// `repro metrics` — the Table II registry.
+pub fn cmd_metrics(_p: &Parsed) -> Result<()> {
+    let reg = MetricRegistry::standard();
+    let mut t = Table::new(&["metric", "unit", "counter", "rollup"]);
+    for name in reg.all() {
+        let m = crate::profiler::Metric::parse(name)?;
+        t.row(&[m.raw.clone(), m.unit.clone(), m.counter.clone(), m.rollup.clone()]);
+    }
+    println!("Nsight-analog metric registry (paper Table II):\n{}", t.render());
+    Ok(())
+}
+
+/// `repro profile` — application characterization.
+pub fn cmd_profile(p: &Parsed) -> Result<()> {
+    let fw = Framework::parse(p.get("framework"))
+        .with_context(|| format!("bad framework '{}'", p.get("framework")))?;
+    let policy = Policy::parse(p.get("amp"))
+        .with_context(|| format!("bad AMP policy '{}'", p.get("amp")))?;
+    let cfg = match p.get("scale") {
+        "paper" => DeepCamConfig::paper(),
+        "lite" => DeepCamConfig::lite(),
+        other => anyhow::bail!("bad scale '{other}'"),
+    };
+    let out_dir = p.get("out").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&cfg);
+    let trace = lower(&graph, fw, policy);
+    let phases: Vec<(Phase, &str)> = match p.get("phase") {
+        "forward" => vec![(Phase::Forward, "forward")],
+        "backward" => vec![(Phase::Backward, "backward")],
+        "optimizer" => vec![(Phase::Optimizer, "optimizer")],
+        "all" => vec![
+            (Phase::Forward, "forward"),
+            (Phase::Backward, "backward"),
+            (Phase::Optimizer, "optimizer"),
+        ],
+        other => anyhow::bail!("bad phase '{other}'"),
+    };
+
+    for (phase, label) in phases {
+        let kernel_trace = trace.phase(phase);
+        if kernel_trace.is_empty() {
+            println!("[{label}] no kernels (TF folds the optimizer into backward)");
+            continue;
+        }
+        let profile = Session::standard(&spec).profile(kernel_trace);
+        let model = RooflineModel::from_profile(&spec, &profile);
+        let title = format!("{} DeepCAM {label} ({})", fw.name(), policy.name());
+        let chart = RooflineChart::hierarchical(&model, &title);
+        println!(
+            "== {title} ==\ntotal {} | kernels {} | invocations {} | profiler overhead {}\n{}",
+            fmt::duration(profile.total_seconds()),
+            profile.n_kernels(),
+            profile.total_invocations(),
+            fmt::duration(profile.profiling_overhead_s),
+            chart.to_table().render()
+        );
+        let svg_path = Path::new(&out_dir).join(format!("{}_{label}.svg", fw.name()));
+        std::fs::write(&svg_path, chart.to_svg())?;
+        println!("wrote {}", svg_path.display());
+    }
+    Ok(())
+}
+
+/// `repro report` — regenerate paper artifacts.
+pub fn cmd_report(p: &Parsed) -> Result<()> {
+    let out_dir = p.get("out").to_string();
+    let only = p.get("only");
+    let ids: Vec<&str> = if only == "all" {
+        crate::report::ALL_IDS.to_vec()
+    } else {
+        vec![only]
+    };
+    for id in ids {
+        let artifact = crate::report::generate(id)?;
+        artifact.write_to(Path::new(&out_dir))?;
+        println!("== {} — {} ==\n{}", artifact.id, artifact.title, artifact.text);
+    }
+    println!("artifacts under {out_dir}/");
+    Ok(())
+}
+
+/// `repro train` — end-to-end PJRT training with loss logging + a CPU
+/// roofline placement of the measured run.
+pub fn cmd_train(p: &Parsed) -> Result<()> {
+    let cfg = crate::coordinator::train::TrainConfig {
+        steps: p.get_as::<usize>("steps").map_err(|e| anyhow::anyhow!(e.0))?,
+        artifacts_dir: p.get("artifacts").to_string(),
+        log_every: p.get_as::<usize>("log-every").map_err(|e| anyhow::anyhow!(e.0))?,
+        seed: 7,
+    };
+    let out_dir = p.get("out").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+
+    println!("training DeepCAM-lite for {} steps via PJRT ...", cfg.steps);
+    let result = crate::coordinator::train::run_training(&cfg, |step, loss, dt| {
+        println!("step {step:>5}  loss {loss:.5}  ({})", fmt::duration(dt));
+    })?;
+    println!(
+        "final loss {:.5} (from {:.5}); median step {}",
+        result.final_loss(),
+        result.losses[0],
+        fmt::duration(result.step_seconds.median)
+    );
+    if let Some(fps) = result.attained_flops_per_sec() {
+        // Place the measured run on the empirical host roofline.
+        let host = empirical::characterize(&SweepConfig::quick());
+        let fp32_peak = host
+            .iter()
+            .find(|r| r.label == "FP32")
+            .map(|r| r.peak_gflops() * 1e9)
+            .unwrap_or(0.0);
+        println!(
+            "attained {} ({}% of this host's empirical FP32 peak {})",
+            fmt::si_flops(fps),
+            if fp32_peak > 0.0 {
+                format!("{:.1}", fps / fp32_peak * 100.0)
+            } else {
+                "?".into()
+            },
+            fmt::si_flops(fp32_peak),
+        );
+    }
+    // Persist the loss curve.
+    let doc = Json::obj(vec![
+        (
+            "losses",
+            Json::arr(result.losses.iter().map(|&l| Json::num(l as f64))),
+        ),
+        ("median_step_s", Json::num(result.step_seconds.median)),
+        (
+            "flops_per_step",
+            result.flops_per_step.map(Json::num).unwrap_or(Json::Null),
+        ),
+    ]);
+    let path = Path::new(&out_dir).join("loss_curve.json");
+    std::fs::write(&path, doc.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Cmd;
+
+    fn parsed(cmd: Cmd, args: &[&str]) -> Parsed {
+        let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        cmd.parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn metrics_command_runs() {
+        let cmd = Cmd::new("metrics", "t");
+        cmd_metrics(&parsed(cmd, &[])).unwrap();
+    }
+
+    #[test]
+    fn profile_command_lite_scale() {
+        let dir = std::env::temp_dir().join(format!("hroofline-profcmd-{}", std::process::id()));
+        let cmd = Cmd::new("profile", "t")
+            .flag("framework", "pytorch", "h")
+            .flag("phase", "forward", "h")
+            .flag("amp", "O1", "h")
+            .flag("scale", "lite", "h")
+            .flag("out", dir.to_str().unwrap(), "h");
+        cmd_profile(&parsed(cmd, &[])).unwrap();
+        assert!(dir.join("pytorch_forward.svg").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn profile_rejects_bad_framework() {
+        let cmd = Cmd::new("profile", "t")
+            .flag("framework", "caffe", "h")
+            .flag("phase", "forward", "h")
+            .flag("amp", "O1", "h")
+            .flag("scale", "lite", "h")
+            .flag("out", "/tmp/x", "h");
+        assert!(cmd_profile(&parsed(cmd, &[])).is_err());
+    }
+
+    #[test]
+    fn ert_quick_modeled_runs() {
+        let dir = std::env::temp_dir().join(format!("hroofline-ertcmd-{}", std::process::id()));
+        let cmd = Cmd::new("ert", "t")
+            .flag("mode", "modeled", "h")
+            .flag("out", dir.to_str().unwrap(), "h")
+            .switch("quick", "h");
+        cmd_ert(&parsed(cmd, &["--quick"])).unwrap();
+        assert!(dir.join("fig1.svg").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

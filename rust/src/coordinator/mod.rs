@@ -1,0 +1,9 @@
+//! Coordinator: orchestration of sweeps, profiling jobs, reports and the
+//! end-to-end PJRT training loop — the implementations behind the
+//! `repro` CLI.
+
+pub mod commands;
+pub mod train;
+
+pub use commands::{cmd_ert, cmd_metrics, cmd_profile, cmd_report, cmd_train};
+pub use train::{run_training, TrainConfig, TrainResult};

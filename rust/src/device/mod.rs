@@ -1,0 +1,13 @@
+//! Device models: the parameterized GPU specification used by the ERT
+//! modeled mode and the counter simulator, plus an "empirical" device
+//! built from measured ERT results (the host CPU path).
+//!
+//! The V100 constants are the ones the paper itself quotes (§II-A, Eq. 3,
+//! Fig. 1): 80 SMs at 1.312 GHz boost, 8 tensor cores/SM, 128 KiB
+//! combined L1/shared per SM, 6 MiB L2, 900 GB/s HBM2.
+
+pub mod pipeline;
+pub mod spec;
+
+pub use pipeline::{Pipeline, PipelineKind};
+pub use spec::{CacheLevel, GpuSpec, MemLevel, Precision};

@@ -1,0 +1,76 @@
+//! Issue-pipeline description: which execution unit a SASS-level
+//! instruction stream occupies. The cycle model in [`crate::sim`] charges
+//! each kernel's instruction mix against these pipelines and takes the
+//! max (pipelines execute concurrently on an SM, as INT/FP32 dual-issue
+//! does on Volta).
+
+/// Execution pipeline classes modelled per SM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PipelineKind {
+    Fp64,
+    Fp32,
+    /// FP16 on the general-purpose core (half2-packed rate).
+    Fp16,
+    /// INT32 / address arithmetic.
+    Int,
+    /// Tensor core (HMMA).
+    Tensor,
+}
+
+impl PipelineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineKind::Fp64 => "fp64",
+            PipelineKind::Fp32 => "fp32",
+            PipelineKind::Fp16 => "fp16",
+            PipelineKind::Int => "int",
+            PipelineKind::Tensor => "tensor",
+        }
+    }
+
+    pub const ALL: [PipelineKind; 5] = [
+        PipelineKind::Fp64,
+        PipelineKind::Fp32,
+        PipelineKind::Fp16,
+        PipelineKind::Int,
+        PipelineKind::Tensor,
+    ];
+}
+
+/// A pipeline instance on a device: its kind and per-SM lane count
+/// (thread-level operations retired per cycle per SM).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pipeline {
+    pub kind: PipelineKind,
+    pub lanes_per_sm: u32,
+}
+
+impl Pipeline {
+    /// Thread-level operations retired per second device-wide.
+    pub fn ops_per_second(&self, sms: u32, clock_hz: f64) -> f64 {
+        self.lanes_per_sm as f64 * sms as f64 * clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_rate() {
+        let p = Pipeline {
+            kind: PipelineKind::Fp32,
+            lanes_per_sm: 64,
+        };
+        // 64 lanes * 80 SMs * 1 GHz = 5.12 Top/s
+        assert!((p.ops_per_second(80, 1e9) - 5.12e12).abs() < 1.0);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = PipelineKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PipelineKind::ALL.len());
+    }
+}

@@ -1,0 +1,340 @@
+//! GPU hardware specification and derived theoretical peaks.
+
+use crate::device::pipeline::{Pipeline, PipelineKind};
+
+/// Data precision of a floating-point operation stream. `Fp16` means
+/// FP16 on the general-purpose (CUDA) core; Tensor Core traffic is
+/// accounted separately via [`PipelineKind::Tensor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Fp64,
+    Fp32,
+    Fp16,
+}
+
+impl Precision {
+    pub fn bytes(self) -> u64 {
+        match self {
+            Precision::Fp64 => 8,
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp64 => "FP64",
+            Precision::Fp32 => "FP32",
+            Precision::Fp16 => "FP16",
+        }
+    }
+
+    pub const ALL: [Precision; 3] = [Precision::Fp64, Precision::Fp32, Precision::Fp16];
+}
+
+/// A level of the memory hierarchy, ordered nearest-to-farthest from the
+/// execution units. The hierarchical Roofline plots one point per level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemLevel {
+    L1,
+    L2,
+    Hbm,
+}
+
+impl MemLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemLevel::L1 => "L1",
+            MemLevel::L2 => "L2",
+            MemLevel::Hbm => "HBM",
+        }
+    }
+
+    pub const ALL: [MemLevel; 3] = [MemLevel::L1, MemLevel::L2, MemLevel::Hbm];
+}
+
+/// Geometry of one cache level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheLevel {
+    /// Total capacity in bytes (per-SM for L1, device-wide for L2).
+    pub capacity_bytes: u64,
+    /// Cache line size in bytes.
+    pub line_bytes: u64,
+    /// Set associativity (modelled; V100 L1 is ~4-way sectored, L2 16-way).
+    pub ways: u32,
+    /// Peak bandwidth of this level, bytes/s, device-wide.
+    pub peak_bytes_per_sec: f64,
+}
+
+/// Full GPU specification. All modelled quantities derive from these
+/// fields — there are no hidden constants in the simulator.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    pub sms: u32,
+    /// SM boost clock in Hz (drives CUDA-core peaks; V100: 1.53 GHz,
+    /// giving the advertised 15.7 TFLOP/s FP32).
+    pub clock_hz: f64,
+    /// Clock used for the tensor-core peak. The paper's Eq. 3 evaluates
+    /// the V100 TC peak at 1.312 GHz (107.479 TFLOP/s); we reproduce
+    /// that convention.
+    pub tc_clock_hz: f64,
+    /// FP32 CUDA cores per SM (V100: 64).
+    pub fp32_lanes_per_sm: u32,
+    /// FP64 lanes per SM (V100: 32).
+    pub fp64_lanes_per_sm: u32,
+    /// Tensor cores per SM (V100: 8).
+    pub tensor_cores_per_sm: u32,
+    /// FLOPs per tensor-core instruction per warp. The paper (Eq. 6)
+    /// counts 512 FLOPs per HMMA warp instruction.
+    pub flops_per_tensor_inst: u64,
+    /// 4x4x4 MACs per tensor core per cycle → 4^3 * 2 FLOPs (Eq. 3).
+    pub flops_per_tc_per_cycle: u64,
+    /// L1 (combined L1/shared) — per SM.
+    pub l1: CacheLevel,
+    /// L2 — device wide.
+    pub l2: CacheLevel,
+    /// HBM peak bandwidth, bytes/s.
+    pub hbm_bytes_per_sec: f64,
+    /// HBM capacity in bytes.
+    pub hbm_capacity_bytes: u64,
+    /// Kernel launch latency in seconds (microsecond-scale; drives the
+    /// zero-AI overhead analysis of §IV-D).
+    pub launch_latency_s: f64,
+    /// ERT-empirical fraction of theoretical peak achievable by tuned
+    /// code, per pipeline. These are the paper's own Fig. 1 / Fig. 2
+    /// calibration points (e.g. FP64 7.7/7.83, TC 103.7/107.5 = 96.5%).
+    pub achievable: AchievableFrac,
+    /// Warp width (threads per warp).
+    pub warp_size: u32,
+}
+
+/// Measured-over-theoretical efficiency per pipeline (ERT calibration).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AchievableFrac {
+    pub fp64: f64,
+    pub fp32: f64,
+    pub fp16: f64,
+    pub tensor: f64,
+}
+
+impl AchievableFrac {
+    pub fn for_precision(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Fp64 => self.fp64,
+            Precision::Fp32 => self.fp32,
+            Precision::Fp16 => self.fp16,
+        }
+    }
+}
+
+impl GpuSpec {
+    /// NVIDIA V100-SXM2-16GB, the paper's testbed GPU (§III-A).
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            name: "V100-SXM2-16GB".into(),
+            sms: 80,
+            clock_hz: 1.530e9,    // boost clock: 15.67 TFLOP/s FP32 theoretical
+            tc_clock_hz: 1.312e9, // the clock the paper uses in Eq. 3
+            fp32_lanes_per_sm: 64,
+            fp64_lanes_per_sm: 32,
+            tensor_cores_per_sm: 8,
+            flops_per_tensor_inst: 512,
+            flops_per_tc_per_cycle: 4 * 4 * 4 * 2,
+            l1: CacheLevel {
+                capacity_bytes: 128 * 1024,
+                line_bytes: 128,
+                ways: 4,
+                // ~14 TB/s aggregate L1 bandwidth (ERT-measured band, Fig 1).
+                peak_bytes_per_sec: 14.0e12,
+            },
+            l2: CacheLevel {
+                capacity_bytes: 6 * 1024 * 1024,
+                line_bytes: 128,
+                ways: 16,
+                // ~2.5 TB/s L2 bandwidth.
+                peak_bytes_per_sec: 2.5e12,
+            },
+            hbm_bytes_per_sec: 900.0e9,
+            hbm_capacity_bytes: 16 * 1024 * 1024 * 1024,
+            launch_latency_s: 4.0e-6,
+            achievable: AchievableFrac {
+                fp64: 7.7 / 7.8336,     // Fig. 1: 7.7 TFLOP/s measured
+                fp32: 15.2 / 15.6672,   // Fig. 1: 15.2
+                fp16: 29.182 / 31.3344, // Tab. I v5: 29.182
+                tensor: 0.965,          // Fig. 2: cuBLAS at 96.5% of Eq. 3 peak
+            },
+            warp_size: 32,
+        }
+    }
+
+    /// A100-SXM4-40GB variant — used by the "alternate architecture"
+    /// extension tests (paper §V future work).
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "A100-SXM4-40GB".into(),
+            sms: 108,
+            clock_hz: 1.410e9,
+            tc_clock_hz: 1.410e9,
+            fp32_lanes_per_sm: 64,
+            fp64_lanes_per_sm: 32,
+            tensor_cores_per_sm: 4,
+            flops_per_tensor_inst: 2048,
+            flops_per_tc_per_cycle: 8 * 4 * 8 * 2 * 2, // 3rd-gen TC, 256 FMA/cycle
+            l1: CacheLevel {
+                capacity_bytes: 192 * 1024,
+                line_bytes: 128,
+                ways: 4,
+                peak_bytes_per_sec: 19.0e12,
+            },
+            l2: CacheLevel {
+                capacity_bytes: 40 * 1024 * 1024,
+                line_bytes: 128,
+                ways: 16,
+                peak_bytes_per_sec: 4.5e12,
+            },
+            hbm_bytes_per_sec: 1555.0e9,
+            hbm_capacity_bytes: 40 * 1024 * 1024 * 1024,
+            launch_latency_s: 3.5e-6,
+            achievable: AchievableFrac {
+                fp64: 0.97,
+                fp32: 0.97,
+                fp16: 0.93,
+                tensor: 0.95,
+            },
+            warp_size: 32,
+        }
+    }
+
+    /// Theoretical peak FLOP/s for a general-purpose-core precision.
+    ///
+    /// FP16 on the V100 CUDA core peaks at 2x FP32 *only* via `half2`
+    /// packing; this returns the packed peak (the Fig. 1 ceiling).
+    pub fn theoretical_flops(&self, p: Precision) -> f64 {
+        let lanes = match p {
+            Precision::Fp64 => self.fp64_lanes_per_sm,
+            Precision::Fp32 => self.fp32_lanes_per_sm,
+            Precision::Fp16 => self.fp32_lanes_per_sm * 2, // half2: 2 per FP32 lane
+        };
+        self.sms as f64 * lanes as f64 * self.clock_hz * 2.0 // FMA = 2 FLOPs
+    }
+
+    /// Theoretical tensor-core peak FLOP/s (paper Eq. 3:
+    /// `80 x 8 x 1.312e9 x 4^3 x 2 = 107.479 TFLOP/s` for V100).
+    pub fn theoretical_tensor_flops(&self) -> f64 {
+        self.sms as f64
+            * self.tensor_cores_per_sm as f64
+            * self.tc_clock_hz
+            * self.flops_per_tc_per_cycle as f64
+    }
+
+    /// Achievable (ERT-style empirical) compute ceiling.
+    pub fn achievable_flops(&self, p: Precision) -> f64 {
+        self.theoretical_flops(p) * self.achievable.for_precision(p)
+    }
+
+    /// Achievable tensor-core ceiling (cuBLAS reached 96.5% in Fig. 2).
+    pub fn achievable_tensor_flops(&self) -> f64 {
+        self.theoretical_tensor_flops() * self.achievable.tensor
+    }
+
+    /// Peak bandwidth of a memory level, bytes/s.
+    pub fn bandwidth(&self, level: MemLevel) -> f64 {
+        match level {
+            MemLevel::L1 => self.l1.peak_bytes_per_sec,
+            MemLevel::L2 => self.l2.peak_bytes_per_sec,
+            MemLevel::Hbm => self.hbm_bytes_per_sec,
+        }
+    }
+
+    /// The issue pipelines this device exposes (used by the cycle model).
+    pub fn pipelines(&self) -> Vec<Pipeline> {
+        vec![
+            Pipeline {
+                kind: PipelineKind::Fp64,
+                lanes_per_sm: self.fp64_lanes_per_sm,
+            },
+            Pipeline {
+                kind: PipelineKind::Fp32,
+                lanes_per_sm: self.fp32_lanes_per_sm,
+            },
+            Pipeline {
+                kind: PipelineKind::Fp16,
+                // Issued through the FP32 pipeline; half2 doubles lane
+                // throughput. The ladder model (ert::fp16_ladder) covers
+                // the unpacked case.
+                lanes_per_sm: self.fp32_lanes_per_sm * 2,
+            },
+            Pipeline {
+                kind: PipelineKind::Int,
+                lanes_per_sm: self.fp32_lanes_per_sm, // INT32 units mirror FP32 on Volta
+            },
+            Pipeline {
+                kind: PipelineKind::Tensor,
+                lanes_per_sm: self.tensor_cores_per_sm,
+            },
+        ]
+    }
+
+    /// Total cycles/s across all SMs (for `sm__cycles_elapsed.avg.per_second`).
+    pub fn cycles_per_second(&self) -> f64 {
+        self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_matches_paper_eq3() {
+        let v = GpuSpec::v100();
+        let tc = v.theoretical_tensor_flops();
+        // Paper: 107.479 TFLOP/s.
+        assert!((tc / 1e12 - 107.479).abs() < 0.01, "{tc}");
+    }
+
+    #[test]
+    fn v100_cuda_core_peaks() {
+        let v = GpuSpec::v100();
+        // 80 * 64 * 1.53e9 * 2 = 15.67 TFLOP/s theoretical (advertised 15.7).
+        let fp32 = v.theoretical_flops(Precision::Fp32);
+        assert!((fp32 / 1e12 - 15.67).abs() < 0.05, "{fp32}");
+        let fp64 = v.theoretical_flops(Precision::Fp64);
+        assert!((fp64 * 2.0 - fp32).abs() < 1.0);
+        let fp16 = v.theoretical_flops(Precision::Fp16);
+        assert!((fp16 - 2.0 * fp32).abs() < 1.0);
+    }
+
+    #[test]
+    fn v100_fig1_achieved_ceilings() {
+        let v = GpuSpec::v100();
+        // Fig. 1: 7.7 / 15.2 / 29.2 / 103.7 TFLOP/s.
+        assert!((v.achievable_flops(Precision::Fp64) / 1e12 - 7.7).abs() < 0.05);
+        assert!((v.achievable_flops(Precision::Fp32) / 1e12 - 15.2).abs() < 0.05);
+        assert!((v.achievable_flops(Precision::Fp16) / 1e12 - 29.182).abs() < 0.05);
+        assert!((v.achievable_tensor_flops() / 1e12 - 103.7).abs() < 0.15);
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp64.bytes(), 8);
+        assert_eq!(Precision::Fp32.bytes(), 4);
+        assert_eq!(Precision::Fp16.bytes(), 2);
+    }
+
+    #[test]
+    fn bandwidth_ordering() {
+        let v = GpuSpec::v100();
+        assert!(v.bandwidth(MemLevel::L1) > v.bandwidth(MemLevel::L2));
+        assert!(v.bandwidth(MemLevel::L2) > v.bandwidth(MemLevel::Hbm));
+    }
+
+    #[test]
+    fn a100_faster_than_v100() {
+        let v = GpuSpec::v100();
+        let a = GpuSpec::a100();
+        assert!(a.theoretical_tensor_flops() > v.theoretical_tensor_flops());
+        assert!(a.hbm_bytes_per_sec > v.hbm_bytes_per_sec);
+    }
+}

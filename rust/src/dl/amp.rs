@@ -1,0 +1,302 @@
+//! Automatic Mixed Precision pass (paper §IV-C).
+//!
+//! Rewrites a training graph's compute dtypes and inserts cast ops,
+//! following apex.amp's documented optimization levels:
+//!
+//! * `O0` — FP32 baseline: no conversion, no tensor core (Fig. 9).
+//! * `O1` — conservative: TC-eligible ops (convs/GEMMs) run FP16 with
+//!   casts around them; norms/losses stay FP32 (the paper's default for
+//!   PyTorch, Fig. 6).
+//! * `O2` — aggressive: almost everything FP16, FP32 master weights;
+//!   fewer casts but loss-scaling ops appear.
+//! * `ManualFp16` — the hand-written cast placement of §IV-C/Fig. 8;
+//!   *profiler-visible effect identical to O1* (that equivalence is the
+//!   figure's point), with casts attributed to explicit graph ops.
+//! * `Off` — TensorFlow without AMP: like O0.
+
+use crate::dl::autodiff::TrainGraph;
+use crate::dl::graph::{DType, Op, OpKind};
+
+/// AMP optimization level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Off,
+    O0,
+    O1,
+    O2,
+    ManualFp16,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Off => "off",
+            Policy::O0 => "O0",
+            Policy::O1 => "O1",
+            Policy::O2 => "O2",
+            Policy::ManualFp16 => "manual-fp16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        Some(match s {
+            "off" => Policy::Off,
+            "O0" | "o0" => Policy::O0,
+            "O1" | "o1" => Policy::O1,
+            "O2" | "o2" => Policy::O2,
+            "manual-fp16" | "manual" => Policy::ManualFp16,
+            _ => return None,
+        })
+    }
+
+    /// Does this policy run TC-eligible math in FP16?
+    pub fn uses_fp16(self) -> bool {
+        !matches!(self, Policy::Off | Policy::O0)
+    }
+}
+
+/// Apply AMP: mutate compute dtypes and insert cast ops. Returns the
+/// number of cast ops inserted (all zero-AI, feeding Table III).
+pub fn apply(t: &mut TrainGraph, policy: Policy) -> usize {
+    if !policy.uses_fp16() {
+        return 0;
+    }
+    let aggressive = policy == Policy::O2;
+    let mut casts = 0usize;
+    let mut new_ops: Vec<(usize, Op)> = Vec::new(); // (insert-after op idx, cast op)
+
+    for idx in 0..t.graph.ops.len() {
+        let op = &mut t.graph.ops[idx];
+        let make_fp16 = if aggressive {
+            // O2: everything except loss/optimizer/norm statistics.
+            !matches!(
+                op.kind,
+                OpKind::CrossEntropyLoss
+                    | OpKind::SoftmaxCrossEntropyBwd
+                    | OpKind::OptimizerUpdate
+            )
+        } else {
+            // O1/manual: TC-eligible ops only.
+            op.kind.is_tensor_core_eligible()
+        };
+        if !make_fp16 || op.compute_dtype != DType::F32 {
+            continue;
+        }
+        op.compute_dtype = DType::F16;
+        // O1 wraps each converted *forward* op with input/output casts;
+        // the backward pass runs in the dtype of the saved activations
+        // (autocast does not re-cast gradients). O2 casts once at graph
+        // entry (master weights) so per-op casts are rare.
+        let is_forward = t.forward_ops.contains(&idx);
+        if !aggressive && is_forward {
+            let shape = t.graph.tensors[op.output.0].shape.clone();
+            let op_name = op.name.clone();
+            let out_id = op.output;
+            let in_id = op.inputs[0];
+            let in_shape = t.graph.tensors[in_id.0].shape.clone();
+            // input cast f32->f16
+            new_ops.push((
+                idx,
+                Op {
+                    id: 0,
+                    name: format!("{op_name}_cast_in"),
+                    kind: OpKind::Cast { to: DType::F16 },
+                    inputs: vec![in_id],
+                    output: in_id,
+                    compute_dtype: DType::F16,
+                    flops: 0,
+                },
+            ));
+            let _ = in_shape;
+            // output cast f16->f32
+            new_ops.push((
+                idx,
+                Op {
+                    id: 0,
+                    name: format!("{op_name}_cast_out"),
+                    kind: OpKind::Cast { to: DType::F32 },
+                    inputs: vec![out_id],
+                    output: out_id,
+                    compute_dtype: DType::F32,
+                    flops: 0,
+                },
+            ));
+            let _ = shape;
+            casts += 2;
+        }
+    }
+
+    if aggressive {
+        // O2: one master-weight cast per parameter + loss-scaling ops.
+        for p in t.graph.params() {
+            let name = format!("{}_master_cast", t.graph.tensors[p.0].name);
+            new_ops.push((
+                usize::MAX,
+                Op {
+                    id: 0,
+                    name,
+                    kind: OpKind::Cast { to: DType::F16 },
+                    inputs: vec![p],
+                    output: p,
+                    compute_dtype: DType::F16,
+                    flops: 0,
+                },
+            ));
+            casts += 1;
+        }
+    }
+
+    // Loss scaling (both O1 and O2): scale + unscale elementwise passes.
+    // These carry FLOPs (one mul/elem) but are tiny; modelled as two ops.
+    // apex also emits inf/nan checks — movement-only.
+    let loss_scale_ops = 2;
+    for i in 0..loss_scale_ops {
+        let scalar = t.graph.tensor(&format!("loss_scale_{i}"), crate::dl::graph::TensorShape(vec![1]), DType::F32);
+        new_ops.push((
+            usize::MAX,
+            Op {
+                id: 0,
+                name: format!("amp_loss_scale_{i}"),
+                kind: OpKind::Memset,
+                inputs: vec![scalar],
+                output: scalar,
+                compute_dtype: DType::F32,
+                flops: 0,
+            },
+        ));
+        casts += 1;
+    }
+
+    // Append cast ops to the graph op list, tagging phases: casts wrap
+    // both forward and backward ops; attribute by the wrapped op's phase.
+    for (after_idx, mut op) in new_ops {
+        op.id = t.graph.ops.len();
+        let is_fwd = after_idx != usize::MAX && t.forward_ops.contains(&after_idx);
+        t.graph.ops.push(op);
+        let new_idx = t.graph.ops.len() - 1;
+        if is_fwd {
+            t.forward_ops.push(new_idx);
+        } else {
+            t.backward_ops.push(new_idx);
+        }
+    }
+    casts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dl::autodiff::differentiate;
+    use crate::dl::deepcam::{deepcam, DeepCamConfig};
+
+    fn train_graph() -> TrainGraph {
+        differentiate(deepcam(&DeepCamConfig::lite()))
+    }
+
+    #[test]
+    fn o0_is_identity() {
+        let mut t = train_graph();
+        let before = t.graph.ops.len();
+        let casts = apply(&mut t, Policy::O0);
+        assert_eq!(casts, 0);
+        assert_eq!(t.graph.ops.len(), before);
+        assert!(t.graph.ops.iter().all(|o| o.compute_dtype != DType::F16));
+    }
+
+    #[test]
+    fn o1_converts_tc_ops_only() {
+        let mut t = train_graph();
+        apply(&mut t, Policy::O1);
+        for op in &t.graph.ops {
+            if op.kind.is_tensor_core_eligible() {
+                assert_eq!(op.compute_dtype, DType::F16, "{}", op.name);
+            }
+            if matches!(op.kind, OpKind::BatchNorm | OpKind::CrossEntropyLoss) {
+                assert_eq!(op.compute_dtype, DType::F32, "{}", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn o1_inserts_two_casts_per_converted_forward_op() {
+        let mut t = train_graph();
+        let fwd_tc_ops = t
+            .forward_ops
+            .iter()
+            .filter(|&&i| t.graph.ops[i].kind.is_tensor_core_eligible())
+            .count();
+        let casts = apply(&mut t, Policy::O1);
+        assert_eq!(casts, 2 * fwd_tc_ops + 2 /* loss scaling */);
+    }
+
+    #[test]
+    fn backward_tc_ops_converted_without_casts() {
+        let mut t = train_graph();
+        apply(&mut t, Policy::O1);
+        // Backward conv ops run FP16 (saved-dtype)...
+        assert!(t
+            .backward_ops
+            .iter()
+            .filter(|&&i| t.graph.ops[i].kind.is_tensor_core_eligible())
+            .all(|&i| t.graph.ops[i].compute_dtype == DType::F16));
+        // ...but no cast ops were attributed to the backward phase other
+        // than the loss-scaling bookkeeping.
+        let bwd_casts = t
+            .backward_ops
+            .iter()
+            .filter(|&&i| matches!(t.graph.ops[i].kind, OpKind::Cast { .. }))
+            .count();
+        assert_eq!(bwd_casts, 0, "autocast inserts no backward casts");
+    }
+
+    #[test]
+    fn o2_more_fp16_fewer_casts_than_o1() {
+        let mut t1 = train_graph();
+        let c1 = apply(&mut t1, Policy::O1);
+        let mut t2 = train_graph();
+        let c2 = apply(&mut t2, Policy::O2);
+        let fp16 = |t: &TrainGraph| {
+            t.graph.ops.iter().filter(|o| o.compute_dtype == DType::F16 && o.flops > 0).count()
+        };
+        assert!(fp16(&t2) > fp16(&t1), "O2 converts more compute ops");
+        // O2's casts are per-parameter master-weight syncs rather than
+        // per-op wrappers: far fewer casts *per converted op*.
+        let per_op_1 = c1 as f64 / fp16(&t1) as f64;
+        let per_op_2 = c2 as f64 / fp16(&t2) as f64;
+        assert!(per_op_2 < per_op_1, "{per_op_2} vs {per_op_1}");
+    }
+
+    #[test]
+    fn manual_fp16_equals_o1_conversion_effect() {
+        // Fig. 8's claim: manual casting matches AMP. Same converted-op
+        // set and cast census.
+        let mut a = train_graph();
+        let ca = apply(&mut a, Policy::O1);
+        let mut b = train_graph();
+        let cb = apply(&mut b, Policy::ManualFp16);
+        assert_eq!(ca, cb);
+        let dtypes = |t: &TrainGraph| -> Vec<DType> {
+            t.graph.ops.iter().map(|o| o.compute_dtype).collect()
+        };
+        assert_eq!(dtypes(&a), dtypes(&b));
+    }
+
+    #[test]
+    fn casts_are_zero_ai() {
+        let mut t = train_graph();
+        apply(&mut t, Policy::O1);
+        for op in &t.graph.ops {
+            if matches!(op.kind, OpKind::Cast { .. }) {
+                assert!(op.kind.is_zero_ai());
+                assert_eq!(op.flops, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(Policy::parse("O1"), Some(Policy::O1));
+        assert_eq!(Policy::parse("manual-fp16"), Some(Policy::ManualFp16));
+        assert_eq!(Policy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,440 @@
+//! Framework-neutral operator IR with shape inference.
+//!
+//! A [`Graph`] is a DAG of [`Op`]s over NHWC tensors. The builder
+//! methods do shape inference and FLOP/byte accounting per op — the
+//! numbers later charged to kernels by the framework lowerings.
+
+use crate::device::Precision;
+
+/// Tensor element types the frameworks juggle (AMP casts between them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F16,
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F16 => 2,
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    /// The SASS FP pipeline this dtype's math lands on.
+    pub fn precision(self) -> Precision {
+        match self {
+            DType::F16 => Precision::Fp16,
+            DType::F32 | DType::I32 => Precision::Fp32,
+            DType::F64 => Precision::Fp64,
+        }
+    }
+}
+
+/// Dense NHWC (or arbitrary-rank) tensor shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorShape(pub Vec<u64>);
+
+impl TensorShape {
+    pub fn nhwc(n: u64, h: u64, w: u64, c: u64) -> TensorShape {
+        TensorShape(vec![n, h, w, c])
+    }
+
+    pub fn n_elems(&self) -> u64 {
+        self.0.iter().product()
+    }
+
+    pub fn bytes(&self, dt: DType) -> u64 {
+        self.n_elems() * dt.bytes()
+    }
+
+    pub fn dim(&self, i: usize) -> u64 {
+        self.0[i]
+    }
+}
+
+/// Tensor id within a graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TensorId(pub usize);
+
+/// A graph tensor: shape + dtype + whether it is a trainable parameter.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub shape: TensorShape,
+    pub dtype: DType,
+    pub is_param: bool,
+    pub name: String,
+}
+
+/// Operator kinds. Forward ops are built by [`crate::dl::deepcam`];
+/// `*Bwd` variants and `Optimizer*` are added by [`crate::dl::autodiff`];
+/// `Cast`/`Transpose` mostly by [`crate::dl::amp`] and the lowerings.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    Conv2d { kh: u64, kw: u64, stride: u64, dilation: u64 },
+    ConvTranspose2d { kh: u64, kw: u64, stride: u64 },
+    MatMul,
+    BatchNorm,
+    Relu,
+    Add,
+    Concat,
+    GlobalAvgPool,
+    Upsample { factor: u64 },
+    Softmax,
+    CrossEntropyLoss,
+    /// Gradient of a conv w.r.t. its input (data grad).
+    Conv2dBwdData { kh: u64, kw: u64, stride: u64, dilation: u64 },
+    /// Gradient of a conv w.r.t. its filter (weight grad).
+    Conv2dBwdFilter { kh: u64, kw: u64, stride: u64, dilation: u64 },
+    MatMulBwd,
+    BatchNormBwd,
+    ReluBwd,
+    SoftmaxCrossEntropyBwd,
+    /// SGD-momentum parameter update (one per parameter tensor).
+    OptimizerUpdate,
+    /// Pure data movement (zero-AI by construction, §IV-D).
+    Cast { to: DType },
+    Transpose,
+    Memset,
+    HostCopy,
+}
+
+impl OpKind {
+    /// Whether the op performs no floating-point work (zero-AI class).
+    pub fn is_zero_ai(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Cast { .. } | OpKind::Transpose | OpKind::Memset | OpKind::HostCopy
+                | OpKind::Concat
+                | OpKind::Upsample { .. }
+        )
+    }
+
+    /// Whether a GEMM-shaped MXU/tensor-core implementation exists.
+    pub fn is_tensor_core_eligible(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d { .. }
+                | OpKind::ConvTranspose2d { .. }
+                | OpKind::MatMul
+                | OpKind::Conv2dBwdData { .. }
+                | OpKind::Conv2dBwdFilter { .. }
+                | OpKind::MatMulBwd
+        )
+    }
+}
+
+/// One operator instance.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: usize,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+    /// Compute dtype (AMP may differ from tensor storage dtype).
+    pub compute_dtype: DType,
+    /// FLOPs this op performs per execution.
+    pub flops: u64,
+}
+
+/// The operator DAG.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<Op>,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    pub fn tensor(&mut self, name: &str, shape: TensorShape, dtype: DType) -> TensorId {
+        self.tensors.push(TensorInfo {
+            shape,
+            dtype,
+            is_param: false,
+            name: name.to_string(),
+        });
+        TensorId(self.tensors.len() - 1)
+    }
+
+    pub fn param(&mut self, name: &str, shape: TensorShape, dtype: DType) -> TensorId {
+        let id = self.tensor(name, shape, dtype);
+        self.tensors[id.0].is_param = true;
+        id
+    }
+
+    pub fn shape(&self, t: TensorId) -> &TensorShape {
+        &self.tensors[t.0].shape
+    }
+
+    pub fn dtype(&self, t: TensorId) -> DType {
+        self.tensors[t.0].dtype
+    }
+
+    pub fn params(&self) -> Vec<TensorId> {
+        (0..self.tensors.len())
+            .filter(|&i| self.tensors[i].is_param)
+            .map(TensorId)
+            .collect()
+    }
+
+    fn push_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        out_shape: TensorShape,
+        out_dtype: DType,
+        flops: u64,
+    ) -> TensorId {
+        let output = self.tensor(&format!("{name}_out"), out_shape, out_dtype);
+        self.ops.push(Op {
+            id: self.ops.len(),
+            name: name.to_string(),
+            kind,
+            inputs,
+            output,
+            compute_dtype: out_dtype,
+            flops,
+        });
+        output
+    }
+
+    // ---------- builder ops with shape inference ----------
+
+    /// SAME-padded conv, NHWC x HWIO.
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        w: TensorId,
+        stride: u64,
+        dilation: u64,
+    ) -> TensorId {
+        let xs = self.shape(x).clone();
+        let ws = self.shape(w).clone();
+        let (n, h, wd) = (xs.dim(0), xs.dim(1), xs.dim(2));
+        let (kh, kw, cin, cout) = (ws.dim(0), ws.dim(1), ws.dim(2), ws.dim(3));
+        assert_eq!(xs.dim(3), cin, "conv {name}: channel mismatch");
+        let (oh, ow) = (h.div_ceil(stride), wd.div_ceil(stride));
+        let flops = 2 * n * oh * ow * kh * kw * cin * cout;
+        self.push_op(
+            name,
+            OpKind::Conv2d { kh, kw, stride, dilation },
+            vec![x, w],
+            TensorShape::nhwc(n, oh, ow, cout),
+            self.dtype(x),
+            flops,
+        )
+    }
+
+    /// Transposed conv (x2 upsampling decoder layers).
+    pub fn conv2d_transpose(&mut self, name: &str, x: TensorId, w: TensorId, stride: u64) -> TensorId {
+        let xs = self.shape(x).clone();
+        let ws = self.shape(w).clone();
+        let (n, h, wd) = (xs.dim(0), xs.dim(1), xs.dim(2));
+        let (kh, kw, cin, cout) = (ws.dim(0), ws.dim(1), ws.dim(2), ws.dim(3));
+        assert_eq!(xs.dim(3), cin, "deconv {name}: channel mismatch");
+        let (oh, ow) = (h * stride, wd * stride);
+        let flops = 2 * n * oh * ow * kh * kw * cin * cout;
+        self.push_op(
+            name,
+            OpKind::ConvTranspose2d { kh, kw, stride },
+            vec![x, w],
+            TensorShape::nhwc(n, oh, ow, cout),
+            self.dtype(x),
+            flops,
+        )
+    }
+
+    pub fn batch_norm(&mut self, name: &str, x: TensorId, gamma: TensorId, beta: TensorId) -> TensorId {
+        let xs = self.shape(x).clone();
+        // ~10 FLOPs/element: stats + normalize + affine.
+        let flops = 10 * xs.n_elems();
+        let dt = self.dtype(x);
+        self.push_op(name, OpKind::BatchNorm, vec![x, gamma, beta], xs, dt, flops)
+    }
+
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).clone();
+        let flops = xs.n_elems();
+        let dt = self.dtype(x);
+        self.push_op(name, OpKind::Relu, vec![x], xs, dt, flops)
+    }
+
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let xs = self.shape(a).clone();
+        assert_eq!(xs, *self.shape(b), "add {name}: shape mismatch");
+        let flops = xs.n_elems();
+        let dt = self.dtype(a);
+        self.push_op(name, OpKind::Add, vec![a, b], xs, dt, flops)
+    }
+
+    pub fn concat(&mut self, name: &str, xs_in: &[TensorId]) -> TensorId {
+        let first = self.shape(xs_in[0]).clone();
+        let c: u64 = xs_in.iter().map(|&t| self.shape(t).dim(3)).sum();
+        let dt = self.dtype(xs_in[0]);
+        self.push_op(
+            name,
+            OpKind::Concat,
+            xs_in.to_vec(),
+            TensorShape::nhwc(first.dim(0), first.dim(1), first.dim(2), c),
+            dt,
+            0,
+        )
+    }
+
+    pub fn global_avg_pool(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).clone();
+        let flops = xs.n_elems();
+        let dt = self.dtype(x);
+        self.push_op(
+            name,
+            OpKind::GlobalAvgPool,
+            vec![x],
+            TensorShape::nhwc(xs.dim(0), 1, 1, xs.dim(3)),
+            dt,
+            flops,
+        )
+    }
+
+    pub fn upsample(&mut self, name: &str, x: TensorId, factor: u64) -> TensorId {
+        let xs = self.shape(x).clone();
+        let dt = self.dtype(x);
+        self.push_op(
+            name,
+            OpKind::Upsample { factor },
+            vec![x],
+            TensorShape::nhwc(xs.dim(0), xs.dim(1) * factor, xs.dim(2) * factor, xs.dim(3)),
+            dt,
+            0,
+        )
+    }
+
+    pub fn softmax_ce_loss(&mut self, name: &str, logits: TensorId, labels: TensorId) -> TensorId {
+        let xs = self.shape(logits).clone();
+        // softmax + log + weighted reduce ≈ 8 FLOPs/element.
+        let flops = 8 * xs.n_elems();
+        self.push_op(
+            name,
+            OpKind::CrossEntropyLoss,
+            vec![logits, labels],
+            TensorShape(vec![1]),
+            DType::F32,
+            flops,
+        )
+    }
+
+    pub fn cast(&mut self, name: &str, x: TensorId, to: DType) -> TensorId {
+        let xs = self.shape(x).clone();
+        self.push_op(name, OpKind::Cast { to }, vec![x], xs, to, 0)
+    }
+
+    // ---------- whole-graph accounting ----------
+
+    /// Total forward FLOPs.
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    /// Count of ops by zero-AI class.
+    pub fn zero_ai_op_count(&self) -> (usize, usize) {
+        let zero = self.ops.iter().filter(|o| o.kind.is_zero_ai()).count();
+        (zero, self.ops.len())
+    }
+
+    /// Total parameter scalars.
+    pub fn n_param_elems(&self) -> u64 {
+        self.params().iter().map(|&p| self.shape(p).n_elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> (Graph, TensorId) {
+        let mut g = Graph::new();
+        let x = g.tensor("x", TensorShape::nhwc(2, 8, 8, 3), DType::F32);
+        let w = g.param("w", TensorShape(vec![3, 3, 3, 16]), DType::F32);
+        let y = g.conv2d("conv", x, w, 1, 1);
+        (g, y)
+    }
+
+    #[test]
+    fn conv_shape_inference_same_padding() {
+        let (g, y) = tiny_graph();
+        assert_eq!(g.shape(y), &TensorShape::nhwc(2, 8, 8, 16));
+        // stride 2
+        let mut g2 = Graph::new();
+        let x = g2.tensor("x", TensorShape::nhwc(1, 9, 9, 3), DType::F32);
+        let w = g2.param("w", TensorShape(vec![3, 3, 3, 4]), DType::F32);
+        let y = g2.conv2d("c", x, w, 2, 1);
+        assert_eq!(g2.shape(y), &TensorShape::nhwc(1, 5, 5, 4));
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let (g, _) = tiny_graph();
+        // 2 * N*OH*OW*KH*KW*Cin*Cout
+        assert_eq!(g.ops[0].flops, 2 * 2 * 8 * 8 * 3 * 3 * 3 * 16);
+    }
+
+    #[test]
+    fn deconv_doubles_spatial() {
+        let mut g = Graph::new();
+        let x = g.tensor("x", TensorShape::nhwc(1, 4, 4, 8), DType::F32);
+        let w = g.param("w", TensorShape(vec![3, 3, 8, 4]), DType::F32);
+        let y = g.conv2d_transpose("d", x, w, 2);
+        assert_eq!(g.shape(y), &TensorShape::nhwc(1, 8, 8, 4));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut g = Graph::new();
+        let a = g.tensor("a", TensorShape::nhwc(1, 4, 4, 3), DType::F32);
+        let b = g.tensor("b", TensorShape::nhwc(1, 4, 4, 5), DType::F32);
+        let y = g.concat("cat", &[a, b]);
+        assert_eq!(g.shape(y).dim(3), 8);
+        assert!(g.ops.last().unwrap().kind.is_zero_ai());
+    }
+
+    #[test]
+    fn zero_ai_classification() {
+        assert!(OpKind::Cast { to: DType::F16 }.is_zero_ai());
+        assert!(OpKind::Transpose.is_zero_ai());
+        assert!(!OpKind::Relu.is_zero_ai());
+        assert!(!OpKind::Conv2d { kh: 3, kw: 3, stride: 1, dilation: 1 }.is_zero_ai());
+    }
+
+    #[test]
+    fn tc_eligibility() {
+        assert!(OpKind::MatMul.is_tensor_core_eligible());
+        assert!(OpKind::Conv2dBwdFilter { kh: 3, kw: 3, stride: 1, dilation: 1 }
+            .is_tensor_core_eligible());
+        assert!(!OpKind::BatchNorm.is_tensor_core_eligible());
+        assert!(!OpKind::OptimizerUpdate.is_tensor_core_eligible());
+    }
+
+    #[test]
+    fn param_accounting() {
+        let (g, _) = tiny_graph();
+        assert_eq!(g.params().len(), 1);
+        assert_eq!(g.n_param_elems(), 3 * 3 * 3 * 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "channel mismatch")]
+    fn conv_channel_mismatch_panics() {
+        let mut g = Graph::new();
+        let x = g.tensor("x", TensorShape::nhwc(1, 4, 4, 3), DType::F32);
+        let w = g.param("w", TensorShape(vec![3, 3, 7, 4]), DType::F32);
+        g.conv2d("bad", x, w, 1, 1);
+    }
+}

@@ -1,0 +1,30 @@
+//! Deep-learning framework execution model — the profiling *subject*.
+//!
+//! The paper profiles DeepCAM under two frameworks whose runtime
+//! behaviour differs (kernel fusion, implicit zero-AI data-conversion
+//! kernels, where the optimizer lives, tensor-core eligibility). This
+//! module reconstructs that machinery:
+//!
+//! * [`graph`] — a framework-neutral operator IR with shape inference;
+//! * [`deepcam`] — the DeepCAM network builder (DeepLabv3+: ResNet-style
+//!   encoder, ASPP, nine-layer decoder with two skips) at paper scale
+//!   and at the AOT "lite" scale;
+//! * [`autodiff`] — backward-graph generation (gradient op per forward
+//!   op) plus optimizer-op emission;
+//! * [`amp`] — the Automatic Mixed Precision pass: O0/O1/O2 policies and
+//!   the manual-FP16 variant (§IV-C), inserting cast ops and marking
+//!   tensor-core eligibility;
+//! * [`lower`] — framework personalities: TensorFlow-like and
+//!   PyTorch-like lowering of an op graph to kernel traces
+//!   ([`crate::sim::KernelInvocation`]), including each framework's
+//!   characteristic zero-AI kernel population (§IV-D, Table III).
+
+pub mod amp;
+pub mod autodiff;
+pub mod deepcam;
+pub mod graph;
+pub mod lower;
+
+pub use amp::Policy;
+pub use graph::{DType, Graph, Op, OpKind, TensorShape};
+pub use lower::{lower, Framework, FrameworkTrace, Phase};

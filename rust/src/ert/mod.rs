@@ -1,0 +1,29 @@
+//! The Empirical Roofline Toolkit (ERT), re-implemented (paper §II-A).
+//!
+//! ERT characterizes a machine by sweeping a finely tuned FMA-chain
+//! micro-kernel over working-set sizes that straddle each cache level and
+//! over FLOPs-per-byte configurations, then taking empirical maxima:
+//! compute ceilings from the high-intensity end, per-level bandwidths
+//! from working sets that fit each level.
+//!
+//! Two drivers share the sweep algorithm ([`sweep`]):
+//!
+//! * [`empirical`] — runs *real* native micro-kernels on the host CPU
+//!   and measures wall-clock. This is the mode that proves the harness
+//!   on actual silicon (this machine), and its ceilings feed the
+//!   end-to-end example's CPU roofline.
+//! * [`modeled`] — runs the same sweep through the V100 simulator,
+//!   regenerating the paper's Fig. 1 ceilings.
+//!
+//! The FP16 tuning ladder of Table I lives in [`fp16_ladder`]; the
+//! tensor-core GEMM size sweep of Fig. 2 in [`gemm`].
+
+pub mod empirical;
+pub mod fp16_ladder;
+pub mod gemm;
+pub mod modeled;
+pub mod sweep;
+
+pub use fp16_ladder::{ladder, LadderVersion};
+pub use gemm::{gemm_sweep, GemmImpl, GemmPoint};
+pub use sweep::{Ceilings as ErtCeilings, SweepConfig, SweepPoint, SweepResult};

@@ -1,0 +1,208 @@
+//! Modeled ERT driver: the same sweep run through the V100 simulator,
+//! regenerating the paper's Fig. 1 machine characterization.
+//!
+//! Each sweep point becomes a [`KernelDesc`] whose instruction mix and
+//! access pattern match the ERT micro-kernel (chained FMAs over a
+//! buffer, read+write per pass); the simulator's cache + cycle models
+//! produce the sustained rates. Ceiling extraction then works exactly as
+//! in the empirical driver.
+
+use crate::device::{GpuSpec, MemLevel, Precision};
+use crate::ert::sweep::{Ceilings, SweepConfig, SweepPoint, SweepResult};
+use crate::sim::kernel::{AccessPattern, InstMix, KernelDesc};
+use crate::sim::{CacheModel, CycleModel};
+use crate::util::Summary;
+
+/// Build the ERT kernel descriptor for one sweep point.
+///
+/// Passes over a `ws`-byte buffer doing `fpe` FLOPs per element. The
+/// working set is re-swept `passes` times, so all reuse happens at
+/// whichever cache level the buffer fits — that locality is what the
+/// sweep exploits to expose per-level bandwidths.
+pub fn ert_kernel(spec: &GpuSpec, p: Precision, ws: u64, fpe: u64, passes: u64) -> KernelDesc {
+    let n = (ws / p.bytes() as u64).max(1);
+    let mut mix = InstMix::default();
+    mix.counts_mut(p).fma = n * (fpe / 2).max(1) * passes;
+    // Tuned ERT keeps index arithmetic minimal (Table I v5 lesson):
+    // one u32 update per element.
+    mix.int_ops = n * passes;
+    let request_bytes = 2 * ws * passes; // read + write per pass
+    let block = 256u32;
+    let grid = ((n.min(1 << 20) / block as u64).max(1)) as u32 * spec.sms.max(1);
+    KernelDesc {
+        name: format!("ert_{}_{}B_{}f", p.name(), ws, fpe),
+        grid,
+        block,
+        mix,
+        access: AccessPattern {
+            load_bytes: request_bytes / 2,
+            store_bytes: request_bytes / 2,
+            footprint_bytes: ws,
+            // Reuse across passes: `passes` sweeps of the same buffer.
+            // Reuse across passes is captured by the innermost level the
+            // buffer fits (the fit factor zeroes the rest) — declare it
+            // at both levels and let capacity decide.
+            l1_reuse: passes as f64,
+            l2_reuse: passes as f64,
+            // Residency dispersion: block scheduling is not perfectly
+            // balanced, so ~an eighth of the buffer streams through each
+            // L1 over the run rather than 1/sms of it.
+            l1_resident_bytes: Some(ws / (spec.sms as u64 / 8).max(1)),
+            l2_resident_bytes: None,
+            // (If the buffer exceeds a level's capacity the cache model's
+            // fit factor kills the reuse — that is the sweep's knee.)
+        },
+        occupancy: 0.9,
+        efficiency: 0.98,
+    }
+}
+
+/// Run the modeled sweep on a device for one precision.
+pub fn run_sweep(spec: &GpuSpec, p: Precision, config: &SweepConfig) -> SweepResult {
+    let cache = CacheModel::new(spec);
+    let cycles = CycleModel::new(spec);
+    let mut points = Vec::new();
+    for &ws in &config.working_sets {
+        for &fpe in &config.flops_per_elem {
+            // Enough passes that ramp is negligible, as real ERT does by
+            // repeating trials until the duration is measurable.
+            let passes = ((256u64 << 20) / ws.max(1)).clamp(4, 4096);
+            let k = ert_kernel(spec, p, ws, fpe, passes);
+            let t = cache.traffic(&k);
+            let secs = cycles.elapsed_seconds(&k, &t);
+            let flops = k.mix.cuda_core_flops() as f64;
+            // ERT credits algorithmic bytes at the measurement boundary;
+            // for bandwidth attribution we use the level the buffer
+            // resides in — i.e. traffic at the slowest level it touched.
+            // ERT credits *algorithmic* bytes (the kernel's requests) —
+            // the empirical bandwidth of the level the buffer lives in
+            // emerges from the sweep timing, exactly as on hardware.
+            let algorithmic_bytes = k.access.requested_bytes() as f64;
+            points.push(SweepPoint {
+                working_set_bytes: ws,
+                flops_per_elem: fpe,
+                flops,
+                bytes: algorithmic_bytes,
+                gflops: flops / secs / 1e9,
+                gbytes: algorithmic_bytes / secs / 1e9,
+                time: Summary::of(&[secs]),
+            });
+        }
+    }
+    SweepResult {
+        label: p.name().to_string(),
+        points,
+        level_capacity: vec![
+            (MemLevel::L1, l1_window(spec)),
+            (MemLevel::L2, l2_window(spec)),
+            (MemLevel::Hbm, u64::MAX),
+        ],
+    }
+}
+
+/// Largest buffer that stays L1-resident device-wide. V100's aggregate
+/// L1 (80 × 128 KiB = 10 MiB) nominally exceeds its 6 MiB L2; with the
+/// scheduling-dispersion factor (see [`ert_kernel`]) the effective
+/// L1-resident window is sms/8 × capacity.
+fn l1_window(spec: &GpuSpec) -> u64 {
+    (spec.sms as u64 / 8).max(1) * spec.l1.capacity_bytes
+}
+
+/// Largest buffer that stays L2-resident.
+fn l2_window(spec: &GpuSpec) -> u64 {
+    spec.l2.capacity_bytes * 9 / 10
+}
+
+/// Which level a working set resides in (device-wide view).
+fn residency(spec: &GpuSpec, ws: u64) -> MemLevel {
+    if ws <= l1_window(spec) {
+        MemLevel::L1
+    } else if ws <= l2_window(spec) {
+        MemLevel::L2
+    } else {
+        MemLevel::Hbm
+    }
+}
+
+/// Full modeled machine characterization: per-precision compute ceilings
+/// (scaled by the device's ERT-calibrated achievable fractions) plus the
+/// tensor-core ceiling from the GEMM sweep's asymptote, and per-level
+/// bandwidths — the Fig. 1 dataset.
+pub fn characterize(spec: &GpuSpec, config: &SweepConfig) -> Ceilings {
+    let mut compute = Vec::new();
+    let mut bandwidth: Vec<(MemLevel, f64)> = Vec::new();
+    for p in Precision::ALL {
+        let sweep = run_sweep(spec, p, config);
+        // The simulator's FMA pipe attains theory; the achievable
+        // fraction models the instruction-overhead gap ERT measures
+        // (Table I quantifies that gap mechanistically for FP16).
+        let peak = sweep.peak_gflops() * spec.achievable.for_precision(p);
+        compute.push((p.name().to_string(), peak));
+        if bandwidth.is_empty() {
+            bandwidth = MemLevel::ALL
+                .iter()
+                .map(|&l| (l, sweep.peak_bandwidth(l)))
+                .collect();
+        }
+    }
+    // Tensor-core ceiling: asymptotic cuBLAS GEMM (Fig. 2 right edge).
+    let tc = crate::ert::gemm::asymptotic_tensor_gflops(spec);
+    compute.push(("TensorCore".to_string(), tc));
+    Ceilings {
+        compute_gflops: compute,
+        bandwidth_gbs: bandwidth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_fp64_sweep_shapes() {
+        let spec = GpuSpec::v100();
+        let r = run_sweep(&spec, Precision::Fp64, &SweepConfig::quick());
+        assert!(!r.points.is_empty());
+        // High-intensity cache-resident point approaches the FP64 pipe.
+        let peak = r.peak_gflops();
+        let theory = spec.theoretical_flops(Precision::Fp64) / 1e9;
+        assert!(peak > 0.7 * theory, "peak {peak} theory {theory}");
+        assert!(peak <= theory * 1.001);
+    }
+
+    #[test]
+    fn fig1_ceilings_reproduced() {
+        let spec = GpuSpec::v100();
+        let c = characterize(&spec, &SweepConfig::quick());
+        let get = |label: &str| c.compute(label).unwrap() / 1000.0; // TFLOP/s
+        assert!((get("FP64") - 7.7).abs() < 0.5, "FP64 {}", get("FP64"));
+        assert!((get("FP32") - 15.2).abs() < 1.0, "FP32 {}", get("FP32"));
+        assert!((get("FP16") - 29.2).abs() < 2.0, "FP16 {}", get("FP16"));
+        assert!((get("TensorCore") - 103.7).abs() < 5.0, "TC {}", get("TensorCore"));
+        // Ceiling ordering (Fig. 1): TC > FP16 > FP32 > FP64.
+        assert!(get("TensorCore") > get("FP16"));
+        assert!(get("FP16") > get("FP32"));
+        assert!(get("FP32") > get("FP64"));
+    }
+
+    #[test]
+    fn bandwidth_hierarchy_from_sweep() {
+        let spec = GpuSpec::v100();
+        let r = run_sweep(&spec, Precision::Fp32, &SweepConfig::standard());
+        let l1 = r.peak_bandwidth(MemLevel::L1);
+        let l2 = r.peak_bandwidth(MemLevel::L2);
+        let hbm = r.peak_bandwidth(MemLevel::Hbm);
+        assert!(l1 > l2 && l2 > hbm, "{l1} {l2} {hbm}");
+        // HBM band should be near the spec's 900 GB/s (within model slack).
+        assert!((hbm - 900.0).abs() < 200.0, "hbm {hbm}");
+    }
+
+    #[test]
+    fn residency_mapping() {
+        let spec = GpuSpec::v100();
+        // Windows: L1 ≤ 640 KiB (10 SMs' worth of half-L1), L2 ≤ 5.4 MiB.
+        assert_eq!(residency(&spec, 64 * 1024), MemLevel::L1);
+        assert_eq!(residency(&spec, 4 * 1024 * 1024), MemLevel::L2);
+        assert_eq!(residency(&spec, 1 << 30), MemLevel::Hbm);
+    }
+}

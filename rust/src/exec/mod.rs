@@ -1,0 +1,184 @@
+//! Execution substrate: a scoped thread pool and `parallel_map` used by
+//! the coordinator for profiling sweeps (one pass per metric, many
+//! kernels per pass). Replaces `tokio`/`rayon`, which are not in the
+//! offline vendor set — the workload here is CPU-bound, so plain std
+//! threads with a work queue are the right shape anyway.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A fixed-size pool executing boxed jobs.
+///
+/// Jobs are `FnOnce() + Send`; results flow back through whatever channel
+/// the caller closes over. Most users want [`parallel_map`] instead.
+pub struct ThreadPool {
+    queue: Arc<JobQueue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct JobQueue {
+    jobs: Mutex<(Vec<Job>, bool)>, // (pending, shutdown)
+    cv: Condvar,
+}
+
+impl ThreadPool {
+    /// Spawn a pool of `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n >= 1);
+        let queue = Arc::new(JobQueue {
+            jobs: Mutex::new((Vec::new(), false)),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("hroofline-worker-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    /// Pool sized to the machine (at least 1, at most `cap`).
+    pub fn machine_sized(cap: usize) -> ThreadPool {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(cap.max(1));
+        ThreadPool::new(n)
+    }
+
+    /// Submit a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut guard = self.queue.jobs.lock().unwrap();
+        assert!(!guard.1, "submit after shutdown");
+        guard.0.push(Box::new(job));
+        drop(guard);
+        self.queue.cv.notify_one();
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(q: &JobQueue) {
+    loop {
+        let job = {
+            let mut guard = q.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = guard.0.pop() {
+                    break job;
+                }
+                if guard.1 {
+                    return;
+                }
+                guard = q.cv.wait(guard).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut guard = self.queue.jobs.lock().unwrap();
+            guard.1 = true;
+        }
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Apply `f` to every item, in parallel across up to `threads` workers,
+/// preserving input order in the output. Panics in `f` propagate.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().expect("item taken twice");
+                let out = f(item);
+                *outputs[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing output"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop waits for drain.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..1000).collect::<Vec<i64>>(), 8, |x| x * x);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as i64) * (i as i64));
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        let out = parallel_map(vec![5], 4, |x| x + 1);
+        assert_eq!(out, vec![6]);
+    }
+
+    #[test]
+    fn machine_sized_at_least_one() {
+        let pool = ThreadPool::machine_sized(64);
+        assert!(pool.n_workers() >= 1);
+    }
+}

@@ -1,0 +1,63 @@
+//! # hroofline — Hierarchical Roofline Performance Analysis for Deep Learning
+//!
+//! A production-shaped reimplementation of the measurement stack from
+//! *"Hierarchical Roofline Performance Analysis for Deep Learning
+//! Applications"* (Wang, Yang, Farrell, Kurth, Williams; CS.DC 2020):
+//!
+//! * [`ert`] — the Empirical Roofline Toolkit: micro-kernel sweeps for
+//!   machine characterization across data precisions and matrix units
+//!   (paper §II-A, Fig. 1, Table I, Fig. 2).
+//! * [`profiler`] — an Nsight-Compute-analog metric collection layer using
+//!   the paper's exact PerfWorks metric names (paper §II-B, Table II).
+//! * [`sim`] — a V100-class kernel-granularity performance simulator that
+//!   produces those counters (pipelines, hierarchical caches, launch
+//!   overhead) — the hardware substrate this repo substitutes for a real
+//!   GPU + Nsight (see DESIGN.md §1).
+//! * [`dl`] — the profiling subject: an operator-graph deep-learning
+//!   framework model with a DeepCAM (DeepLabv3+) network builder,
+//!   autodiff, AMP (O0/O1/O2) and two framework lowering personalities
+//!   (TensorFlow-like, PyTorch-like) that emit kernel traces.
+//! * [`roofline`] — the hierarchical Roofline model itself plus SVG chart
+//!   and text-table rendering (Figs 3–9).
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them natively; used by
+//!   the end-to-end DeepCAM-lite training example.
+//! * [`report`] — one reproduction harness per paper table/figure.
+//! * [`coordinator`] — job orchestration: sweeps, output layout, the
+//!   end-to-end train driver.
+//!
+//! Substrate modules ([`util`], [`cli`], [`exec`], [`prop`],
+//! [`bench_harness`]) replace crates unavailable in the offline build
+//! (clap/tokio/proptest/criterion/serde).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hroofline::device::GpuSpec;
+//! use hroofline::dl::{deepcam, lower, amp};
+//! use hroofline::profiler::Session;
+//! use hroofline::roofline::RooflineChart;
+//!
+//! let v100 = GpuSpec::v100();
+//! let net = deepcam::deepcam(&deepcam::DeepCamConfig::paper());
+//! let trace = lower::tensorflow(&net, amp::Policy::O1).forward;
+//! let profile = Session::standard(&v100).profile(&trace);
+//! let model = hroofline::roofline::RooflineModel::from_profile(&v100, &profile);
+//! let chart = RooflineChart::hierarchical(&model, "TF DeepCAM forward");
+//! std::fs::write("roofline.svg", chart.to_svg()).unwrap();
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod device;
+pub mod dl;
+pub mod ert;
+pub mod exec;
+pub mod profiler;
+pub mod prop;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,72 @@
+//! `repro` — the hroofline command-line interface.
+//!
+//! Subcommands map onto the paper's workflow:
+//!   ert      machine characterization (§II-A): empirical host sweep
+//!            and/or modeled V100 sweep; writes Fig. 1 data + SVG
+//!   metrics  list/inspect the Nsight-analog metric registry (Table II)
+//!   profile  application characterization (§II-B): lower DeepCAM under
+//!            a framework personality + AMP policy, collect counters,
+//!            print the kernel table, write the hierarchical roofline
+//!   report   regenerate paper artifacts (figures/tables) into out/
+//!   train    end-to-end: run the AOT-compiled DeepCAM-lite training
+//!            loop through PJRT, logging the loss curve
+//!
+//! Run `repro <cmd> --help` for flags.
+
+use hroofline::cli::{App, Cmd};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = App::new("repro", "Hierarchical Roofline analysis for deep learning (CS.DC 2020 reproduction)")
+        .command(
+            Cmd::new("ert", "Machine characterization sweeps (Fig. 1, Tab. I, Fig. 2)")
+                .flag("mode", "modeled", "modeled | empirical | both")
+                .flag("out", "out/ert", "output directory")
+                .switch("quick", "reduced sweep grid"),
+        )
+        .command(Cmd::new("metrics", "List the Nsight-analog metric registry (Tab. II)"))
+        .command(
+            Cmd::new("profile", "Profile DeepCAM under a framework personality (Figs 3-7)")
+                .flag("framework", "tensorflow", "tensorflow | pytorch")
+                .flag("phase", "forward", "forward | backward | optimizer | all")
+                .flag("amp", "O1", "O0 | O1 | O2 | off | manual-fp16")
+                .flag("scale", "paper", "paper | lite")
+                .flag("out", "out/profile", "output directory"),
+        )
+        .command(
+            Cmd::new("report", "Regenerate paper tables/figures into out/report")
+                .flag("only", "all", "all | fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9 | tab1 | tab3")
+                .flag("out", "out/report", "output directory"),
+        )
+        .command(
+            Cmd::new("train", "End-to-end PJRT training of DeepCAM-lite (loss curve)")
+                .flag("steps", "100", "training steps")
+                .flag("artifacts", "artifacts", "artifact directory")
+                .flag("out", "out/train", "output directory")
+                .flag("log-every", "10", "steps between loss log lines"),
+        );
+
+    let (cmd, parsed) = match app.dispatch(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(2);
+        }
+    };
+
+    let result = match cmd.as_str() {
+        "ert" => hroofline::coordinator::cmd_ert(&parsed),
+        "metrics" => hroofline::coordinator::cmd_metrics(&parsed),
+        "profile" => hroofline::coordinator::cmd_profile(&parsed),
+        "report" => hroofline::coordinator::cmd_report(&parsed),
+        "train" => hroofline::coordinator::cmd_train(&parsed),
+        other => {
+            eprintln!("unhandled command {other}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,200 @@
+//! Metric registry: the structured PerfWorks naming convention.
+//!
+//! Nsight Compute metric names decompose as
+//! `unit__counter_name.rollup[.submetric]` — e.g.
+//! `sm__cycles_elapsed.avg.per_second` is unit `sm`, counter
+//! `cycles_elapsed`, rollup `avg`, submetric `per_second` (paper §II-B:
+//! "components such as unit, subunit, interface, counter name, rollup
+//! metric and submetric"). The registry parses names, validates them
+//! against the known set, and groups them into collection passes.
+
+use std::collections::BTreeSet;
+
+use crate::sim::counters::names;
+
+/// A parsed metric name.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Metric {
+    pub raw: String,
+    pub unit: String,
+    pub counter: String,
+    pub rollup: String,
+    pub submetric: Option<String>,
+}
+
+/// Metric-name error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MetricError {
+    #[error("malformed metric name '{0}': expected unit__counter.rollup[.submetric]")]
+    Malformed(String),
+    #[error("unknown metric '{0}' (not in the Table II set)")]
+    Unknown(String),
+}
+
+impl Metric {
+    /// Parse a metric name into its structural components.
+    pub fn parse(name: &str) -> Result<Metric, MetricError> {
+        let (unit, rest) = name
+            .split_once("__")
+            .ok_or_else(|| MetricError::Malformed(name.into()))?;
+        let mut dot_parts = rest.split('.');
+        let counter = dot_parts
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| MetricError::Malformed(name.into()))?;
+        let rollup = dot_parts
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| MetricError::Malformed(name.into()))?;
+        let submetric = dot_parts.next().map(|s| s.to_string());
+        if dot_parts.next().is_some() || unit.is_empty() {
+            return Err(MetricError::Malformed(name.into()));
+        }
+        Ok(Metric {
+            raw: name.to_string(),
+            unit: unit.to_string(),
+            counter: counter.to_string(),
+            rollup: rollup.to_string(),
+            submetric,
+        })
+    }
+}
+
+/// Registry of collectable metrics with pass planning.
+#[derive(Clone, Debug)]
+pub struct MetricRegistry {
+    known: BTreeSet<String>,
+    /// How many raw hardware counters one replay pass can gather — the
+    /// reason Nsight replays kernels (paper §II-B "kernel replay when
+    /// multiple metrics are being collected").
+    pub counters_per_pass: usize,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+impl MetricRegistry {
+    /// Registry holding the paper's Table II metric set.
+    pub fn standard() -> MetricRegistry {
+        MetricRegistry {
+            known: names::STANDARD.iter().map(|s| s.to_string()).collect(),
+            counters_per_pass: 4,
+        }
+    }
+
+    /// Validate + parse a requested metric list.
+    pub fn resolve(&self, requested: &[&str]) -> Result<Vec<Metric>, MetricError> {
+        requested
+            .iter()
+            .map(|name| {
+                if !self.known.contains(*name) {
+                    return Err(MetricError::Unknown(name.to_string()));
+                }
+                Metric::parse(name)
+            })
+            .collect()
+    }
+
+    /// All known metric names (stable order).
+    pub fn all(&self) -> Vec<&str> {
+        self.known.iter().map(|s| s.as_str()).collect()
+    }
+
+    /// Plan replay passes: metrics sharing a hardware unit can often be
+    /// gathered together; we model the constraint as a flat
+    /// counters-per-pass budget, with the *same-unit grouping* Nsight
+    /// uses (metrics of one unit are packed into the same pass first).
+    pub fn plan_passes(&self, metrics: &[Metric]) -> Vec<Vec<Metric>> {
+        let mut sorted: Vec<Metric> = metrics.to_vec();
+        sorted.sort_by(|a, b| (&a.unit, &a.raw).cmp(&(&b.unit, &b.raw)));
+        // Derived submetrics (e.g. .per_second) ride along with their base
+        // counter and don't consume a slot.
+        let mut passes: Vec<Vec<Metric>> = Vec::new();
+        let mut current: Vec<Metric> = Vec::new();
+        let mut slots = 0usize;
+        for m in sorted {
+            let consumes_slot = m.submetric.is_none();
+            if consumes_slot && slots == self.counters_per_pass {
+                passes.push(std::mem::take(&mut current));
+                slots = 0;
+            }
+            if consumes_slot {
+                slots += 1;
+            }
+            current.push(m);
+        }
+        if !current.is_empty() {
+            passes.push(current);
+        }
+        passes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_structured_name() {
+        let m = Metric::parse("sm__cycles_elapsed.avg.per_second").unwrap();
+        assert_eq!(m.unit, "sm");
+        assert_eq!(m.counter, "cycles_elapsed");
+        assert_eq!(m.rollup, "avg");
+        assert_eq!(m.submetric.as_deref(), Some("per_second"));
+
+        let m = Metric::parse("l1tex__t_bytes.sum").unwrap();
+        assert_eq!(m.unit, "l1tex");
+        assert_eq!(m.counter, "t_bytes");
+        assert_eq!(m.rollup, "sum");
+        assert_eq!(m.submetric, None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Metric::parse("nounit.sum").is_err());
+        assert!(Metric::parse("sm__").is_err());
+        assert!(Metric::parse("sm__cycles").is_err());
+        assert!(Metric::parse("sm__a.b.c.d").is_err());
+        assert!(Metric::parse("__x.sum").is_err());
+    }
+
+    #[test]
+    fn registry_knows_table2() {
+        let reg = MetricRegistry::standard();
+        let resolved = reg.resolve(&names::STANDARD).unwrap();
+        assert_eq!(resolved.len(), 15);
+    }
+
+    #[test]
+    fn registry_rejects_unknown() {
+        let reg = MetricRegistry::standard();
+        let err = reg.resolve(&["sm__bogus_counter.sum"]).unwrap_err();
+        assert!(matches!(err, MetricError::Unknown(_)));
+    }
+
+    #[test]
+    fn pass_planning_respects_budget() {
+        let reg = MetricRegistry::standard();
+        let metrics = reg.resolve(&names::STANDARD).unwrap();
+        let passes = reg.plan_passes(&metrics);
+        // 14 slot-consuming counters (per_second rides along) at 4/pass
+        // => 4 passes.
+        assert_eq!(passes.len(), 4);
+        let total: usize = passes.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 15);
+        for pass in &passes {
+            let slots = pass.iter().filter(|m| m.submetric.is_none()).count();
+            assert!(slots <= reg.counters_per_pass);
+        }
+    }
+
+    #[test]
+    fn single_metric_single_pass() {
+        let reg = MetricRegistry::standard();
+        let metrics = reg.resolve(&[names::DRAM_BYTES]).unwrap();
+        assert_eq!(reg.plan_passes(&metrics).len(), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! `nsim-cu` — the Nsight-Compute-analog application-characterization
+//! layer (paper §II-B).
+//!
+//! Responsibilities, mirroring the tool the paper describes:
+//!
+//! * a **metric registry** ([`metrics`]) that parses and validates the
+//!   structured `unit__counter.rollup.submetric` naming convention;
+//! * **collection sessions** ([`session`]): a session takes a kernel
+//!   trace and a metric list, *replays* the trace once per collection
+//!   pass (Nsight's kernel-replay behaviour when more metrics are
+//!   requested than fit one pass), checks execution determinism across
+//!   passes, serializes streams (as Nsight 2020.1.0 does), and charges a
+//!   per-kernel profiling overhead;
+//! * **aggregation** ([`profile`]): invocations of the same kernel are
+//!   summed — "the data presented on these Roofline charts is the
+//!   aggregation of all these invocations of the same kernel" (§IV) —
+//!   and derived quantities (time via Eq. 5, FLOPs via add+2·fma+mul,
+//!   TC FLOPs via Eq. 6, AI per level) are exposed per kernel.
+
+pub mod export;
+pub mod metrics;
+pub mod profile;
+pub mod session;
+
+pub use metrics::{Metric, MetricRegistry};
+pub use profile::{KernelProfile, Profile};
+pub use session::{Session, SessionConfig};

@@ -1,0 +1,252 @@
+//! Aggregated application profiles: the output of a collection session
+//! and the input to Roofline chart construction.
+
+use std::collections::BTreeMap;
+
+use crate::device::{GpuSpec, MemLevel, Precision};
+use crate::sim::counters::CounterSet;
+
+/// Aggregate over all invocations of one kernel (keyed by kernel name),
+/// as the paper plots: "there could be many invocations of the same
+/// kernel and the data presented ... is the aggregation" (§IV).
+#[derive(Clone, Debug)]
+pub struct KernelProfile {
+    pub name: String,
+    pub invocations: u64,
+    pub counters: CounterSet,
+    /// FLOPs per tensor instruction of the profiled device (Eq. 6 factor).
+    pub flops_per_tensor_inst: f64,
+}
+
+impl KernelProfile {
+    /// Aggregated run time over all invocations (Eq. 5).
+    pub fn seconds(&self) -> f64 {
+        self.counters.elapsed_seconds()
+    }
+
+    /// Total FLOPs over all invocations.
+    pub fn flops(&self) -> f64 {
+        self.counters.total_flops(self.flops_per_tensor_inst)
+    }
+
+    /// FLOPs executed on the tensor pipe.
+    pub fn tensor_flops(&self) -> f64 {
+        self.counters.tensor_flops(self.flops_per_tensor_inst)
+    }
+
+    /// CUDA-core FLOPs for one precision.
+    pub fn flops_precision(&self, p: Precision) -> f64 {
+        self.counters.flops(p)
+    }
+
+    /// Sustained performance, FLOP/s.
+    pub fn flops_per_sec(&self) -> f64 {
+        let s = self.seconds();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.flops() / s
+        }
+    }
+
+    /// Arithmetic intensity at a memory level.
+    pub fn ai(&self, level: MemLevel) -> Option<f64> {
+        self.counters
+            .arithmetic_intensity(level, self.flops_per_tensor_inst)
+    }
+
+    /// Whether the kernel performed zero floating-point work (§IV-D).
+    pub fn is_zero_ai(&self) -> bool {
+        self.flops() == 0.0
+    }
+
+    /// Whether the majority of FLOPs ran on the tensor pipe.
+    pub fn is_tensor_dominated(&self) -> bool {
+        self.flops() > 0.0 && self.tensor_flops() > 0.5 * self.flops()
+    }
+}
+
+/// A full application profile: per-kernel aggregates plus session
+/// bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    kernels: BTreeMap<String, KernelProfile>,
+    /// Number of replay passes the session used.
+    pub passes: u64,
+    /// Wall overhead the profiler itself added (replays + serialization).
+    pub profiling_overhead_s: f64,
+}
+
+impl Profile {
+    pub fn new() -> Profile {
+        Profile::default()
+    }
+
+    /// Merge one kernel invocation's counters into the aggregate.
+    pub fn record(
+        &mut self,
+        name: &str,
+        invocations: u64,
+        counters: &CounterSet,
+        spec: &GpuSpec,
+    ) {
+        let entry = self
+            .kernels
+            .entry(name.to_string())
+            .or_insert_with(|| KernelProfile {
+                name: name.to_string(),
+                invocations: 0,
+                counters: CounterSet::new(),
+                flops_per_tensor_inst: spec.flops_per_tensor_inst as f64,
+            });
+        entry.invocations += invocations;
+        entry.counters.accumulate(counters);
+    }
+
+    /// Record `invocations` identical executions in one accumulate by
+    /// scaling the counters (§Perf L3-2; valid because deterministic
+    /// invocations of one kernel observe identical counters).
+    pub fn record_scaled(
+        &mut self,
+        name: &str,
+        invocations: u64,
+        counters: &CounterSet,
+        spec: &GpuSpec,
+    ) {
+        if invocations == 0 {
+            return;
+        }
+        let mut scaled = CounterSet::new();
+        for (metric, value) in counters.metrics() {
+            if metric == crate::sim::counters::names::CYCLES_PER_SEC {
+                scaled.set(metric, value);
+            } else {
+                scaled.set(metric, value * invocations as f64);
+            }
+        }
+        self.record(name, invocations, &scaled, spec);
+    }
+
+    pub fn kernel(&self, name: &str) -> Option<&KernelProfile> {
+        self.kernels.get(name)
+    }
+
+    pub fn kernels(&self) -> impl Iterator<Item = &KernelProfile> {
+        self.kernels.values()
+    }
+
+    pub fn n_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Total GPU time across kernels (serialized execution — Nsight
+    /// 2020.1.0 serializes multi-stream launches, §II-B).
+    pub fn total_seconds(&self) -> f64 {
+        self.kernels.values().map(|k| k.seconds()).sum()
+    }
+
+    /// Total invocations across kernels.
+    pub fn total_invocations(&self) -> u64 {
+        self.kernels.values().map(|k| k.invocations).sum()
+    }
+
+    /// Kernels sorted by descending aggregated run time.
+    pub fn by_time(&self) -> Vec<&KernelProfile> {
+        let mut ks: Vec<&KernelProfile> = self.kernels.values().collect();
+        ks.sort_by(|a, b| b.seconds().partial_cmp(&a.seconds()).unwrap());
+        ks
+    }
+
+    /// Runtime share of the single hottest kernel (Fig. 3 caption: the
+    /// dominant TF forward kernel consumes 33% of run time).
+    pub fn top_kernel_time_share(&self) -> f64 {
+        let total = self.total_seconds();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.by_time()
+            .first()
+            .map(|k| k.seconds() / total)
+            .unwrap_or(0.0)
+    }
+
+    /// (zero-AI invocations, total invocations) — Table III census.
+    pub fn zero_ai_census(&self) -> (u64, u64) {
+        let zero: u64 = self
+            .kernels
+            .values()
+            .filter(|k| k.is_zero_ai())
+            .map(|k| k.invocations)
+            .sum();
+        (zero, self.total_invocations())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{self, KernelDesc};
+
+    fn spec() -> GpuSpec {
+        GpuSpec::v100()
+    }
+
+    fn profile_of(kernels: &[(&str, u64, KernelDesc)]) -> Profile {
+        let spec = spec();
+        let mut p = Profile::new();
+        for (name, inv, k) in kernels {
+            let c = sim::simulate(&spec, k);
+            for _ in 0..*inv {
+                p.record(name, 1, &c, &spec);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn aggregation_sums_invocations() {
+        let k = KernelDesc::streaming_elementwise("relu", 1 << 18, Precision::Fp32, 1);
+        let p = profile_of(&[("relu", 3, k)]);
+        let kp = p.kernel("relu").unwrap();
+        assert_eq!(kp.invocations, 3);
+        // 3 invocations => 3x the single-run flops.
+        let single = (1u64 << 18) * 2;
+        assert_eq!(kp.flops() as u64, 3 * single);
+    }
+
+    #[test]
+    fn by_time_sorted_desc() {
+        let big = KernelDesc::streaming_elementwise("big", 1 << 24, Precision::Fp32, 2);
+        let small = KernelDesc::streaming_elementwise("small", 1 << 12, Precision::Fp32, 2);
+        let p = profile_of(&[("big", 1, big), ("small", 1, small)]);
+        let order: Vec<&str> = p.by_time().iter().map(|k| k.name.as_str()).collect();
+        assert_eq!(order, vec!["big", "small"]);
+        assert!(p.top_kernel_time_share() > 0.5);
+    }
+
+    #[test]
+    fn zero_ai_census_counts_invocations() {
+        let cast = KernelDesc::streaming_elementwise("cast", 1 << 16, Precision::Fp16, 0);
+        let fma = KernelDesc::streaming_elementwise("fma", 1 << 16, Precision::Fp32, 4);
+        let p = profile_of(&[("cast", 10, cast), ("fma", 5, fma)]);
+        let (zero, total) = p.zero_ai_census();
+        assert_eq!(zero, 10);
+        assert_eq!(total, 15);
+    }
+
+    #[test]
+    fn tensor_domination_flag() {
+        let spec = spec();
+        let g = KernelDesc::gemm("hmma", 1024, 1024, 1024, Precision::Fp16, true, 64, &spec);
+        let p = profile_of(&[("hmma", 1, g)]);
+        assert!(p.kernel("hmma").unwrap().is_tensor_dominated());
+    }
+
+    #[test]
+    fn empty_profile_is_sane() {
+        let p = Profile::new();
+        assert_eq!(p.total_seconds(), 0.0);
+        assert_eq!(p.top_kernel_time_share(), 0.0);
+        assert_eq!(p.zero_ai_census(), (0, 0));
+    }
+}

@@ -1,0 +1,285 @@
+//! Collection sessions: replaying a kernel trace to gather metrics.
+//!
+//! Mirrors the Nsight Compute behaviours the paper leans on (§II-B,
+//! §III-B):
+//!
+//! * **kernel replay** — when the requested metrics need more hardware
+//!   counters than one pass can gather, the kernel set is re-executed
+//!   once per pass;
+//! * **determinism check** — "these metrics can be collected on separate
+//!   runs as well, as long as the execution of the application is
+//!   deterministic"; the session verifies counters agree across passes
+//!   and reports a [`SessionError::NonDeterministic`] otherwise (the
+//!   paper hit this with TensorFlow autotuning and fixed it with
+//!   tensorflow-determinism);
+//! * **stream serialization** — "as of 2020.1.0, Nsight Compute
+//!   serializes multi-stream execution": per-stream overlap is ignored
+//!   when profiling (the schedule layer can still model overlap for
+//!   un-profiled runs);
+//! * **profiling overhead** — each pass costs a per-kernel replay setup;
+//!   the session accounts it so `repro profile` can report overhead like
+//!   the real tool.
+
+use crate::device::GpuSpec;
+use crate::profiler::metrics::{Metric, MetricRegistry};
+use crate::profiler::profile::Profile;
+use crate::sim::counters::names;
+use crate::sim::kernel::KernelInvocation;
+use crate::sim::{self, CounterSet};
+
+/// Session configuration.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Metrics to collect (must resolve in the registry).
+    pub metrics: Vec<String>,
+    /// Collect one metric per application execution (the paper's §III-B
+    /// protocol "to minimize the profiling overhead" distortion); when
+    /// false, pack metrics into passes.
+    pub one_metric_per_run: bool,
+    /// Warm-up iterations excluded from collection (paper: 5-iteration
+    /// warm-up loop before the profiled region).
+    pub warmup_iterations: u32,
+    /// Per-kernel, per-pass replay overhead in seconds.
+    pub replay_overhead_s: f64,
+    /// Inject nondeterminism (test hook modelling TF autotuning; the
+    /// library user never sets this).
+    pub nondeterminism: Option<u64>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            metrics: names::STANDARD.iter().map(|s| s.to_string()).collect(),
+            one_metric_per_run: false,
+            warmup_iterations: 5,
+            replay_overhead_s: 150e-6,
+            nondeterminism: None,
+        }
+    }
+}
+
+/// Session failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    #[error(transparent)]
+    Metric(#[from] crate::profiler::metrics::MetricError),
+    #[error(
+        "non-deterministic execution detected for kernel '{kernel}' on metric '{metric}' \
+         across replay passes ({a} vs {b}); enable determinism (cf. tensorflow-determinism)"
+    )]
+    NonDeterministic {
+        kernel: String,
+        metric: String,
+        a: f64,
+        b: f64,
+    },
+}
+
+/// A profiling session bound to a device.
+pub struct Session<'a> {
+    spec: &'a GpuSpec,
+    registry: MetricRegistry,
+    config: SessionConfig,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(spec: &'a GpuSpec, config: SessionConfig) -> Session<'a> {
+        Session {
+            spec,
+            registry: MetricRegistry::standard(),
+            config,
+        }
+    }
+
+    /// Standard hierarchical-Roofline session: the full Table II set.
+    pub fn standard(spec: &'a GpuSpec) -> Session<'a> {
+        Session::new(spec, SessionConfig::default())
+    }
+
+    /// Profile a trace, aggregating by kernel name. Panics never; returns
+    /// [`SessionError`] on unknown metrics or nondeterminism.
+    pub fn try_profile(&self, trace: &[KernelInvocation]) -> Result<Profile, SessionError> {
+        let metric_refs: Vec<&str> = self.config.metrics.iter().map(|s| s.as_str()).collect();
+        let metrics = self.registry.resolve(&metric_refs)?;
+        let passes: Vec<Vec<Metric>> = if self.config.one_metric_per_run {
+            metrics.iter().map(|m| vec![m.clone()]).collect()
+        } else {
+            self.registry.plan_passes(&metrics)
+        };
+
+        let mut profile = Profile::new();
+        profile.passes = passes.len() as u64;
+
+        // Simulate each kernel once per pass; each pass observes its own
+        // metric subset. Counters must agree across passes (determinism).
+        //
+        // Perf (§Perf L3-1 in EXPERIMENTS.md): when the execution target
+        // is deterministic (no nondeterminism injected), all replay
+        // passes observe identical counters, so the kernel is simulated
+        // once and the counter set is reused across passes — the replay
+        // accounting (overhead, pass census) is unchanged. With the
+        // nondeterminism hook armed, every pass re-executes and the
+        // cross-pass consistency check runs exactly as the real tool's
+        // workflow requires.
+        for inv in trace {
+            let mut merged = CounterSet::new();
+            let baseline = sim::simulate(self.spec, &inv.kernel);
+            if self.config.nondeterminism.is_none() {
+                // §Perf L3-3: deterministic fast path — no per-pass
+                // counter clones; copy the requested metrics straight
+                // from the single simulation.
+                for pass in &passes {
+                    for m in pass {
+                        merged.set(&m.raw, baseline.get(&m.raw));
+                    }
+                }
+                merged.set(names::CYCLES, baseline.get(names::CYCLES));
+                merged.set(names::CYCLES_PER_SEC, baseline.get(names::CYCLES_PER_SEC));
+                profile.record_scaled(&inv.kernel.name, inv.invocations, &merged, self.spec);
+                profile.profiling_overhead_s +=
+                    passes.len() as f64 * inv.invocations as f64 * self.config.replay_overhead_s;
+                continue;
+            }
+            let mut reference: Option<CounterSet> = None;
+            for (pass_idx, pass) in passes.iter().enumerate() {
+                let observed = if let Some(seed) = self.config.nondeterminism {
+                    // Model autotuning flakiness: perturb cycle counts per
+                    // pass, as a re-autotuned algorithm would.
+                    let mut fresh = sim::simulate(self.spec, &inv.kernel);
+                    let jitter = 1.0
+                        + 0.05
+                            * (((seed
+                                .wrapping_mul(pass_idx as u64 + 1)
+                                .wrapping_mul(inv.kernel.name.len() as u64 + 1))
+                                % 7) as f64);
+                    fresh.set(names::CYCLES, fresh.get(names::CYCLES) * jitter);
+                    // Determinism check on the time base, which every
+                    // pass re-measures.
+                    if let Some(ref first) = reference {
+                        let a = first.get(names::CYCLES);
+                        let b = fresh.get(names::CYCLES);
+                        if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                            return Err(SessionError::NonDeterministic {
+                                kernel: inv.kernel.name.clone(),
+                                metric: names::CYCLES.to_string(),
+                                a,
+                                b,
+                            });
+                        }
+                    } else {
+                        reference = Some(fresh.clone());
+                    }
+                    fresh
+                } else {
+                    baseline.clone()
+                };
+                // Keep only this pass's metrics (plus the time base).
+                for m in pass {
+                    merged.set(&m.raw, observed.get(&m.raw));
+                }
+                merged.set(names::CYCLES, observed.get(names::CYCLES));
+                merged.set(names::CYCLES_PER_SEC, observed.get(names::CYCLES_PER_SEC));
+            }
+            // One merged CounterSet scaled by the invocation count
+            // (invocations of one kernel are identical in a deterministic
+            // app) — §Perf L3-2: scale once instead of re-accumulating
+            // per invocation.
+            profile.record_scaled(&inv.kernel.name, inv.invocations, &merged, self.spec);
+            profile.profiling_overhead_s +=
+                passes.len() as f64 * inv.invocations as f64 * self.config.replay_overhead_s;
+        }
+        Ok(profile)
+    }
+
+    /// Convenience: standard sessions on valid traces cannot fail.
+    pub fn profile(&self, trace: &[KernelInvocation]) -> Profile {
+        self.try_profile(trace).expect("standard session must succeed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Precision;
+    use crate::sim::kernel::KernelDesc;
+
+    fn trace() -> Vec<KernelInvocation> {
+        vec![
+            KernelInvocation {
+                kernel: KernelDesc::streaming_elementwise("relu", 1 << 18, Precision::Fp32, 1),
+                invocations: 4,
+                stream: 0,
+            },
+            KernelInvocation {
+                kernel: KernelDesc::streaming_elementwise("cast", 1 << 18, Precision::Fp16, 0),
+                invocations: 2,
+                stream: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn standard_session_collects_everything() {
+        let spec = GpuSpec::v100();
+        let p = Session::standard(&spec).profile(&trace());
+        assert_eq!(p.n_kernels(), 2);
+        assert_eq!(p.total_invocations(), 6);
+        let relu = p.kernel("relu").unwrap();
+        assert!(relu.flops() > 0.0);
+        assert!(relu.seconds() > 0.0);
+        assert!(p.kernel("cast").unwrap().is_zero_ai());
+    }
+
+    #[test]
+    fn multi_pass_equals_single_pass_on_deterministic_app() {
+        let spec = GpuSpec::v100();
+        let packed = Session::standard(&spec).profile(&trace());
+        let mut cfg = SessionConfig::default();
+        cfg.one_metric_per_run = true;
+        let separate = Session::new(&spec, cfg).profile(&trace());
+        // "these metrics can be collected on separate runs as well, as
+        // long as the execution ... is deterministic" (§II-B3).
+        for k in packed.kernels() {
+            let other = separate.kernel(&k.name).unwrap();
+            assert!((k.flops() - other.flops()).abs() < 1e-6);
+            assert!((k.seconds() - other.seconds()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn one_metric_per_run_uses_more_passes_and_overhead() {
+        let spec = GpuSpec::v100();
+        let packed = Session::standard(&spec).profile(&trace());
+        let mut cfg = SessionConfig::default();
+        cfg.one_metric_per_run = true;
+        let separate = Session::new(&spec, cfg).profile(&trace());
+        assert!(separate.passes > packed.passes);
+        assert!(separate.profiling_overhead_s > packed.profiling_overhead_s);
+    }
+
+    #[test]
+    fn nondeterminism_detected() {
+        let spec = GpuSpec::v100();
+        let mut cfg = SessionConfig::default();
+        cfg.nondeterminism = Some(1234);
+        let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
+        assert!(matches!(err, SessionError::NonDeterministic { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_metric_rejected() {
+        let spec = GpuSpec::v100();
+        let mut cfg = SessionConfig::default();
+        cfg.metrics = vec!["sm__no_such.sum".into()];
+        let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
+        assert!(matches!(err, SessionError::Metric(_)));
+    }
+
+    #[test]
+    fn empty_trace_empty_profile() {
+        let spec = GpuSpec::v100();
+        let p = Session::standard(&spec).profile(&[]);
+        assert_eq!(p.n_kernels(), 0);
+        assert_eq!(p.profiling_overhead_s, 0.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Figs 3–9 — hierarchical Rooflines of DeepCAM under the two framework
+//! personalities, phases, and AMP settings:
+//!
+//! | fig | framework | phase | AMP |
+//! |-----|-----------|-------|-----|
+//! | 3 | TensorFlow | forward | on (default) |
+//! | 4 | TensorFlow | backward (incl. update) | on |
+//! | 5 | PyTorch | forward | O1 |
+//! | 6 | PyTorch | backward | O1 |
+//! | 7 | PyTorch | optimizer | O1 |
+//! | 8 | TensorFlow | backward | manual FP16 |
+//! | 9 | PyTorch | backward | O0 |
+
+use anyhow::Result;
+
+use crate::device::GpuSpec;
+use crate::dl::deepcam::{deepcam, DeepCamConfig};
+use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
+use crate::dl::Policy;
+use crate::profiler::{Profile, Session};
+use crate::roofline::chart::RooflineChart;
+use crate::roofline::model::RooflineModel;
+use crate::util::Json;
+
+use super::Artifact;
+
+/// The experiment matrix entry for one figure.
+#[derive(Clone, Copy, Debug)]
+pub struct FigSpec {
+    pub id: &'static str,
+    pub framework: Framework,
+    pub phase: Phase,
+    pub policy: Policy,
+    pub title: &'static str,
+}
+
+pub const FIGS: [FigSpec; 7] = [
+    FigSpec { id: "fig3", framework: Framework::TensorFlow, phase: Phase::Forward, policy: Policy::O1, title: "Fig. 3 — TensorFlow DeepCAM forward (AMP)" },
+    FigSpec { id: "fig4", framework: Framework::TensorFlow, phase: Phase::Backward, policy: Policy::O1, title: "Fig. 4 — TensorFlow DeepCAM backward+update (AMP)" },
+    FigSpec { id: "fig5", framework: Framework::PyTorch, phase: Phase::Forward, policy: Policy::O1, title: "Fig. 5 — PyTorch DeepCAM forward (AMP O1)" },
+    FigSpec { id: "fig6", framework: Framework::PyTorch, phase: Phase::Backward, policy: Policy::O1, title: "Fig. 6 — PyTorch DeepCAM backward (AMP O1)" },
+    FigSpec { id: "fig7", framework: Framework::PyTorch, phase: Phase::Optimizer, policy: Policy::O1, title: "Fig. 7 — PyTorch DeepCAM optimizer step" },
+    FigSpec { id: "fig8", framework: Framework::TensorFlow, phase: Phase::Backward, policy: Policy::ManualFp16, title: "Fig. 8 — manual-FP16 TensorFlow backward" },
+    FigSpec { id: "fig9", framework: Framework::PyTorch, phase: Phase::Backward, policy: Policy::O0, title: "Fig. 9 — PyTorch backward, AMP O0" },
+];
+
+/// Profile one figure's (framework, phase, policy) at paper scale.
+pub fn profile_for(spec: &GpuSpec, fig: &FigSpec) -> (FrameworkTrace, Profile) {
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, fig.framework, fig.policy);
+    let profile = Session::standard(spec).profile(trace.phase(fig.phase));
+    (trace, profile)
+}
+
+pub fn generate(id: &str) -> Result<Artifact> {
+    let fig = FIGS
+        .iter()
+        .find(|f| f.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}'"))?;
+    let spec = GpuSpec::v100();
+    let (_trace, profile) = profile_for(&spec, fig);
+    let model = RooflineModel::from_profile(&spec, &profile);
+    model
+        .validate_bounds()
+        .map_err(|e| anyhow::anyhow!("roofline bound violated: {e}"))?;
+    let chart = RooflineChart::hierarchical(&model, fig.title);
+
+    let top = profile.by_time();
+    let top_share = profile.top_kernel_time_share();
+    let tc_time: f64 = top
+        .iter()
+        .filter(|k| k.is_tensor_dominated())
+        .map(|k| k.seconds())
+        .sum();
+    let total = profile.total_seconds();
+
+    let mut text = format!(
+        "{}\n\ntotal GPU time {} | kernels {} | invocations {} | \
+         top-kernel share {:.1}% | tensor-core time share {:.1}%\n\n{}",
+        fig.title,
+        crate::util::fmt::duration(total),
+        profile.n_kernels(),
+        profile.total_invocations(),
+        top_share * 100.0,
+        if total > 0.0 { tc_time / total * 100.0 } else { 0.0 },
+        chart.to_table().render()
+    );
+    text.push('\n');
+
+    Ok(Artifact {
+        id: fig.id.into(),
+        title: fig.title.into(),
+        text,
+        json: Json::obj(vec![
+            ("framework", Json::str(fig.framework.name())),
+            ("policy", Json::str(fig.policy.name())),
+            ("total_seconds", Json::num(total)),
+            ("n_kernels", Json::num(profile.n_kernels() as f64)),
+            ("top_kernel_time_share", Json::num(top_share)),
+            (
+                "tc_time_share",
+                Json::num(if total > 0.0 { tc_time / total } else { 0.0 }),
+            ),
+            (
+                "kernels",
+                Json::arr(top.iter().take(20).map(|k| {
+                    Json::obj(vec![
+                        ("name", Json::str(&k.name)),
+                        ("seconds", Json::num(k.seconds())),
+                        ("gflops_per_sec", Json::num(k.flops_per_sec() / 1e9)),
+                        ("tensor", Json::Bool(k.is_tensor_dominated())),
+                        ("invocations", Json::num(k.invocations as f64)),
+                    ])
+                })),
+            ),
+        ]),
+        svg: Some(chart.to_svg()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: &str) -> Json {
+        generate(id).unwrap().json
+    }
+
+    #[test]
+    fn fig3_tf_forward_dominant_tc_kernel() {
+        // Paper: dominant kernel w/ very high TC utilization, ~33% of
+        // runtime.
+        let j = meta("fig3");
+        let share = j.get("top_kernel_time_share").unwrap().as_f64().unwrap();
+        assert!((0.20..=0.60).contains(&share), "top share {share}");
+        let kernels = j.get("kernels").unwrap().as_arr().unwrap();
+        assert!(kernels[0].get("tensor").unwrap().as_bool().unwrap(),
+            "top TF fwd kernel is tensor-dominated");
+    }
+
+    #[test]
+    fn fig4_tf_backward_more_tc_time_than_forward() {
+        // Paper: backward has *more* compute-intensive TC kernels
+        // (41.9% of time near TC peak vs 33% fwd).
+        let f3 = meta("fig3");
+        let f4 = meta("fig4");
+        let tc3 = f3.get("tc_time_share").unwrap().as_f64().unwrap();
+        let tc4 = f4.get("tc_time_share").unwrap().as_f64().unwrap();
+        assert!(tc4 > 0.2, "tc share bwd {tc4}");
+        // Backward total time exceeds forward (paper: "generally more
+        // time-consuming").
+        let t3 = f3.get("total_seconds").unwrap().as_f64().unwrap();
+        let t4 = f4.get("total_seconds").unwrap().as_f64().unwrap();
+        assert!(t4 > t3, "bwd {t4} fwd {t3}");
+        let _ = tc3;
+    }
+
+    #[test]
+    fn fig5_pytorch_forward_no_dominant_kernel() {
+        let j = meta("fig5");
+        let share = j.get("top_kernel_time_share").unwrap().as_f64().unwrap();
+        let tf_share = meta("fig3")
+            .get("top_kernel_time_share")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(share < tf_share, "pt {share} vs tf {tf_share}");
+    }
+
+    #[test]
+    fn fig6_pytorch_backward_top_kernel_low_tflops_no_tc() {
+        // Paper: "the number one time-consuming kernel does not utilize
+        // Tensor Core and delivers only about 1 TFLOP/s".
+        let j = meta("fig6");
+        let top = &j.get("kernels").unwrap().as_arr().unwrap()[0];
+        assert!(!top.get("tensor").unwrap().as_bool().unwrap());
+        let gf = top.get("gflops_per_sec").unwrap().as_f64().unwrap();
+        assert!((300.0..3000.0).contains(&gf), "top kernel {gf} GFLOP/s");
+    }
+
+    #[test]
+    fn fig7_optimizer_memory_bound_low_flops() {
+        let j = meta("fig7");
+        let kernels = j.get("kernels").unwrap().as_arr().unwrap();
+        // All optimizer kernels well below 1 TFLOP/s (streaming).
+        for k in kernels {
+            let gf = k.get("gflops_per_sec").unwrap().as_f64().unwrap();
+            assert!(gf < 1000.0, "{k}");
+            assert!(!k.get("tensor").unwrap().as_bool().unwrap());
+        }
+    }
+
+    #[test]
+    fn fig8_manual_fp16_matches_fig4_amp() {
+        // The §IV-C equivalence: manual FP16 ≈ AMP backward performance.
+        let f4 = meta("fig4");
+        let f8 = meta("fig8");
+        let t4 = f4.get("total_seconds").unwrap().as_f64().unwrap();
+        let t8 = f8.get("total_seconds").unwrap().as_f64().unwrap();
+        assert!((t4 - t8).abs() / t4 < 0.05, "fig4 {t4} vs fig8 {t8}");
+    }
+
+    #[test]
+    fn fig9_o0_slower_and_no_tc() {
+        // O0 vs O1 backward: kernel time largely reduced by O1 and many
+        // kernels move to TC (§IV-C).
+        let f6 = meta("fig6");
+        let f9 = meta("fig9");
+        let t6 = f6.get("total_seconds").unwrap().as_f64().unwrap();
+        let t9 = f9.get("total_seconds").unwrap().as_f64().unwrap();
+        assert!(t9 > 1.3 * t6, "O0 {t9} vs O1 {t6}");
+        assert_eq!(f9.get("tc_time_share").unwrap().as_f64().unwrap(), 0.0);
+        assert!(f6.get("tc_time_share").unwrap().as_f64().unwrap() > 0.1);
+    }
+}

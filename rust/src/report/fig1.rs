@@ -1,0 +1,107 @@
+//! Fig. 1 — ERT machine characterization of the V100: compute ceilings
+//! for FP64 / FP32 / FP16 / Tensor Core plus L1/L2/HBM bandwidths,
+//! rendered as a roofline chart with no application points.
+
+use anyhow::Result;
+
+use crate::device::{GpuSpec, MemLevel};
+use crate::ert::modeled;
+use crate::ert::sweep::SweepConfig;
+use crate::roofline::chart::{ChartConfig, RooflineChart};
+use crate::roofline::model::{Ceilings, RooflineModel};
+use crate::util::{fmt, Json, Table};
+
+use super::Artifact;
+
+/// Paper reference values (TFLOP/s) for the validation table.
+pub const PAPER: [(&str, f64); 4] = [
+    ("FP64", 7.7),
+    ("FP32", 15.2),
+    ("FP16", 29.2),
+    ("TensorCore", 103.7),
+];
+
+pub fn generate() -> Result<Artifact> {
+    let spec = GpuSpec::v100();
+    let ceilings = modeled::characterize(&spec, &SweepConfig::standard());
+
+    let mut table = Table::new(&["ceiling", "paper (TFLOP/s)", "ours (TFLOP/s)", "err"]);
+    let mut json_rows = Vec::new();
+    for (label, paper_tf) in PAPER {
+        let ours = ceilings.compute(label).unwrap_or(0.0) / 1000.0;
+        let err = crate::util::stats::rel_diff(ours, paper_tf);
+        table.row(&[
+            label.to_string(),
+            format!("{paper_tf:.1}"),
+            format!("{ours:.1}"),
+            fmt::pct(err),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("label", Json::str(label)),
+            ("paper_tflops", Json::num(paper_tf)),
+            ("ours_tflops", Json::num(ours)),
+        ]));
+    }
+    let mut bw_table = Table::new(&["level", "GB/s (swept)"]);
+    for level in MemLevel::ALL {
+        bw_table.row(&[
+            level.name().to_string(),
+            format!("{:.0}", ceilings.bandwidth(level).unwrap_or(0.0)),
+        ]);
+    }
+
+    // Chart: device ceilings only (empty profile).
+    let model = RooflineModel {
+        ceilings: Ceilings::from_spec(&spec),
+        points: Vec::new(),
+        device_name: spec.name.clone(),
+    };
+    let chart = RooflineChart::new(
+        &model,
+        ChartConfig::paper_style("Fig. 1 — V100 Roofline ceilings (ERT, modeled)"),
+    );
+
+    let text = format!(
+        "Fig. 1 — ERT machine characterization (V100)\n\n{}\n{}",
+        table.render(),
+        bw_table.render()
+    );
+    Ok(Artifact {
+        id: "fig1".into(),
+        title: "ERT roofline ceilings (V100)".into(),
+        text,
+        json: Json::obj(vec![
+            ("ceilings", Json::arr(json_rows)),
+            (
+                "bandwidth_gbs",
+                Json::arr(MemLevel::ALL.iter().map(|&l| {
+                    Json::obj(vec![
+                        ("level", Json::str(l.name())),
+                        ("gbs", Json::num(ceilings.bandwidth(l).unwrap_or(0.0))),
+                    ])
+                })),
+            ),
+        ]),
+        svg: Some(chart.to_svg()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_artifact_matches_paper_within_7pct() {
+        let a = generate().unwrap();
+        let rows = a.json.get("ceilings").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        for row in rows {
+            let paper = row.get("paper_tflops").unwrap().as_f64().unwrap();
+            let ours = row.get("ours_tflops").unwrap().as_f64().unwrap();
+            let err = crate::util::stats::rel_diff(ours, paper);
+            assert!(err < 0.07, "{row}: err {err}");
+        }
+        assert!(a.svg.is_some());
+        assert!(a.text.contains("TensorCore"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Reproduction harnesses: one module per paper artifact.
+//!
+//! Every table and figure in the paper's evaluation has a generator here
+//! that produces (a) a text rendering for the terminal/EXPERIMENTS.md,
+//! (b) machine-readable JSON, and for the figures (c) an SVG chart in
+//! the paper's visual idiom. `repro report` and the `benches/` harnesses
+//! call into these.
+
+pub mod deepcam_figs;
+pub mod fig1;
+pub mod fig2;
+pub mod tab1;
+pub mod tab3;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// A rendered artifact.
+pub struct Artifact {
+    /// e.g. "fig3".
+    pub id: String,
+    /// One-line description.
+    pub title: String,
+    /// Text rendering (table or summary).
+    pub text: String,
+    /// Machine-readable payload.
+    pub json: crate::util::Json,
+    /// SVG chart, when the artifact is a figure.
+    pub svg: Option<String>,
+}
+
+impl Artifact {
+    /// Write text/json/svg files into `dir`.
+    pub fn write_to(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), &self.text)?;
+        std::fs::write(
+            dir.join(format!("{}.json", self.id)),
+            self.json.to_string_pretty(),
+        )?;
+        if let Some(svg) = &self.svg {
+            std::fs::write(dir.join(format!("{}.svg", self.id)), svg)?;
+        }
+        Ok(())
+    }
+}
+
+/// All artifact ids, in paper order.
+pub const ALL_IDS: [&str; 11] = [
+    "fig1", "tab1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "tab3",
+];
+
+/// Generate one artifact by id.
+pub fn generate(id: &str) -> Result<Artifact> {
+    match id {
+        "fig1" => fig1::generate(),
+        "tab1" => tab1::generate(),
+        "fig2" => fig2::generate(),
+        "fig3" | "fig4" | "fig5" | "fig6" | "fig7" | "fig8" | "fig9" => {
+            deepcam_figs::generate(id)
+        }
+        "tab3" => tab3::generate(),
+        other => anyhow::bail!("unknown artifact id '{other}' (have {ALL_IDS:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_error() {
+        assert!(generate("fig99").is_err());
+    }
+
+    #[test]
+    fn all_ids_unique() {
+        let mut ids = ALL_IDS.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), ALL_IDS.len());
+    }
+}

@@ -1,0 +1,63 @@
+//! Table I — the FP16 CUDA-core tuning ladder (v1 naive → v5 u32-only).
+
+use anyhow::Result;
+
+use crate::device::GpuSpec;
+use crate::ert::fp16_ladder::ladder;
+use crate::util::{fmt, Json, Table};
+
+use super::Artifact;
+
+pub fn generate() -> Result<Artifact> {
+    let spec = GpuSpec::v100();
+    let mut table = Table::new(&[
+        "Version",
+        "Implementation",
+        "Paper (TFLOP/s)",
+        "Model (TFLOP/s)",
+        "err",
+    ]);
+    let mut rows = Vec::new();
+    for v in ladder() {
+        let model = v.tflops(&spec);
+        table.row(&[
+            v.name.to_string(),
+            v.description.to_string(),
+            format!("{:.3}", v.paper_tflops),
+            format!("{model:.3}"),
+            fmt::pct(v.error_vs_paper(&spec)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("version", Json::str(v.name)),
+            ("description", Json::str(v.description)),
+            ("paper_tflops", Json::num(v.paper_tflops)),
+            ("model_tflops", Json::num(model)),
+        ]));
+    }
+    Ok(Artifact {
+        id: "tab1".into(),
+        title: "FP16 performance ladder on the CUDA core (Table I)".into(),
+        text: format!("Table I — FP16 CUDA-core tuning ladder (V100)\n\n{}", table.render()),
+        json: Json::obj(vec![("rows", Json::arr(rows))]),
+        svg: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab1_five_rows_in_order() {
+        let a = generate().unwrap();
+        let rows = a.json.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 5);
+        let tflops: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("model_tflops").unwrap().as_f64().unwrap())
+            .collect();
+        for w in tflops.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

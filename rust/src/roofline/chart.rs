@@ -1,0 +1,396 @@
+//! SVG rendering of hierarchical Roofline charts in the paper's idiom:
+//! log-log axes (AI in FLOPs/byte vs performance in GFLOP/s), horizontal
+//! compute ceilings, diagonal bandwidth ceilings, and per-kernel triplets
+//! of open circles — blue (L1), red (L2), green (HBM) — with circle
+//! radius proportional to aggregated kernel run time (Figs 3–9 reading
+//! guide in §IV).
+
+use crate::device::MemLevel;
+use crate::roofline::model::RooflineModel;
+use crate::util::Table;
+
+/// Chart dimensions and axis ranges.
+#[derive(Clone, Debug)]
+pub struct ChartConfig {
+    pub width: u32,
+    pub height: u32,
+    pub title: String,
+    /// AI axis range (log10 decades).
+    pub ai_min: f64,
+    pub ai_max: f64,
+    /// Performance axis range, FLOP/s.
+    pub perf_min: f64,
+    pub perf_max: f64,
+    /// Minimum/maximum circle radius in px ("we preset a minimum circle
+    /// size to make all kernels visible", §IV).
+    pub r_min: f64,
+    pub r_max: f64,
+}
+
+impl ChartConfig {
+    pub fn paper_style(title: &str) -> ChartConfig {
+        ChartConfig {
+            width: 900,
+            height: 620,
+            title: title.to_string(),
+            ai_min: 1e-2,
+            ai_max: 1e4,
+            perf_min: 1e9,    // 1 GFLOP/s
+            perf_max: 2e14,   // above the TC ceiling
+            r_min: 4.0,
+            r_max: 26.0,
+        }
+    }
+}
+
+/// A renderable chart: model + config.
+pub struct RooflineChart<'a> {
+    pub model: &'a RooflineModel,
+    pub config: ChartConfig,
+}
+
+fn level_color(level: MemLevel) -> &'static str {
+    match level {
+        MemLevel::L1 => "#1f6fd0",  // blue
+        MemLevel::L2 => "#d03030",  // red
+        MemLevel::Hbm => "#1f9d3a", // green
+    }
+}
+
+impl<'a> RooflineChart<'a> {
+    pub fn new(model: &'a RooflineModel, config: ChartConfig) -> RooflineChart<'a> {
+        RooflineChart { model, config }
+    }
+
+    /// Paper-styled hierarchical chart for a profile-derived model.
+    pub fn hierarchical(model: &'a RooflineModel, title: &str) -> RooflineChart<'a> {
+        RooflineChart::new(model, ChartConfig::paper_style(title))
+    }
+
+    // --- coordinate transforms (log-log) ---
+
+    fn x(&self, ai: f64) -> f64 {
+        let c = &self.config;
+        let frac = (ai.max(1e-12).log10() - c.ai_min.log10())
+            / (c.ai_max.log10() - c.ai_min.log10());
+        60.0 + frac * (c.width as f64 - 90.0)
+    }
+
+    fn y(&self, perf: f64) -> f64 {
+        let c = &self.config;
+        let frac = (perf.max(1.0).log10() - c.perf_min.log10())
+            / (c.perf_max.log10() - c.perf_min.log10());
+        (c.height as f64 - 50.0) - frac * (c.height as f64 - 90.0)
+    }
+
+    fn radius(&self, seconds: f64, max_seconds: f64) -> f64 {
+        let c = &self.config;
+        if max_seconds <= 0.0 || seconds <= 0.0 {
+            return c.r_min;
+        }
+        // Area ∝ runtime => radius ∝ sqrt(t).
+        (c.r_min + (c.r_max - c.r_min) * (seconds / max_seconds).sqrt()).clamp(c.r_min, c.r_max)
+    }
+
+    /// Render the chart as a standalone SVG document.
+    pub fn to_svg(&self) -> String {
+        let c = &self.config;
+        let mut svg = String::with_capacity(16 * 1024);
+        svg.push_str(&format!(
+            r##"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"##,
+            w = c.width,
+            h = c.height
+        ));
+        svg.push_str(&format!(
+            r##"<rect width="{}" height="{}" fill="white"/>"##,
+            c.width, c.height
+        ));
+        svg.push_str(&format!(
+            r##"<text x="{}" y="24" text-anchor="middle" font-size="16" font-family="sans-serif">{}</text>"##,
+            c.width / 2,
+            xml_escape(&c.title)
+        ));
+
+        self.push_axes(&mut svg);
+        self.push_bandwidth_ceilings(&mut svg);
+        self.push_compute_ceilings(&mut svg);
+        self.push_points(&mut svg);
+        self.push_legend(&mut svg);
+
+        svg.push_str("</svg>\n");
+        svg
+    }
+
+    fn push_axes(&self, svg: &mut String) {
+        let c = &self.config;
+        let x0 = 60.0;
+        let x1 = c.width as f64 - 30.0;
+        let y0 = c.height as f64 - 50.0;
+        let y1 = 40.0;
+        svg.push_str(&format!(
+            r##"<line x1="{x0}" y1="{y0}" x2="{x1}" y2="{y0}" stroke="black"/><line x1="{x0}" y1="{y0}" x2="{x0}" y2="{y1}" stroke="black"/>"##
+        ));
+        // Decade gridlines + labels.
+        let mut ai = self.config.ai_min;
+        while ai <= self.config.ai_max * 1.0001 {
+            let x = self.x(ai);
+            svg.push_str(&format!(
+                r##"<line x1="{x}" y1="{y0}" x2="{x}" y2="{y1}" stroke="#eeeeee"/><text x="{x}" y="{ly}" text-anchor="middle" font-size="10" font-family="sans-serif">{label}</text>"##,
+                ly = y0 + 16.0,
+                label = pow10_label(ai),
+            ));
+            ai *= 10.0;
+        }
+        let mut perf = self.config.perf_min;
+        while perf <= self.config.perf_max * 1.0001 {
+            let y = self.y(perf);
+            svg.push_str(&format!(
+                r##"<line x1="{x0}" y1="{y}" x2="{x1}" y2="{y}" stroke="#eeeeee"/><text x="{lx}" y="{yt}" text-anchor="end" font-size="10" font-family="sans-serif">{label}</text>"##,
+                lx = x0 - 6.0,
+                yt = y + 3.0,
+                label = perf_label(perf),
+            ));
+            perf *= 10.0;
+        }
+        svg.push_str(&format!(
+            r##"<text x="{cx}" y="{by}" text-anchor="middle" font-size="12" font-family="sans-serif">Arithmetic Intensity (FLOPs/Byte)</text>"##,
+            cx = (x0 + x1) / 2.0,
+            by = self.config.height as f64 - 14.0
+        ));
+        svg.push_str(&format!(
+            r##"<text x="18" y="{cy}" text-anchor="middle" font-size="12" font-family="sans-serif" transform="rotate(-90 18 {cy})">Performance (FLOP/s)</text>"##,
+            cy = (y0 + y1) / 2.0
+        ));
+    }
+
+    fn push_compute_ceilings(&self, svg: &mut String) {
+        for ceil in &self.model.ceilings.compute {
+            let y = self.y(ceil.flops_per_sec);
+            let x0 = 60.0;
+            let x1 = self.config.width as f64 - 30.0;
+            svg.push_str(&format!(
+                r##"<line x1="{x0}" y1="{y}" x2="{x1}" y2="{y}" stroke="#444444" stroke-dasharray="6,3"/><text x="{tx}" y="{ty}" text-anchor="end" font-size="10" font-family="sans-serif" fill="#333333">{label}</text>"##,
+                tx = x1 - 4.0,
+                ty = y - 4.0,
+                label = xml_escape(&ceil.label),
+            ));
+        }
+    }
+
+    fn push_bandwidth_ceilings(&self, svg: &mut String) {
+        let c = &self.config;
+        for bw in &self.model.ceilings.bandwidth {
+            // perf = AI * BW ; clip at the max compute ceiling.
+            let max_perf = self.model.ceilings.max_flops();
+            let ai_start = c.ai_min;
+            let perf_start = ai_start * bw.bytes_per_sec;
+            let ai_end = (max_perf / bw.bytes_per_sec).min(c.ai_max);
+            let (x0, y0) = (self.x(ai_start), self.y(perf_start));
+            let (x1, y1) = (self.x(ai_end), self.y(ai_end * bw.bytes_per_sec));
+            svg.push_str(&format!(
+                r##"<line x1="{x0:.1}" y1="{y0:.1}" x2="{x1:.1}" y2="{y1:.1}" stroke="{color}" stroke-width="1.2"/><text x="{tx:.1}" y="{ty:.1}" font-size="10" font-family="sans-serif" fill="{color}">{label}</text>"##,
+                color = level_color(bw.level),
+                tx = x0 + 8.0,
+                ty = y0 - 6.0,
+                label = xml_escape(&bw.label),
+            ));
+        }
+    }
+
+    fn push_points(&self, svg: &mut String) {
+        let max_secs = self
+            .model
+            .points
+            .iter()
+            .map(|p| p.seconds)
+            .fold(0.0, f64::max);
+        for p in &self.model.points {
+            let r = self.radius(p.seconds, max_secs);
+            let y = self.y(p.flops_per_sec);
+            for &(level, ai) in &p.ai {
+                let x = self.x(ai);
+                svg.push_str(&format!(
+                    r##"<circle cx="{x:.1}" cy="{y:.1}" r="{r:.1}" fill="none" stroke="{color}" stroke-width="1.5"><title>{name} [{lvl}] AI={ai:.3} perf={perf:.3e} t={t:.3e}s inv={inv}</title></circle>"##,
+                    color = level_color(level),
+                    name = xml_escape(&p.name),
+                    lvl = level.name(),
+                    perf = p.flops_per_sec,
+                    t = p.seconds,
+                    inv = p.invocations,
+                ));
+            }
+        }
+    }
+
+    fn push_legend(&self, svg: &mut String) {
+        let x = 70.0;
+        let mut y = 50.0;
+        for level in MemLevel::ALL {
+            svg.push_str(&format!(
+                r##"<circle cx="{x}" cy="{y}" r="5" fill="none" stroke="{color}" stroke-width="1.5"/><text x="{tx}" y="{ty}" font-size="11" font-family="sans-serif">{name}</text>"##,
+                color = level_color(level),
+                tx = x + 10.0,
+                ty = y + 4.0,
+                name = level.name(),
+            ));
+            y += 16.0;
+        }
+        svg.push_str(&format!(
+            r##"<text x="{x}" y="{y}" font-size="10" font-family="sans-serif" fill="#555555">circle area &#8733; kernel time &#8212; {}</text>"##,
+            xml_escape(&self.model.device_name),
+        ));
+    }
+
+    /// Text rendering of the dataset (kernel table), for terminals and
+    /// EXPERIMENTS.md.
+    pub fn to_table(&self) -> Table {
+        use crate::util::table::Align;
+        let mut t = Table::new(&[
+            "kernel", "time", "GFLOP/s", "AI(L1)", "AI(L2)", "AI(HBM)", "TC", "inv",
+        ])
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Left,
+            Align::Right,
+        ]);
+        for p in &self.model.points {
+            let ai_of = |lvl: MemLevel| -> String {
+                p.ai
+                    .iter()
+                    .find(|(l, _)| *l == lvl)
+                    .map(|(_, a)| format!("{a:.2}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            t.row(&[
+                truncate(&p.name, 40),
+                crate::util::fmt::duration(p.seconds),
+                format!("{:.1}", p.flops_per_sec / 1e9),
+                ai_of(MemLevel::L1),
+                ai_of(MemLevel::L2),
+                ai_of(MemLevel::Hbm),
+                if p.tensor_dominated { "yes" } else { "no" }.to_string(),
+                p.invocations.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(n - 1).collect();
+        format!("{cut}…")
+    }
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+        .replace('"', "&quot;")
+}
+
+fn pow10_label(v: f64) -> String {
+    let e = v.log10().round() as i32;
+    match e {
+        0 => "1".into(),
+        1 => "10".into(),
+        2 => "100".into(),
+        _ => format!("1e{e}"),
+    }
+}
+
+fn perf_label(v: f64) -> String {
+    crate::util::fmt::si_flops(v)
+        .replace(" FLOP/s", "")
+        + "F"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{GpuSpec, Precision};
+    use crate::profiler::Session;
+    use crate::roofline::model::RooflineModel;
+    use crate::sim::kernel::{KernelDesc, KernelInvocation};
+
+    fn example_model() -> (GpuSpec, RooflineModel) {
+        let spec = GpuSpec::v100();
+        let trace = vec![
+            KernelInvocation::once(KernelDesc::gemm(
+                "volta_h884gemm", 4096, 4096, 4096, Precision::Fp16, true, 128, &spec,
+            )),
+            KernelInvocation {
+                kernel: KernelDesc::streaming_elementwise("relu", 1 << 20, Precision::Fp32, 1),
+                invocations: 20,
+                stream: 0,
+            },
+        ];
+        let profile = Session::standard(&spec).profile(&trace);
+        let model = RooflineModel::from_profile(&spec, &profile);
+        (spec, model)
+    }
+
+    #[test]
+    fn svg_is_well_formed_and_complete() {
+        let (_, model) = example_model();
+        let chart = RooflineChart::hierarchical(&model, "Test chart");
+        let svg = chart.to_svg();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        // One circle per (kernel, level): 2 kernels x 3 levels.
+        assert_eq!(svg.matches("<circle").count(), 6 + 3 /* legend */);
+        // All ceilings drawn.
+        assert_eq!(svg.matches("stroke-dasharray").count(), 4);
+        // Colors for the three levels present.
+        for color in ["#1f6fd0", "#d03030", "#1f9d3a"] {
+            assert!(svg.contains(color));
+        }
+    }
+
+    #[test]
+    fn bigger_kernels_bigger_circles() {
+        let (_, model) = example_model();
+        let chart = RooflineChart::hierarchical(&model, "t");
+        let max_t = model.points.iter().map(|p| p.seconds).fold(0.0, f64::max);
+        let radii: Vec<f64> = model
+            .points
+            .iter()
+            .map(|p| chart.radius(p.seconds, max_t))
+            .collect();
+        // points are sorted descending by time
+        assert!(radii[0] >= radii[1]);
+        assert!(radii.iter().all(|&r| r >= chart.config.r_min - 1e-9));
+        assert!(radii.iter().all(|&r| r <= chart.config.r_max + 1e-9));
+    }
+
+    #[test]
+    fn coordinates_monotone() {
+        let (_, model) = example_model();
+        let chart = RooflineChart::hierarchical(&model, "t");
+        assert!(chart.x(10.0) > chart.x(1.0));
+        assert!(chart.y(1e12) < chart.y(1e10)); // higher perf = higher on screen (lower y)
+    }
+
+    #[test]
+    fn table_lists_all_points() {
+        let (_, model) = example_model();
+        let chart = RooflineChart::hierarchical(&model, "t");
+        let table = chart.to_table();
+        assert_eq!(table.n_rows(), model.points.len());
+        let text = table.render();
+        assert!(text.contains("volta_h884gemm"));
+    }
+
+    #[test]
+    fn xml_escaping() {
+        assert_eq!(xml_escape("a<b>&\"c\""), "a&lt;b&gt;&amp;&quot;c&quot;");
+    }
+}

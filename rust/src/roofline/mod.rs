@@ -1,0 +1,14 @@
+//! The hierarchical Roofline model and its renderings.
+//!
+//! * [`model`] — ceilings (compute + per-level bandwidth), Roofline
+//!   bound evaluation (paper Eq. 1), per-kernel hierarchical points.
+//! * [`chart`] — log-log SVG scatter charts in the paper's visual
+//!   idiom: blue/red/green circles for L1/L2/HBM, circle area ∝ kernel
+//!   run time, diagonal bandwidth ceilings, horizontal compute ceilings
+//!   (Figs 1, 3–9).
+
+pub mod chart;
+pub mod model;
+
+pub use chart::{ChartConfig, RooflineChart};
+pub use model::{Ceilings, KernelPoint, RooflineModel};

@@ -1,0 +1,253 @@
+//! Roofline model arithmetic (paper Eq. 1) and hierarchical point
+//! extraction from profiles.
+
+use crate::device::{GpuSpec, MemLevel, Precision};
+use crate::profiler::profile::{KernelProfile, Profile};
+
+/// A compute ceiling: a horizontal line on the Roofline chart.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeCeiling {
+    pub label: String,
+    pub flops_per_sec: f64,
+}
+
+/// A bandwidth ceiling: a diagonal (perf = AI × BW) on the chart.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandwidthCeiling {
+    pub label: String,
+    pub level: MemLevel,
+    pub bytes_per_sec: f64,
+}
+
+/// The full ceiling set for a device (Fig. 1).
+#[derive(Clone, Debug)]
+pub struct Ceilings {
+    pub compute: Vec<ComputeCeiling>,
+    pub bandwidth: Vec<BandwidthCeiling>,
+}
+
+impl Ceilings {
+    /// Build ceilings from a device's achievable (ERT-calibrated) peaks.
+    pub fn from_spec(spec: &GpuSpec) -> Ceilings {
+        let mut compute = vec![ComputeCeiling {
+            label: format!("Tensor Core: {}", crate::util::fmt::si_flops(spec.achievable_tensor_flops())),
+            flops_per_sec: spec.achievable_tensor_flops(),
+        }];
+        for p in Precision::ALL {
+            compute.push(ComputeCeiling {
+                label: format!("{}: {}", p.name(), crate::util::fmt::si_flops(spec.achievable_flops(p))),
+                flops_per_sec: spec.achievable_flops(p),
+            });
+        }
+        let bandwidth = MemLevel::ALL
+            .iter()
+            .map(|&level| BandwidthCeiling {
+                label: format!(
+                    "{}: {}/s",
+                    level.name(),
+                    crate::util::fmt::si_bytes(spec.bandwidth(level))
+                ),
+                level,
+                bytes_per_sec: spec.bandwidth(level),
+            })
+            .collect();
+        Ceilings { compute, bandwidth }
+    }
+
+    /// Highest compute ceiling (chart top).
+    pub fn max_flops(&self) -> f64 {
+        self.compute
+            .iter()
+            .map(|c| c.flops_per_sec)
+            .fold(0.0, f64::max)
+    }
+
+    /// The Roofline bound for a given AI at a given memory level against
+    /// the *highest* compute ceiling:
+    /// `min(peak_flops, AI × BW(level))` (Eq. 1).
+    pub fn bound(&self, level: MemLevel, ai: f64) -> f64 {
+        let bw = self
+            .bandwidth
+            .iter()
+            .find(|b| b.level == level)
+            .map(|b| b.bytes_per_sec)
+            .unwrap_or(0.0);
+        (ai * bw).min(self.max_flops())
+    }
+}
+
+/// One kernel's position on the hierarchical chart: a triplet of
+/// (AI, perf) points sharing one performance value (perf is
+/// level-independent; AI varies with the byte denominator).
+#[derive(Clone, Debug)]
+pub struct KernelPoint {
+    pub name: String,
+    pub seconds: f64,
+    pub flops_per_sec: f64,
+    /// (level, AI) for every level with traffic.
+    pub ai: Vec<(MemLevel, f64)>,
+    pub tensor_dominated: bool,
+    pub invocations: u64,
+}
+
+impl KernelPoint {
+    pub fn from_profile(k: &KernelProfile) -> Option<KernelPoint> {
+        if k.is_zero_ai() {
+            return None; // zero-AI kernels don't appear on the chart (AI=0 → log axis)
+        }
+        let ai: Vec<(MemLevel, f64)> = MemLevel::ALL
+            .iter()
+            .filter_map(|&l| k.ai(l).map(|v| (l, v)))
+            .collect();
+        if ai.is_empty() {
+            return None;
+        }
+        Some(KernelPoint {
+            name: k.name.clone(),
+            seconds: k.seconds(),
+            flops_per_sec: k.flops_per_sec(),
+            ai,
+            tensor_dominated: k.is_tensor_dominated(),
+            invocations: k.invocations,
+        })
+    }
+
+    /// "Streaming" signature: AI nearly equal across levels (triplet
+    /// circles overlap — poor locality everywhere, paper §IV).
+    pub fn is_streaming(&self) -> bool {
+        let ais: Vec<f64> = self.ai.iter().map(|(_, a)| *a).collect();
+        if ais.len() < 2 {
+            return true;
+        }
+        let max = ais.iter().cloned().fold(f64::MIN, f64::max);
+        let min = ais.iter().cloned().fold(f64::MAX, f64::min);
+        max / min < 1.5
+    }
+}
+
+/// A complete hierarchical Roofline dataset: ceilings + kernel points.
+#[derive(Clone, Debug)]
+pub struct RooflineModel {
+    pub ceilings: Ceilings,
+    pub points: Vec<KernelPoint>,
+    pub device_name: String,
+}
+
+impl RooflineModel {
+    /// Build from a profile on a device.
+    pub fn from_profile(spec: &GpuSpec, profile: &Profile) -> RooflineModel {
+        let mut points: Vec<KernelPoint> = profile
+            .kernels()
+            .filter_map(KernelPoint::from_profile)
+            .collect();
+        // Longest-running first so big circles render under small ones.
+        points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
+        RooflineModel {
+            ceilings: Ceilings::from_spec(spec),
+            points,
+            device_name: spec.name.clone(),
+        }
+    }
+
+    /// Verify the throughput bound: no kernel exceeds its Roofline at any
+    /// level (used as a post-profile validity check; the simulator is
+    /// roofline-consistent by construction, but the *profiler* pipeline
+    /// could corrupt data — this is the end-to-end guard).
+    pub fn validate_bounds(&self) -> Result<(), String> {
+        for p in &self.points {
+            for &(level, ai) in &p.ai {
+                // Achievable ceilings are empirical; allow a small slack.
+                let bound = self.ceilings.bound(level, ai) * 1.10;
+                if p.flops_per_sec > bound {
+                    return Err(format!(
+                        "kernel '{}' exceeds {} roofline: {:.3e} > {:.3e} at AI {:.3}",
+                        p.name, level.name(), p.flops_per_sec, bound, ai
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Precision;
+    use crate::profiler::Session;
+    use crate::sim::kernel::{KernelDesc, KernelInvocation};
+
+    #[test]
+    fn ceilings_match_fig1() {
+        let spec = GpuSpec::v100();
+        let c = Ceilings::from_spec(&spec);
+        assert_eq!(c.compute.len(), 4); // TC + 3 precisions
+        assert_eq!(c.bandwidth.len(), 3);
+        assert!((c.max_flops() / 1e12 - 103.7).abs() < 0.2);
+    }
+
+    #[test]
+    fn bound_is_min_of_two_terms() {
+        let spec = GpuSpec::v100();
+        let c = Ceilings::from_spec(&spec);
+        // Very low AI: bandwidth-bound.
+        let low = c.bound(MemLevel::Hbm, 0.1);
+        assert!((low - 0.1 * spec.hbm_bytes_per_sec).abs() < 1.0);
+        // Very high AI: compute-bound.
+        let high = c.bound(MemLevel::Hbm, 1e6);
+        assert_eq!(high, c.max_flops());
+    }
+
+    #[test]
+    fn model_from_profile_drops_zero_ai() {
+        let spec = GpuSpec::v100();
+        let trace = vec![
+            KernelInvocation::once(KernelDesc::streaming_elementwise(
+                "fma", 1 << 18, Precision::Fp32, 2,
+            )),
+            KernelInvocation::once(KernelDesc::streaming_elementwise(
+                "cast", 1 << 18, Precision::Fp16, 0,
+            )),
+        ];
+        let profile = Session::standard(&spec).profile(&trace);
+        let model = RooflineModel::from_profile(&spec, &profile);
+        assert_eq!(model.points.len(), 1);
+        assert_eq!(model.points[0].name, "fma");
+    }
+
+    #[test]
+    fn streaming_signature_detected() {
+        let spec = GpuSpec::v100();
+        let trace = vec![KernelInvocation::once(KernelDesc::streaming_elementwise(
+            "stream", 1 << 22, Precision::Fp32, 1,
+        ))];
+        let profile = Session::standard(&spec).profile(&trace);
+        let model = RooflineModel::from_profile(&spec, &profile);
+        assert!(model.points[0].is_streaming());
+    }
+
+    #[test]
+    fn gemm_not_streaming() {
+        let spec = GpuSpec::v100();
+        let g = KernelDesc::gemm("g", 2048, 2048, 2048, Precision::Fp16, true, 64, &spec);
+        let profile = Session::standard(&spec).profile(&[KernelInvocation::once(g)]);
+        let model = RooflineModel::from_profile(&spec, &profile);
+        assert!(!model.points[0].is_streaming());
+    }
+
+    #[test]
+    fn validate_bounds_passes_for_simulated_profiles() {
+        let spec = GpuSpec::v100();
+        let trace = vec![
+            KernelInvocation::once(KernelDesc::gemm(
+                "g", 4096, 4096, 4096, Precision::Fp16, true, 128, &spec,
+            )),
+            KernelInvocation::once(KernelDesc::streaming_elementwise(
+                "s", 1 << 20, Precision::Fp32, 8,
+            )),
+        ];
+        let profile = Session::standard(&spec).profile(&trace);
+        let model = RooflineModel::from_profile(&spec, &profile);
+        model.validate_bounds().unwrap();
+    }
+}

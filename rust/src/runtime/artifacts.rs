@@ -1,0 +1,191 @@
+//! Artifact store: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` describes every lowered module: its HLO
+//! text file, parameter/output shapes and dtypes, and bookkeeping the
+//! profiler wants (analytic FLOPs per execution, parameter counts).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Shape + dtype of one runtime tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dims: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn n_elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dims = j
+            .get("dims")?
+            .as_arr()?
+            .iter()
+            .map(|d| Ok(d.as_usize()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            dims,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled module's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text path, relative to the artifacts dir.
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Analytic FLOPs per execution (from the JAX cost model at lowering
+    /// time), if recorded.
+    pub flops_per_run: Option<f64>,
+    /// Free-form metadata (e.g. model parameter count).
+    pub meta: BTreeMap<String, String>,
+}
+
+/// The artifact directory + parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl ArtifactStore {
+    /// Open `dir` and parse `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", manifest_path.display()))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in doc.get("modules")?.as_obj()? {
+            let inputs = entry
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let flops_per_run = entry.opt("flops_per_run").and_then(|v| v.as_f64().ok());
+            let mut meta = BTreeMap::new();
+            if let Some(m) = entry.opt("meta") {
+                for (k, v) in m.as_obj()? {
+                    meta.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+                }
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    hlo_file: entry.get("hlo_file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    flops_per_run,
+                    meta,
+                },
+            );
+        }
+        Ok(ArtifactStore { dir, entries })
+    }
+
+    /// Default location (`artifacts/` at the repo root), honouring
+    /// `HROOFLINE_ARTIFACTS` for tests.
+    pub fn open_default() -> Result<ArtifactStore> {
+        let dir = std::env::var("HROOFLINE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactStore::open(dir)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        match self.entries.get(name) {
+            Some(e) => Ok(e),
+            None => bail!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.hlo_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hroofline-artifacts-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = tmpdir("parse");
+        write_manifest(
+            &dir,
+            r#"{
+              "modules": {
+                "train_step": {
+                  "hlo_file": "train_step.hlo.txt",
+                  "inputs": [{"dims": [4, 64, 64, 3], "dtype": "f32"}],
+                  "outputs": [{"dims": [], "dtype": "f32"}],
+                  "flops_per_run": 123456.0,
+                  "meta": {"params": "1000"}
+                }
+              }
+            }"#,
+        );
+        let store = ArtifactStore::open(&dir).unwrap();
+        let e = store.entry("train_step").unwrap();
+        assert_eq!(e.inputs[0].dims, vec![4, 64, 64, 3]);
+        assert_eq!(e.inputs[0].n_elems(), 4 * 64 * 64 * 3);
+        assert_eq!(e.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(e.flops_per_run, Some(123456.0));
+        assert_eq!(e.meta.get("params").unwrap(), "1000");
+        assert_eq!(store.names(), vec!["train_step"]);
+        assert!(store.hlo_path(e).ends_with("train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_lists_available() {
+        let dir = tmpdir("missing");
+        write_manifest(&dir, r#"{"modules": {}}"#);
+        let store = ArtifactStore::open(&dir).unwrap();
+        let err = store.entry("nope").unwrap_err().to_string();
+        assert!(err.contains("not in manifest"));
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = ArtifactStore::open("/nonexistent-hroofline").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,156 @@
+//! The PJRT execution engine: compile HLO-text artifacts once, execute
+//! many times from the Rust hot path with timing instrumentation.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::{ArtifactEntry, ArtifactStore};
+use crate::util::Summary;
+
+/// A compiled, executable module.
+pub struct LoadedModule {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Timing record of repeated executions.
+#[derive(Clone, Debug)]
+pub struct TimedRun {
+    pub name: String,
+    pub runs: usize,
+    pub secs: Summary,
+    /// FLOP/s using the manifest's analytic FLOP count, when present.
+    pub flops_per_sec: Option<f64>,
+}
+
+/// Engine: one PJRT CPU client + loaded executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name.
+    pub fn load(&self, store: &ArtifactStore, name: &str) -> Result<LoadedModule> {
+        let entry = store.entry(name)?.clone();
+        let path = store.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        Ok(LoadedModule { entry, exe })
+    }
+
+    /// Execute a module once on literals; returns the outputs as
+    /// literals. Artifacts are lowered with `return_tuple=True`, so the
+    /// single device result is untupled here.
+    pub fn run(&self, module: &LoadedModule, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = module
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{}'", module.entry.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let n_out = module.entry.outputs.len();
+        let outs = tuple.to_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            outs.len() == n_out,
+            "artifact '{}' returned {} outputs, manifest says {}",
+            module.entry.name,
+            outs.len(),
+            n_out
+        );
+        Ok(outs)
+    }
+
+    /// Execute repeatedly, timing each run (after `warmup` runs).
+    pub fn run_timed(
+        &self,
+        module: &LoadedModule,
+        inputs: &[xla::Literal],
+        warmup: usize,
+        runs: usize,
+    ) -> Result<TimedRun> {
+        for _ in 0..warmup {
+            self.run(module, inputs)?;
+        }
+        let mut times = Vec::with_capacity(runs);
+        for _ in 0..runs.max(1) {
+            let t0 = Instant::now();
+            let out = self.run(module, inputs)?;
+            std::hint::black_box(&out);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let secs = Summary::of(&times);
+        let flops_per_sec = module
+            .entry
+            .flops_per_run
+            .map(|f| f / secs.median.max(1e-12));
+        Ok(TimedRun {
+            name: module.entry.name.clone(),
+            runs: times.len(),
+            secs,
+            flops_per_sec,
+        })
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == n, "buffer len {} != shape product {n}", data.len());
+    let lit = xla::Literal::vec1(data);
+    if dims.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).context("reshaping literal")
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("extracting f32 data")
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests run against real artifacts when present; they are
+    //! skipped (with a notice) when `make artifacts` hasn't run, so
+    //! `cargo test` works in a fresh checkout. Full integration coverage
+    //! lives in `rust/tests/runtime_integration.rs`.
+    use super::*;
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let back = to_vec_f32(&lit).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_len_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let engine = Engine::cpu().unwrap();
+        assert_eq!(engine.platform(), "cpu");
+    }
+}

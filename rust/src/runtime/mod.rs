@@ -1,0 +1,15 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts and executes
+//! them natively. Python never runs at request time — `make artifacts`
+//! produces `artifacts/*.hlo.txt` plus `manifest.json`, and this module
+//! does `PjRtClient::cpu() → HloModuleProto::from_text_file →
+//! compile → execute` (the /opt/xla-example/load_hlo pattern).
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see DESIGN.md and aot_recipe).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactEntry, ArtifactStore};
+pub use engine::{Engine, LoadedModule, TimedRun};

@@ -1,0 +1,274 @@
+//! Analytic hierarchical cache-traffic model.
+//!
+//! Given a kernel's [`AccessPattern`], compute the bytes observed at each
+//! memory level — the quantities Nsight Compute reports as
+//! `l1tex__t_bytes.sum`, `lts__t_bytes.sum` and `dram__bytes.sum`
+//! (paper Table II). The model is deliberately simple and fully
+//! explainable:
+//!
+//! * **L1 traffic** = all thread requests (the L1TEX interface sees every
+//!   global load/store, hit or miss).
+//! * **L2 traffic** = L1 traffic compressed by the achieved L1 reuse,
+//!   floored by the compulsory footprint, and degraded when the per-SM
+//!   working set exceeds L1 capacity (capacity misses).
+//! * **HBM traffic** = L2 traffic compressed by the achieved L2 reuse,
+//!   floored by compulsory footprint, degraded when the footprint
+//!   exceeds L2 capacity.
+//!
+//! The set-associative reference simulator in [`crate::sim::cache_sim`]
+//! validates the orderings this model produces.
+
+use crate::device::{GpuSpec, MemLevel};
+use crate::sim::kernel::KernelDesc;
+
+/// Per-level traffic for one kernel launch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Traffic {
+    pub l1_bytes: u64,
+    pub l2_bytes: u64,
+    pub hbm_bytes: u64,
+}
+
+impl Traffic {
+    pub fn bytes(&self, level: MemLevel) -> u64 {
+        match level {
+            MemLevel::L1 => self.l1_bytes,
+            MemLevel::L2 => self.l2_bytes,
+            MemLevel::Hbm => self.hbm_bytes,
+        }
+    }
+
+    /// Scale traffic by an invocation count.
+    pub fn scaled(&self, n: u64) -> Traffic {
+        Traffic {
+            l1_bytes: self.l1_bytes * n,
+            l2_bytes: self.l2_bytes * n,
+            hbm_bytes: self.hbm_bytes * n,
+        }
+    }
+
+    /// Element-wise accumulate.
+    pub fn add(&mut self, other: &Traffic) {
+        self.l1_bytes += other.l1_bytes;
+        self.l2_bytes += other.l2_bytes;
+        self.hbm_bytes += other.hbm_bytes;
+    }
+}
+
+/// The analytic model, parameterized by device cache geometry.
+pub struct CacheModel<'a> {
+    spec: &'a GpuSpec,
+}
+
+impl<'a> CacheModel<'a> {
+    pub fn new(spec: &'a GpuSpec) -> CacheModel<'a> {
+        CacheModel { spec }
+    }
+
+    /// Compute per-level traffic for a single kernel invocation.
+    pub fn traffic(&self, k: &KernelDesc) -> Traffic {
+        let a = &k.access;
+        let requested = a.requested_bytes();
+        if requested == 0 {
+            return Traffic::default();
+        }
+        let footprint = a.footprint_bytes.min(requested.max(a.footprint_bytes));
+
+        // --- L1 ---
+        let l1 = requested;
+
+        // --- L2: apply achieved L1 reuse, degraded by capacity ---
+        // Residency the L1 reuse operates on: an explicit tile working
+        // set when declared (blocked kernels), else the footprint spread
+        // across active SMs.
+        let active_sms = (k.grid as u64).min(self.spec.sms as u64).max(1);
+        let ws_per_sm = a.l1_resident_bytes.unwrap_or(footprint / active_sms);
+        let l1_fit = fit_factor(ws_per_sm, self.spec.l1.capacity_bytes);
+        // Effective reuse interpolates between declared reuse (fits) and
+        // 1.0 (thrashes).
+        let l1_reuse_eff = 1.0 + (a.l1_reuse - 1.0) * l1_fit;
+        let l2 = ((l1 as f64 / l1_reuse_eff) as u64).max(footprint.min(l1));
+
+        // --- HBM: apply achieved L2 reuse, degraded by capacity ---
+        let l2_ws = a.l2_resident_bytes.unwrap_or(footprint);
+        let l2_fit = fit_factor(l2_ws, self.spec.l2.capacity_bytes);
+        let l2_reuse_eff = 1.0 + (a.l2_reuse - 1.0) * l2_fit;
+        let hbm = ((l2 as f64 / l2_reuse_eff) as u64).max(footprint.min(l2));
+
+        // Line-granularity rounding at L2/HBM.
+        let line = self.spec.l2.line_bytes;
+        Traffic {
+            l1_bytes: l1,
+            l2_bytes: round_up(l2, line).min(l1),
+            hbm_bytes: round_up(hbm, line).min(round_up(l2, line).min(l1)),
+        }
+    }
+}
+
+/// "Does the working set fit" factor in [0, 1]: 1 while the working set
+/// fits, a short linear knee to 0 just past capacity. The hard zero
+/// matters: with LRU and a working set beyond capacity, every revisit
+/// misses (the line is evicted before its next use), so declared reuse
+/// must collapse entirely no matter how many passes the kernel makes —
+/// this is what makes the ERT sweep knees sharp.
+fn fit_factor(working_set: u64, capacity: u64) -> f64 {
+    if working_set == 0 {
+        return 1.0;
+    }
+    let ratio = working_set as f64 / capacity as f64;
+    if ratio <= 1.0 {
+        1.0
+    } else if ratio < 1.2 {
+        (1.2 - ratio) / 0.2
+    } else {
+        0.0
+    }
+}
+
+fn round_up(v: u64, to: u64) -> u64 {
+    if to == 0 {
+        v
+    } else {
+        v.div_ceil(to) * to
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Precision;
+    use crate::sim::kernel::AccessPattern;
+
+    fn v100() -> GpuSpec {
+        GpuSpec::v100()
+    }
+
+    #[test]
+    fn streaming_kernel_has_flat_hierarchy() {
+        let spec = v100();
+        let k = KernelDesc::streaming_elementwise("stream", 1 << 22, Precision::Fp32, 1);
+        let t = CacheModel::new(&spec).traffic(&k);
+        // Triplets overlap: L1 ≈ L2 ≈ HBM (paper §IV "streaming" pattern).
+        assert!(t.l1_bytes >= t.l2_bytes && t.l2_bytes >= t.hbm_bytes);
+        assert!(t.hbm_bytes as f64 >= 0.9 * t.l1_bytes as f64);
+    }
+
+    #[test]
+    fn blocked_gemm_filters_traffic() {
+        let spec = v100();
+        let k = KernelDesc::gemm("gemm", 2048, 2048, 2048, Precision::Fp16, true, 64, &spec);
+        let t = CacheModel::new(&spec).traffic(&k);
+        // Blocked kernel: large gaps between levels (paper Fig. 3: the
+        // dominant kernel has L2≫HBM separation).
+        assert!(t.l1_bytes > t.l2_bytes, "{t:?}");
+        assert!(t.l2_bytes > t.hbm_bytes, "{t:?}");
+    }
+
+    #[test]
+    fn ordering_invariant_l1_ge_l2_ge_hbm() {
+        // Property: for any access pattern the level traffic is ordered.
+        crate::prop::check("traffic ordering", 300, |g| {
+            let spec = GpuSpec::v100();
+            let load = g.u64_below(1 << 30);
+            let store = g.u64_below(1 << 28);
+            let requested = load + store;
+            let footprint = if requested == 0 {
+                0
+            } else {
+                g.u64_below(requested + 1)
+            };
+            let k = KernelDesc {
+                name: "p".into(),
+                grid: g.usize_range(1, 4096) as u32,
+                block: 256,
+                mix: Default::default(),
+                access: AccessPattern {
+                    load_bytes: load,
+                    store_bytes: store,
+                    footprint_bytes: footprint,
+                    l1_reuse: g.f64_range(1.0, 128.0),
+                    l2_reuse: g.f64_range(1.0, 64.0),
+                    l1_resident_bytes: None,
+                    l2_resident_bytes: None,
+                },
+                occupancy: 0.5,
+                efficiency: 0.9,
+            };
+            let t = CacheModel::new(&spec).traffic(&k);
+            assert!(t.l1_bytes >= t.l2_bytes, "{t:?}");
+            assert!(t.l2_bytes >= t.hbm_bytes, "{t:?}");
+        });
+    }
+
+    #[test]
+    fn traffic_monotone_in_request_volume() {
+        let spec = v100();
+        let mk = |n: u64| {
+            let k = KernelDesc::streaming_elementwise("s", n, Precision::Fp32, 1);
+            CacheModel::new(&spec).traffic(&k)
+        };
+        let small = mk(1 << 16);
+        let big = mk(1 << 20);
+        assert!(big.l1_bytes > small.l1_bytes);
+        assert!(big.hbm_bytes > small.hbm_bytes);
+    }
+
+    #[test]
+    fn capacity_thrash_degrades_reuse() {
+        let spec = v100();
+        // Same declared reuse; footprint far beyond L2 capacity kills the
+        // L2 compression.
+        let mk = |footprint: u64| {
+            let k = KernelDesc {
+                name: "t".into(),
+                grid: 80,
+                block: 256,
+                mix: Default::default(),
+                access: AccessPattern {
+                    load_bytes: 1 << 30,
+                    store_bytes: 0,
+                    footprint_bytes: footprint,
+                    l1_reuse: 1.0,
+                    l2_reuse: 16.0,
+                    l1_resident_bytes: None,
+                    l2_resident_bytes: None,
+                },
+                occupancy: 0.5,
+                efficiency: 0.9,
+            };
+            CacheModel::new(&spec).traffic(&k)
+        };
+        let fits = mk(1 << 20); // 1 MiB < 6 MiB L2
+        let thrashes = mk(1 << 32); // 4 GiB >> L2
+        assert!(thrashes.hbm_bytes > fits.hbm_bytes * 4);
+    }
+
+    #[test]
+    fn zero_request_zero_traffic() {
+        let spec = v100();
+        let k = KernelDesc {
+            name: "null".into(),
+            grid: 1,
+            block: 32,
+            mix: Default::default(),
+            access: AccessPattern::streaming(0, 0),
+            occupancy: 1.0,
+            efficiency: 1.0,
+        };
+        let t = CacheModel::new(&spec).traffic(&k);
+        assert_eq!(t, Traffic::default());
+    }
+
+    #[test]
+    fn fit_factor_shape() {
+        assert_eq!(fit_factor(0, 100), 1.0);
+        assert_eq!(fit_factor(10, 100), 1.0);
+        assert_eq!(fit_factor(100, 100), 1.0);
+        // Knee region: partial reuse.
+        let knee = fit_factor(110, 100);
+        assert!(knee > 0.0 && knee < 1.0, "{knee}");
+        // Overflowed: reuse gone entirely.
+        assert_eq!(fit_factor(400, 100), 0.0);
+        assert_eq!(fit_factor(4000, 100), 0.0);
+    }
+}

@@ -1,0 +1,287 @@
+//! Reference set-associative cache simulator.
+//!
+//! A small, exact LRU set-associative cache used to *validate* the
+//! analytic traffic model in [`crate::sim::cache`]: tests drive synthetic
+//! address streams (streaming, strided, tiled-GEMM-like) through a
+//! two-level hierarchy and check that the analytic model predicts the
+//! same qualitative orderings (hit-rate monotonicity, streaming flatness,
+//! tiling compression). It is also used directly by the `ablation`
+//! section of the hotpath bench to quantify the cost of exact simulation
+//! versus the analytic fast path.
+
+/// One set-associative LRU cache level.
+#[derive(Clone, Debug)]
+pub struct SetAssocCache {
+    sets: Vec<Vec<u64>>, // per-set stack of line tags, MRU first
+    ways: usize,
+    line_bytes: u64,
+    n_sets: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SetAssocCache {
+    /// Build a cache; `capacity` is rounded down to a whole number of
+    /// sets. Panics if the geometry is degenerate.
+    pub fn new(capacity_bytes: u64, line_bytes: u64, ways: u32) -> SetAssocCache {
+        assert!(line_bytes.is_power_of_two(), "line size must be 2^k");
+        let n_lines = capacity_bytes / line_bytes;
+        let n_sets = (n_lines / ways as u64).max(1);
+        SetAssocCache {
+            sets: vec![Vec::with_capacity(ways as usize); n_sets as usize],
+            ways: ways as usize,
+            line_bytes,
+            n_sets,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access one byte address; returns true on hit. On miss the line is
+    /// filled (allocate-on-miss for both loads and stores).
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr / self.line_bytes;
+        let set_idx = (line % self.n_sets) as usize;
+        let set = &mut self.sets[set_idx];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            set.remove(pos);
+            set.insert(0, line);
+            self.hits += 1;
+            true
+        } else {
+            if set.len() == self.ways {
+                set.pop();
+            }
+            set.insert(0, line);
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.line_bytes
+    }
+}
+
+/// A two-level hierarchy fed with line-granularity accesses; counts bytes
+/// of traffic at L1, L2 and memory, mirroring the Nsight byte metrics.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    pub l1: SetAssocCache,
+    pub l2: SetAssocCache,
+    pub l1_bytes: u64,
+    pub l2_bytes: u64,
+    pub mem_bytes: u64,
+    access_bytes: u64,
+}
+
+impl Hierarchy {
+    pub fn new(l1: SetAssocCache, l2: SetAssocCache, access_bytes: u64) -> Hierarchy {
+        assert!(access_bytes > 0);
+        Hierarchy {
+            l1,
+            l2,
+            l1_bytes: 0,
+            l2_bytes: 0,
+            mem_bytes: 0,
+            access_bytes,
+        }
+    }
+
+    /// Access `access_bytes` at `addr`: L1 always sees the request; L2
+    /// sees it on L1 miss; memory on L2 miss. Miss traffic moves whole
+    /// lines.
+    pub fn access(&mut self, addr: u64) {
+        self.l1_bytes += self.access_bytes;
+        if !self.l1.access(addr) {
+            let line = self.l1.line_bytes();
+            self.l2_bytes += line;
+            if !self.l2.access(addr) {
+                self.mem_bytes += self.l2.line_bytes();
+            }
+        }
+    }
+}
+
+/// Build a V100-shaped hierarchy at reduced scale (keeps tests fast while
+/// preserving set/way geometry ratios).
+pub fn v100_scaled(scale_down: u64) -> Hierarchy {
+    let l1 = SetAssocCache::new(128 * 1024 / scale_down, 128, 4);
+    let l2 = SetAssocCache::new(6 * 1024 * 1024 / scale_down, 128, 16);
+    Hierarchy::new(l1, l2, 4)
+}
+
+/// Drive a tiled-GEMM-like access stream: for each (i-tile, j-tile),
+/// sweep A-panel and B-panel addresses `reps` times. Returns the
+/// hierarchy for inspection.
+pub fn run_tiled_stream(
+    h: &mut Hierarchy,
+    a_base: u64,
+    b_base: u64,
+    panel_bytes: u64,
+    tiles: u64,
+    reps: u64,
+) {
+    let step = h.l1.line_bytes();
+    for t in 0..tiles {
+        for _ in 0..reps {
+            let mut off = 0;
+            while off < panel_bytes {
+                h.access(a_base + t * panel_bytes + off);
+                h.access(b_base + off);
+                off += step;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = SetAssocCache::new(1024, 64, 4);
+        assert!(!c.access(0));
+        assert!(c.access(0));
+        assert!(c.access(32)); // same line
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 1 set, 2 ways, 64B lines, 128B capacity.
+        let mut c = SetAssocCache::new(128, 64, 2);
+        c.access(0); // miss, cache {0}
+        c.access(64 * 1); // miss, {1,0}  (same set: n_sets = 1)
+        c.access(64 * 2); // miss, evicts 0 → {2,1}
+        assert!(!c.access(0), "0 was evicted");
+        assert!(c.access(64 * 2), "2 still resident");
+    }
+
+    #[test]
+    fn streaming_stream_misses_everywhere() {
+        let mut h = v100_scaled(64);
+        for i in 0..50_000u64 {
+            h.access(i * 128); // new line every access
+        }
+        // All levels see ~equal traffic: the streaming signature.
+        assert!(h.l1.hit_rate() < 0.01);
+        assert!(h.l2.hit_rate() < 0.01);
+        assert!(h.mem_bytes >= h.l2_bytes * 9 / 10);
+    }
+
+    #[test]
+    fn small_working_set_hits_l1() {
+        let mut h = v100_scaled(64);
+        let ws = 512u64; // lines 0..4 at 128B
+        for i in 0..40_000u64 {
+            h.access((i * 128) % ws);
+        }
+        assert!(h.l1.hit_rate() > 0.99, "{}", h.l1.hit_rate());
+        assert!(h.mem_bytes < 1024);
+    }
+
+    #[test]
+    fn medium_working_set_hits_l2_not_l1() {
+        let mut h = v100_scaled(64);
+        // Working set: larger than L1 (2 KiB scaled) but within L2 (96 KiB
+        // scaled).
+        let ws = 32 * 1024u64;
+        for i in 0..200_000u64 {
+            h.access((i * 128) % ws);
+        }
+        assert!(h.l1.hit_rate() < 0.2, "l1 {}", h.l1.hit_rate());
+        assert!(h.l2.hit_rate() > 0.9, "l2 {}", h.l2.hit_rate());
+    }
+
+    #[test]
+    fn tiling_compresses_lower_level_traffic() {
+        // B-panel reused across tiles => it should live in L2 and cut
+        // memory traffic versus a no-reuse run.
+        let mut with_reuse = v100_scaled(64);
+        run_tiled_stream(&mut with_reuse, 0, 1 << 24, 8 * 1024, 8, 4);
+        let mut without = v100_scaled(64);
+        // unique B per tile: emulate by bumping b_base per tile
+        for t in 0..8u64 {
+            run_tiled_stream(&mut without, t * (1 << 20), (1 << 24) + t * (1 << 20), 8 * 1024, 1, 4);
+        }
+        assert!(with_reuse.mem_bytes < without.mem_bytes,
+            "reuse {} vs none {}", with_reuse.mem_bytes, without.mem_bytes);
+    }
+
+    #[test]
+    fn hierarchy_byte_ordering_at_line_granularity() {
+        // With line-sized requests the level traffic is strictly ordered.
+        let l1 = SetAssocCache::new(2 * 1024, 128, 4);
+        let l2 = SetAssocCache::new(96 * 1024, 128, 16);
+        let mut h = Hierarchy::new(l1, l2, 128);
+        let mut rng = crate::util::Rng::new(42);
+        for _ in 0..100_000 {
+            h.access(rng.below(1 << 22));
+        }
+        assert!(h.l1_bytes >= h.l2_bytes);
+        assert!(h.l2_bytes >= h.mem_bytes);
+    }
+
+    #[test]
+    fn fine_grained_random_access_amplifies_below_l1() {
+        // Documented behaviour (matches real counters): 4-byte random
+        // requests miss whole 128-byte lines, so L2 traffic can *exceed*
+        // the L1 request bytes — the analytic model's ordering invariant
+        // applies to its own line-rounded semantics, not to raw request
+        // amplification.
+        let mut h = v100_scaled(64);
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..50_000 {
+            h.access(rng.below(1 << 22));
+        }
+        assert!(h.l2_bytes > h.l1_bytes);
+    }
+
+    /// Cross-validation: the analytic model and the exact simulator agree
+    /// on the *ordering* of HBM traffic across locality regimes.
+    #[test]
+    fn analytic_model_agrees_with_simulator_ordering() {
+        use crate::device::GpuSpec;
+        use crate::sim::cache::CacheModel;
+        use crate::sim::kernel::{AccessPattern, KernelDesc};
+
+        let spec = GpuSpec::v100();
+        let model = CacheModel::new(&spec);
+        let mk = |reuse: f64| {
+            let k = KernelDesc {
+                name: "x".into(),
+                grid: 80,
+                block: 256,
+                mix: Default::default(),
+                access: AccessPattern {
+                    load_bytes: 1 << 24,
+                    store_bytes: 0,
+                    footprint_bytes: (1 << 24) / reuse as u64,
+                    l1_reuse: reuse,
+                    l2_reuse: 1.0,
+                    l1_resident_bytes: None,
+                    l2_resident_bytes: None,
+                },
+                occupancy: 0.5,
+                efficiency: 0.9,
+            };
+            model.traffic(&k).hbm_bytes
+        };
+        // More reuse => less HBM traffic, same as the simulator showed in
+        // small_working_set_hits_l1 vs streaming.
+        assert!(mk(16.0) < mk(4.0));
+        assert!(mk(4.0) < mk(1.0));
+    }
+}

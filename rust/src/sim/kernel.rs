@@ -1,0 +1,356 @@
+//! Kernel descriptors: the simulator's input language.
+//!
+//! A [`KernelDesc`] captures what Nsight Compute would observe about one
+//! kernel launch: the predicated-on SASS floating-point instruction mix
+//! per precision (paper §II-B2), tensor-pipe warp instructions, and the
+//! memory request pattern from which per-level traffic follows.
+
+use crate::device::{Precision, GpuSpec};
+
+/// Thread-level SASS floating-point instruction counts for one precision.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FpCounts {
+    pub add: u64,
+    pub mul: u64,
+    pub fma: u64,
+}
+
+impl FpCounts {
+    /// FLOPs contributed: `add + 2*fma + mul` (paper §II-B2).
+    pub fn flops(&self) -> u64 {
+        self.add + 2 * self.fma + self.mul
+    }
+
+    pub fn insts(&self) -> u64 {
+        self.add + self.mul + self.fma
+    }
+}
+
+/// Full instruction mix of a kernel (thread-level except tensor, which is
+/// counted in warp instructions as `sm__inst_executed_pipe_tensor` does).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InstMix {
+    pub fp64: FpCounts,
+    pub fp32: FpCounts,
+    pub fp16: FpCounts,
+    /// Warp-level tensor-pipe instructions (HMMA). FLOPs = inst × 512 on
+    /// V100 (paper Eq. 6).
+    pub tensor_insts: u64,
+    /// Thread-level integer/address ops (dual-issued on the INT pipe).
+    pub int_ops: u64,
+}
+
+impl InstMix {
+    pub fn counts(&self, p: Precision) -> FpCounts {
+        match p {
+            Precision::Fp64 => self.fp64,
+            Precision::Fp32 => self.fp32,
+            Precision::Fp16 => self.fp16,
+        }
+    }
+
+    pub fn counts_mut(&mut self, p: Precision) -> &mut FpCounts {
+        match p {
+            Precision::Fp64 => &mut self.fp64,
+            Precision::Fp32 => &mut self.fp32,
+            Precision::Fp16 => &mut self.fp16,
+        }
+    }
+
+    /// Total FLOPs on the general-purpose core across precisions.
+    pub fn cuda_core_flops(&self) -> u64 {
+        self.fp64.flops() + self.fp32.flops() + self.fp16.flops()
+    }
+
+    /// Tensor-core FLOPs given the device's per-instruction FLOP factor.
+    pub fn tensor_flops(&self, spec: &GpuSpec) -> u64 {
+        self.tensor_insts * spec.flops_per_tensor_inst
+    }
+
+    /// Total FLOPs (CUDA core + tensor core).
+    pub fn total_flops(&self, spec: &GpuSpec) -> u64 {
+        self.cuda_core_flops() + self.tensor_flops(spec)
+    }
+
+    /// A kernel is "zero-AI" when it performs no floating-point work at
+    /// all (paper §IV-D: data conversion / layout / transfer kernels).
+    pub fn is_zero_ai(&self, spec: &GpuSpec) -> bool {
+        self.total_flops(spec) == 0
+    }
+}
+
+/// Memory behaviour of a kernel, from which the cache model derives
+/// per-level traffic.
+///
+/// `l1_reuse`/`l2_reuse` are *achieved request compressions*: how many
+/// bytes of traffic arriving at that level are served per byte passed
+/// down to the next level. 1.0 = pure streaming (every request misses
+/// through), N = each line fetched from below is referenced N times.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccessPattern {
+    /// Bytes requested by threads from the L1/TEX interface (loads).
+    /// NOTE: shared-memory traffic is *excluded*, as in Nsight's
+    /// `l1tex__t_bytes` (paper §II-B3) — a smem-staged GEMM therefore
+    /// shows only its global loads here.
+    pub load_bytes: u64,
+    /// Bytes stored through L1.
+    pub store_bytes: u64,
+    /// Unique bytes touched (compulsory traffic floor at every level).
+    pub footprint_bytes: u64,
+    /// Achieved L1-level reuse factor (>= 1): requests served per byte
+    /// passed down to L2.
+    pub l1_reuse: f64,
+    /// Achieved L2-level reuse factor (>= 1): e.g. GEMM wave-panel
+    /// sharing across concurrent threadblocks.
+    pub l2_reuse: f64,
+    /// Instantaneous per-SM working set the L1 reuse operates on
+    /// (e.g. the staged GEMM tile). None => footprint / active SMs.
+    pub l1_resident_bytes: Option<u64>,
+    /// Instantaneous device-wide working set the L2 reuse operates on
+    /// (e.g. the current wave's panels). None => full footprint.
+    pub l2_resident_bytes: Option<u64>,
+}
+
+impl AccessPattern {
+    /// Pure streaming: every byte touched once, no reuse anywhere.
+    pub fn streaming(load_bytes: u64, store_bytes: u64) -> AccessPattern {
+        AccessPattern {
+            load_bytes,
+            store_bytes,
+            footprint_bytes: load_bytes + store_bytes,
+            l1_reuse: 1.0,
+            l2_reuse: 1.0,
+            l1_resident_bytes: None,
+            l2_resident_bytes: None,
+        }
+    }
+
+    /// Reuse at both levels over explicit resident working sets.
+    pub fn with_reuse(
+        load_bytes: u64,
+        store_bytes: u64,
+        footprint_bytes: u64,
+        l1_reuse: f64,
+        l2_reuse: f64,
+    ) -> AccessPattern {
+        AccessPattern {
+            load_bytes,
+            store_bytes,
+            footprint_bytes,
+            l1_reuse,
+            l2_reuse,
+            l1_resident_bytes: None,
+            l2_resident_bytes: None,
+        }
+    }
+
+    pub fn requested_bytes(&self) -> u64 {
+        self.load_bytes + self.store_bytes
+    }
+}
+
+/// One kernel's static description (aggregatable over many invocations).
+#[derive(Clone, Debug)]
+pub struct KernelDesc {
+    pub name: String,
+    /// Launch geometry: threads = grid * block.
+    pub grid: u32,
+    pub block: u32,
+    pub mix: InstMix,
+    pub access: AccessPattern,
+    /// Achieved occupancy in (0, 1]; scales latency-hiding ability.
+    pub occupancy: f64,
+    /// Issue efficiency in (0, 1]: fraction of peak issue rate the kernel
+    /// sustains when compute-bound (tail effects, bank conflicts, ...).
+    pub efficiency: f64,
+}
+
+impl KernelDesc {
+    /// Total threads launched.
+    pub fn threads(&self) -> u64 {
+        self.grid as u64 * self.block as u64
+    }
+
+    /// Constructor used across tests & the ERT driver: an elementwise
+    /// streaming kernel over `n` elements of precision `p` performing
+    /// `fma_per_elem` FMAs per element (0 = zero-AI copy/cast kernel).
+    pub fn streaming_elementwise(
+        name: &str,
+        n: u64,
+        p: Precision,
+        fma_per_elem: u64,
+    ) -> KernelDesc {
+        let bytes = n * p.bytes() as u64;
+        let mut mix = InstMix::default();
+        mix.counts_mut(p).fma = n * fma_per_elem;
+        mix.int_ops = n; // index arithmetic
+        let block = 256u32;
+        let grid = ((n + block as u64 - 1) / block as u64).max(1) as u32;
+        KernelDesc {
+            name: name.to_string(),
+            grid,
+            block,
+            mix,
+            access: AccessPattern::streaming(bytes, bytes),
+            occupancy: 0.8,
+            efficiency: 0.95,
+        }
+    }
+
+    /// A dense GEMM kernel descriptor: C[M,N] += A[M,K] B[K,N].
+    ///
+    /// `tile` is the square shared-memory/register tile edge; it sets the
+    /// achieved data reuse (each A/B element ideally reused `tile` times
+    /// out of L1, and L2 captures cross-threadblock reuse).
+    pub fn gemm(
+        name: &str,
+        m: u64,
+        n: u64,
+        k: u64,
+        p: Precision,
+        tensor_core: bool,
+        tile: u64,
+        spec: &GpuSpec,
+    ) -> KernelDesc {
+        let elem = p.bytes() as u64;
+        let macs = m * n * k;
+        let mut mix = InstMix::default();
+        if tensor_core {
+            // Warp HMMA instruction count: FLOPs / flops_per_inst.
+            mix.tensor_insts = (2 * macs) / spec.flops_per_tensor_inst;
+            // Epilogue (alpha/beta scaling) runs on the CUDA core.
+            mix.counts_mut(Precision::Fp32).fma = m * n;
+        } else {
+            mix.counts_mut(p).fma = macs;
+        }
+        mix.int_ops = macs / tile.max(1); // amortized addressing
+
+        // Global-load traffic: each threadblock reads its (tile x K) A
+        // panel and (K x tile) B panel once from global memory (operand
+        // reuse inside the tile lives in shared memory, which the L1
+        // byte metric does not see — paper §II-B3):
+        //   loads = A read ceil(N/bn) times + B read ceil(M/bm) times.
+        // For square GEMMs this is the familiar 2*MACs/tile; the ceil
+        // form stays correct for skinny shapes (conv wgrads).
+        let t = tile.max(1);
+        let load_elems = m * k * n.div_ceil(t) + k * n * m.div_ceil(t);
+        let load_bytes = load_elems * elem;
+        let store_bytes = m * n * elem;
+        let footprint = (m * k + k * n + m * n) * elem;
+        // L1 filters global loads only slightly (Fig. 3: the dominant
+        // kernel's L1 and L2 circles nearly overlap); L2 captures the
+        // wave-level panel sharing across concurrent threadblocks
+        // (Fig. 3: "the large gap between its L2 and HBM circles").
+        let l1_reuse = 1.2;
+        let wave_blocks = (m / tile.max(1)).max(1).min(8) as f64;
+        let l2_reuse = wave_blocks.max(1.0);
+        // Residency: the staged tile (bk-deep) per SM; the current
+        // wave's panel slices device-wide.
+        let bk = 32u64.min(k.max(1));
+        let l1_resident = (tile * bk + bk * tile + tile * tile) * elem;
+        let l2_resident = 80 * (2 * tile) * bk * elem;
+        // Launch geometry: output tiles, with split-K when the output is
+        // too skinny to fill the device (how library wgrad kernels keep
+        // SMs busy; small *square* GEMMs still suffer wave quantization
+        // because split-K cannot help an already-deep launch).
+        let out_tiles = ((m * n) / (tile * tile).max(1)).max(1);
+        let split_k_blocks = (macs / ((tile * tile).max(1) * 512)).max(1);
+        KernelDesc {
+            name: name.to_string(),
+            grid: out_tiles.max(split_k_blocks).min(u32::MAX as u64) as u32,
+            block: 256,
+            mix,
+            access: AccessPattern {
+                load_bytes,
+                store_bytes,
+                footprint_bytes: footprint,
+                l1_reuse,
+                l2_reuse,
+                l1_resident_bytes: Some(l1_resident),
+                l2_resident_bytes: Some(l2_resident),
+            },
+            occupancy: 0.5,
+            efficiency: if tensor_core { 0.93 } else { 0.9 },
+        }
+    }
+}
+
+/// A dynamic invocation record: a kernel plus how many times it ran and
+/// on which stream — the trace element the profiler aggregates
+/// (paper §IV: "the data presented ... is the aggregation of all these
+/// invocations of the same kernel").
+#[derive(Clone, Debug)]
+pub struct KernelInvocation {
+    pub kernel: KernelDesc,
+    pub invocations: u64,
+    pub stream: u32,
+}
+
+impl KernelInvocation {
+    pub fn once(kernel: KernelDesc) -> KernelInvocation {
+        KernelInvocation {
+            kernel,
+            invocations: 1,
+            stream: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_accounting_matches_paper_formula() {
+        let c = FpCounts {
+            add: 10,
+            mul: 5,
+            fma: 20,
+        };
+        assert_eq!(c.flops(), 10 + 5 + 2 * 20);
+    }
+
+    #[test]
+    fn tensor_flops_512_per_inst() {
+        let spec = GpuSpec::v100();
+        let mut mix = InstMix::default();
+        mix.tensor_insts = 1000;
+        assert_eq!(mix.tensor_flops(&spec), 512_000);
+    }
+
+    #[test]
+    fn zero_ai_detection() {
+        let spec = GpuSpec::v100();
+        let mut mix = InstMix::default();
+        mix.int_ops = 1_000_000; // integer-only => still zero-AI
+        assert!(mix.is_zero_ai(&spec));
+        mix.fp32.add = 1;
+        assert!(!mix.is_zero_ai(&spec));
+    }
+
+    #[test]
+    fn streaming_pattern_invariants() {
+        let a = AccessPattern::streaming(1000, 500);
+        assert_eq!(a.requested_bytes(), 1500);
+        assert_eq!(a.footprint_bytes, 1500);
+        assert_eq!(a.l1_reuse, 1.0);
+    }
+
+    #[test]
+    fn gemm_desc_scales_with_size() {
+        let spec = GpuSpec::v100();
+        let small = KernelDesc::gemm("g", 256, 256, 256, Precision::Fp16, true, 64, &spec);
+        let large = KernelDesc::gemm("g", 1024, 1024, 1024, Precision::Fp16, true, 64, &spec);
+        assert!(large.mix.tensor_insts > small.mix.tensor_insts * 32);
+        assert!(large.access.footprint_bytes > small.access.footprint_bytes);
+    }
+
+    #[test]
+    fn gemm_flops_exact() {
+        let spec = GpuSpec::v100();
+        let m = 512u64;
+        let k = KernelDesc::gemm("g", m, m, m, Precision::Fp32, false, 32, &spec);
+        // Non-TC GEMM: FLOPs = 2*M^3 (paper §II-A2).
+        assert_eq!(k.mix.cuda_core_flops(), 2 * m * m * m);
+    }
+}

@@ -1,0 +1,55 @@
+//! Kernel-granularity GPU performance simulator — the substrate that
+//! stands in for "a V100 + Nsight Compute" (DESIGN.md §1).
+//!
+//! The simulator consumes [`KernelDesc`]s — SASS-level instruction mixes
+//! plus memory-access descriptors, as produced by the `dl` framework
+//! lowerings or written by hand — and produces PerfWorks-style hardware
+//! counters ([`counters::CounterSet`]) with the exact metric names of the
+//! paper's Table II. Three component models:
+//!
+//! * [`cache`] — analytic hierarchical traffic model (L1/L2/HBM bytes),
+//!   with a reference set-associative simulator ([`cache_sim`]) used to
+//!   validate the analytic model's orderings in tests.
+//! * [`cycles`] — SM issue-pipeline cycle model: compute cycles per
+//!   pipeline vs memory cycles per level; elapsed = max (+ ramp).
+//! * [`counters`] — counter synthesis from mix + traffic + cycles.
+
+pub mod cache;
+pub mod cache_sim;
+pub mod counters;
+pub mod cycles;
+pub mod kernel;
+pub mod schedule;
+
+pub use cache::{CacheModel, Traffic};
+pub use counters::CounterSet;
+pub use cycles::CycleModel;
+pub use kernel::{AccessPattern, InstMix, KernelDesc, KernelInvocation};
+
+use crate::device::GpuSpec;
+
+/// Whole-kernel simulation: traffic + cycles + counters in one call.
+pub fn simulate(spec: &GpuSpec, k: &KernelDesc) -> CounterSet {
+    let traffic = CacheModel::new(spec).traffic(k);
+    let cycles = CycleModel::new(spec).elapsed_cycles(k, &traffic);
+    counters::synthesize(spec, k, &traffic, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Precision;
+
+    #[test]
+    fn simulate_produces_consistent_counterset() {
+        let spec = GpuSpec::v100();
+        let k = KernelDesc::streaming_elementwise("copy", 1 << 20, Precision::Fp32, 0);
+        let c = simulate(&spec, &k);
+        assert!(c.elapsed_seconds() > 0.0);
+        // Streaming kernel: triplet overlaps (paper §IV reading guide).
+        let l1 = c.bytes(crate::device::MemLevel::L1);
+        let hbm = c.bytes(crate::device::MemLevel::Hbm);
+        assert!(l1 >= hbm);
+        assert!((l1 as f64) / (hbm as f64) < 1.5, "streaming => L1≈HBM bytes");
+    }
+}

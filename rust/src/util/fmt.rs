@@ -1,0 +1,97 @@
+//! Human-unit formatting for throughput, bytes and durations — the
+//! report modules print paper-style numbers ("103.7 TFLOP/s", "900 GB/s").
+
+/// Format a value with SI decade prefixes (k/M/G/T/P) and a unit suffix.
+pub fn si(value: f64, unit: &str) -> String {
+    let (scaled, prefix) = si_scale(value);
+    format!("{} {}{}", trim3(scaled), prefix, unit)
+}
+
+/// Format a FLOP/s rate, e.g. `si_flops(1.037e14)` → "103.7 TFLOP/s".
+pub fn si_flops(value: f64) -> String {
+    si(value, "FLOP/s")
+}
+
+/// Format a byte count with binary-friendly decimal prefixes (the paper
+/// reports GB/s decimal), e.g. "16.0 GB".
+pub fn si_bytes(value: f64) -> String {
+    si(value, "B")
+}
+
+/// Format seconds adaptively: ns/µs/ms/s.
+pub fn duration(secs: f64) -> String {
+    let a = secs.abs();
+    if a == 0.0 {
+        "0 s".into()
+    } else if a < 1e-6 {
+        format!("{} ns", trim3(secs * 1e9))
+    } else if a < 1e-3 {
+        format!("{} µs", trim3(secs * 1e6))
+    } else if a < 1.0 {
+        format!("{} ms", trim3(secs * 1e3))
+    } else {
+        format!("{} s", trim3(secs))
+    }
+}
+
+fn si_scale(value: f64) -> (f64, &'static str) {
+    let a = value.abs();
+    if a >= 1e15 {
+        (value / 1e15, "P")
+    } else if a >= 1e12 {
+        (value / 1e12, "T")
+    } else if a >= 1e9 {
+        (value / 1e9, "G")
+    } else if a >= 1e6 {
+        (value / 1e6, "M")
+    } else if a >= 1e3 {
+        (value / 1e3, "k")
+    } else {
+        (value, "")
+    }
+}
+
+/// Render with up to 3 significant-ish decimals, trimming trailing zeros.
+fn trim3(v: f64) -> String {
+    let s = format!("{v:.3}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    s.to_string()
+}
+
+/// Percentage with one decimal, e.g. "96.5%".
+pub fn pct(fraction: f64) -> String {
+    format!("{:.1}%", fraction * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_prefixes() {
+        assert_eq!(si_flops(103.7e12), "103.7 TFLOP/s");
+        assert_eq!(si_flops(7.7e12), "7.7 TFLOP/s");
+        assert_eq!(si_flops(900.0e9), "900 GFLOP/s");
+        assert_eq!(si_flops(12.0), "12 FLOP/s");
+    }
+
+    #[test]
+    fn bytes_prefixes() {
+        assert_eq!(si_bytes(16e9), "16 GB");
+        assert_eq!(si_bytes(1.5e3), "1.5 kB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(1.25), "1.25 s");
+        assert_eq!(duration(0.00125), "1.25 ms");
+        assert_eq!(duration(2.5e-7), "250 ns");
+        assert_eq!(duration(0.0), "0 s");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.965), "96.5%");
+        assert_eq!(pct(0.419), "41.9%");
+    }
+}

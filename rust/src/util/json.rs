@@ -1,0 +1,465 @@
+//! Minimal JSON value type with an emitter and a strict recursive-descent
+//! parser. Replaces `serde_json` (absent from the offline vendor set).
+//!
+//! Used for `artifacts/manifest.json` (written by `python/compile/aot.py`)
+//! and for the machine-readable reports under `out/`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON document. Objects use a BTreeMap so emission is deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Parse or access error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum JsonError {
+    #[error("json parse error at byte {0}: {1}")]
+    Parse(usize, String),
+    #[error("json: missing key '{0}'")]
+    MissingKey(String),
+    #[error("json: wrong type, wanted {0}")]
+    WrongType(&'static str),
+}
+
+impl Json {
+    // ---------- constructors ----------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(v: impl Into<f64>) -> Json {
+        Json::Num(v.into())
+    }
+
+    // ---------- accessors ----------
+
+    pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| JsonError::MissingKey(key.into())),
+            _ => Err(JsonError::WrongType("object")),
+        }
+    }
+
+    /// `get` that tolerates absence.
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            _ => Err(JsonError::WrongType("number")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        let v = self.as_f64()?;
+        if v < 0.0 || v.fract() != 0.0 {
+            return Err(JsonError::WrongType("non-negative integer"));
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(JsonError::WrongType("string")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(JsonError::WrongType("bool")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json], JsonError> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => Err(JsonError::WrongType("array")),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => Err(JsonError::WrongType("object")),
+        }
+    }
+
+    // ---------- emit ----------
+
+    /// Compact single-line emission.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.emit(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty 2-space-indented emission with trailing newline.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.emit(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn emit(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => emit_num(out, *v),
+            Json::Str(s) => emit_str(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.emit(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    emit_str(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.emit(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+
+    // ---------- parse ----------
+
+    /// Strict parse of a complete JSON document.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        skip_ws(bytes, &mut pos);
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(JsonError::Parse(pos, "trailing data".into()));
+        }
+        Ok(value)
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn emit_num(out: &mut String, v: f64) {
+    if v.is_finite() {
+        if v.fract() == 0.0 && v.abs() < 9e15 {
+            out.push_str(&format!("{}", v as i64));
+        } else {
+            out.push_str(&format!("{v}"));
+        }
+    } else {
+        // JSON has no inf/nan; emit null like serde_json does.
+        out.push_str("null");
+    }
+}
+
+fn emit_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    if *pos >= b.len() {
+        return Err(JsonError::Parse(*pos, "unexpected end of input".into()));
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, pos),
+        c => Err(JsonError::Parse(*pos, format!("unexpected byte '{}'", c as char))),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json, JsonError> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(JsonError::Parse(*pos, format!("expected '{lit}'")))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    let start = *pos;
+    if b[*pos] == b'-' {
+        *pos += 1;
+    }
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])
+        .map_err(|_| JsonError::Parse(start, "bad utf8 in number".into()))?;
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|e| JsonError::Parse(start, format!("bad number '{text}': {e}")))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        if *pos >= b.len() {
+            return Err(JsonError::Parse(*pos, "unterminated string".into()));
+        }
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    return Err(JsonError::Parse(*pos, "bad escape".into()));
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            return Err(JsonError::Parse(*pos, "short \\u escape".into()));
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| JsonError::Parse(*pos, "bad \\u escape".into()))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| JsonError::Parse(*pos, "bad \\u escape".into()))?;
+                        // BMP only; surrogate pairs unsupported (not needed
+                        // for manifests we produce ourselves).
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => {
+                        return Err(JsonError::Parse(
+                            *pos,
+                            format!("unknown escape '\\{}'", c as char),
+                        ))
+                    }
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Copy a full UTF-8 scalar.
+                let s = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| JsonError::Parse(*pos, "bad utf8".into()))?;
+                let c = s.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        skip_ws(b, pos);
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(JsonError::Parse(*pos, "expected ',' or ']'".into())),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    *pos += 1; // '{'
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b'"' {
+            return Err(JsonError::Parse(*pos, "expected object key".into()));
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(JsonError::Parse(*pos, "expected ':'".into()));
+        }
+        *pos += 1;
+        skip_ws(b, pos);
+        let value = parse_value(b, pos)?;
+        map.insert(key, value);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => return Err(JsonError::Parse(*pos, "expected ',' or '}'".into())),
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string_compact())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let doc = Json::obj(vec![
+            ("name", Json::str("gemm")),
+            ("flops", Json::num(2.0 * 128.0 * 128.0 * 128.0)),
+            ("shapes", Json::arr([Json::num(128.0), Json::num(256.0)])),
+            ("tc", Json::Bool(true)),
+            ("note", Json::Null),
+        ]);
+        let text = doc.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, doc);
+    }
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::str("a\nb"));
+    }
+
+    #[test]
+    fn parse_rejects_trailing_garbage() {
+        assert!(matches!(Json::parse("{} x"), Err(JsonError::Parse(..))));
+        assert!(matches!(Json::parse("[1,]"), Err(JsonError::Parse(..))));
+        assert!(matches!(Json::parse(""), Err(JsonError::Parse(..))));
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let s = Json::str("quote\" slash\\ tab\t nl\n unicode→");
+        let parsed = Json::parse(&s.to_string_compact()).unwrap();
+        assert_eq!(parsed, s);
+    }
+
+    #[test]
+    fn integers_emitted_without_fraction() {
+        assert_eq!(Json::num(5.0).to_string_compact(), "5");
+        assert_eq!(Json::num(5.25).to_string_compact(), "5.25");
+    }
+
+    #[test]
+    fn accessors() {
+        let doc = Json::parse(r#"{"a": {"b": [1, 2, 3]}, "s": "x"}"#).unwrap();
+        assert_eq!(doc.get("a").unwrap().get("b").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("s").unwrap().as_str().unwrap(), "x");
+        assert!(matches!(doc.get("zzz"), Err(JsonError::MissingKey(_))));
+        assert!(matches!(doc.get("s").unwrap().as_f64(), Err(JsonError::WrongType(_))));
+    }
+
+    #[test]
+    fn as_usize_rejects_fraction() {
+        assert_eq!(Json::Num(3.0).as_usize().unwrap(), 3);
+        assert!(Json::Num(3.5).as_usize().is_err());
+        assert!(Json::Num(-1.0).as_usize().is_err());
+    }
+
+    #[test]
+    fn unicode_escape() {
+        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::str("A"));
+    }
+}

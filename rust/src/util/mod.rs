@@ -1,0 +1,17 @@
+//! Shared substrate utilities: deterministic PRNG, statistics, JSON,
+//! human-unit formatting and fixed-width text tables.
+//!
+//! These exist in-repo because the offline vendor set has no `rand`,
+//! `serde`, or `prettytable` — see DESIGN.md §1.
+
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use fmt::{si, si_bytes, si_flops};
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;

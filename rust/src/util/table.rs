@@ -1,0 +1,163 @@
+//! Fixed-width text-table rendering for paper-style tables (Tables I–III)
+//! in terminal reports and EXPERIMENTS.md snippets.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers; all columns default
+    /// to left alignment.
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Left; header.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set per-column alignment (length must match the header).
+    pub fn aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Append a row; must match the header arity.
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for &str rows.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an ASCII box table.
+    pub fn render(&self) -> String {
+        let widths = self.widths();
+        let mut out = String::new();
+        self.rule(&mut out, &widths);
+        self.line(&mut out, &widths, &self.header);
+        self.rule(&mut out, &widths);
+        for row in &self.rows {
+            self.line(&mut out, &widths, row);
+        }
+        self.rule(&mut out, &widths);
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push('|');
+        for h in &self.header {
+            out.push_str(&format!(" {h} |"));
+        }
+        out.push_str("\n|");
+        for a in &self.aligns {
+            out.push_str(match a {
+                Align::Left => "---|",
+                Align::Right => "--:|",
+            });
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for cell in row {
+                out.push_str(&format!(" {cell} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.chars().count());
+            }
+        }
+        widths
+    }
+
+    fn rule(&self, out: &mut String, widths: &[usize]) {
+        out.push('+');
+        for w in widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('+');
+        }
+        out.push('\n');
+    }
+
+    fn line(&self, out: &mut String, widths: &[usize], cells: &[String]) {
+        out.push('|');
+        for ((cell, w), align) in cells.iter().zip(widths).zip(&self.aligns) {
+            let pad = w - cell.chars().count();
+            match align {
+                Align::Left => out.push_str(&format!(" {cell}{} |", " ".repeat(pad))),
+                Align::Right => out.push_str(&format!(" {}{cell} |", " ".repeat(pad))),
+            }
+        }
+        out.push('\n');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Version", "TFLOP/s"]).aligns(&[Align::Left, Align::Right]);
+        t.row_str(&["v1", "15.421"]);
+        t.row_str(&["v5", "29.182"]);
+        let s = t.render();
+        assert!(s.contains("| Version | TFLOP/s |"), "{s}");
+        assert!(s.contains("| v1      |  15.421 |"), "{s}");
+        // box rule width is consistent
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines.iter().all(|l| l.chars().count() == lines[0].chars().count()));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["a", "b"]).aligns(&[Align::Left, Align::Right]);
+        t.row_str(&["x", "1"]);
+        let md = t.render_markdown();
+        assert_eq!(md.lines().count(), 3);
+        assert!(md.lines().nth(1).unwrap().contains("--:"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Cross-module integration: operator graph → framework lowering →
+//! profiler session → roofline model → chart, end to end over the
+//! simulated V100 — plus consistency checks between the Rust trace
+//! generator and the AOT-compiled JAX twin.
+
+use hroofline::device::{GpuSpec, MemLevel};
+use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
+use hroofline::dl::lower::{lower, Framework, Phase};
+use hroofline::dl::Policy;
+use hroofline::profiler::Session;
+use hroofline::roofline::chart::RooflineChart;
+use hroofline::roofline::model::RooflineModel;
+
+#[test]
+fn full_pipeline_tf_forward() {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::TensorFlow, Policy::O1);
+    let profile = Session::standard(&spec).profile(trace.phase(Phase::Forward));
+    assert!(profile.n_kernels() > 5);
+    assert!(profile.total_seconds() > 0.0);
+
+    let model = RooflineModel::from_profile(&spec, &profile);
+    model.validate_bounds().expect("roofline bound");
+    assert!(!model.points.is_empty());
+
+    let chart = RooflineChart::hierarchical(&model, "integration");
+    let svg = chart.to_svg();
+    assert!(svg.contains("</svg>"));
+    // Every point renders its triplet.
+    let circles = svg.matches("<circle").count();
+    assert!(circles >= model.points.len() * 2);
+}
+
+#[test]
+fn backward_pass_dominates_forward_in_time() {
+    // Paper §IV-A: "the backward pass ... is generally more
+    // time-consuming" — holds under both frameworks.
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    for fw in [Framework::TensorFlow, Framework::PyTorch] {
+        let trace = lower(&graph, fw, Policy::O1);
+        let fwd = Session::standard(&spec)
+            .profile(trace.phase(Phase::Forward))
+            .total_seconds();
+        let bwd = Session::standard(&spec)
+            .profile(trace.phase(Phase::Backward))
+            .total_seconds();
+        assert!(bwd > fwd, "{fw:?}: bwd {bwd} fwd {fwd}");
+    }
+}
+
+#[test]
+fn amp_o1_speeds_up_both_frameworks() {
+    // §IV-C: AMP reduces run time materially on the compute phases.
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    for fw in [Framework::TensorFlow, Framework::PyTorch] {
+        let o0 = lower(&graph, fw, Policy::O0);
+        let o1 = lower(&graph, fw, Policy::O1);
+        let time = |t: &hroofline::dl::lower::FrameworkTrace| {
+            Session::standard(&spec).profile(&t.all()).total_seconds()
+        };
+        let (t0, t1) = (time(&o0), time(&o1));
+        assert!(t1 < t0 * 0.85, "{fw:?}: O1 {t1} vs O0 {t0}");
+    }
+}
+
+#[test]
+fn optimizer_kernels_sit_near_bandwidth_ceiling() {
+    // Memory-bound streaming kernels should attain a sizable fraction of
+    // the HBM roofline at their AI — the "circles near the ceilings"
+    // reading of Fig. 7.
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let profile = Session::standard(&spec).profile(trace.phase(Phase::Optimizer));
+    let model = RooflineModel::from_profile(&spec, &profile);
+    assert!(!model.points.is_empty());
+    for p in &model.points {
+        let (_, ai) = p.ai.iter().find(|(l, _)| *l == MemLevel::Hbm).unwrap();
+        let bound = model.ceilings.bound(MemLevel::Hbm, *ai);
+        assert!(
+            p.flops_per_sec > 0.2 * bound,
+            "{}: {:.2e} vs bound {:.2e}",
+            p.name,
+            p.flops_per_sec,
+            bound
+        );
+    }
+}
+
+#[test]
+fn lite_graph_flops_match_aot_manifest_when_present() {
+    // The Rust lite config and the AOT-compiled JAX model are twins:
+    // their *forward* FLOP counts must agree within a factor ~2.5 (XLA
+    // counts transcendentals/padding/fusions differently).
+    let Ok(store) = hroofline::runtime::ArtifactStore::open_default() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let Ok(entry) = store.entry("forward") else {
+        return;
+    };
+    let Some(xla_flops) = entry.flops_per_run else {
+        eprintln!("skipping: no XLA cost analysis available");
+        return;
+    };
+    let graph = deepcam(&DeepCamConfig::lite());
+    let ours = graph.total_flops() as f64;
+    let ratio = ours / xla_flops;
+    assert!(
+        (0.3..3.0).contains(&ratio),
+        "graph {ours:.3e} vs XLA {xla_flops:.3e} (ratio {ratio:.2})"
+    );
+}
+
+#[test]
+fn profiler_overhead_scales_with_metric_passes() {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::lite());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let kernels = trace.phase(Phase::Forward);
+
+    let packed = Session::standard(&spec).profile(kernels);
+    let mut cfg = hroofline::profiler::SessionConfig::default();
+    cfg.one_metric_per_run = true;
+    let separate = Session::new(&spec, cfg).try_profile(kernels).unwrap();
+    assert!(separate.profiling_overhead_s > 2.0 * packed.profiling_overhead_s);
+    // Same derived results either way (determinism requirement, §II-B).
+    assert!((separate.total_seconds() - packed.total_seconds()).abs() < 1e-9);
+}
+
+#[test]
+fn a100_variant_profiles_consistently() {
+    // Alternate-architecture extension (paper §V future work): the same
+    // trace on an A100 model is strictly faster and keeps bounds.
+    let v100 = GpuSpec::v100();
+    let a100 = GpuSpec::a100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::TensorFlow, Policy::O1);
+    let t_v = Session::standard(&v100).profile(trace.phase(Phase::Forward));
+    let t_a = Session::standard(&a100).profile(trace.phase(Phase::Forward));
+    assert!(t_a.total_seconds() < t_v.total_seconds());
+    RooflineModel::from_profile(&a100, &t_a)
+        .validate_bounds()
+        .unwrap();
+}

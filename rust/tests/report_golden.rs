@@ -1,0 +1,51 @@
+//! Report-level golden checks: every paper artifact generates, writes
+//! its files, and carries the paper-shape invariants end to end.
+
+use hroofline::report::{generate, ALL_IDS};
+
+#[test]
+fn all_artifacts_generate_and_write() {
+    let dir = std::env::temp_dir().join(format!("hroofline-golden-{}", std::process::id()));
+    for id in ALL_IDS {
+        let a = generate(id).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert_eq!(a.id, id);
+        assert!(!a.text.is_empty(), "{id}: empty text");
+        a.write_to(&dir).unwrap();
+        assert!(dir.join(format!("{id}.txt")).exists());
+        assert!(dir.join(format!("{id}.json")).exists());
+        if a.svg.is_some() {
+            let svg = std::fs::read_to_string(dir.join(format!("{id}.svg"))).unwrap();
+            assert!(svg.starts_with("<svg"), "{id}: bad svg");
+            assert!(svg.trim_end().ends_with("</svg>"), "{id}: unterminated svg");
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn figures_have_svgs_tables_do_not() {
+    for id in ALL_IDS {
+        let a = generate(id).unwrap();
+        if id.starts_with("fig") {
+            assert!(a.svg.is_some(), "{id} should have a chart");
+        } else {
+            assert!(a.svg.is_none(), "{id} is a table");
+        }
+    }
+}
+
+#[test]
+fn headline_shape_summary() {
+    // The cross-figure story in one place (EXPERIMENTS.md §shape):
+    // TF forward has a dominant TC kernel; PyTorch forward does not;
+    // PyTorch's backward top kernel is the slow FP32 wgrad; the
+    // optimizer is entirely memory-bound.
+    let f3 = generate("fig3").unwrap().json;
+    let f5 = generate("fig5").unwrap().json;
+    let f6 = generate("fig6").unwrap().json;
+    let share3 = f3.get("top_kernel_time_share").unwrap().as_f64().unwrap();
+    let share5 = f5.get("top_kernel_time_share").unwrap().as_f64().unwrap();
+    assert!(share3 > share5, "TF fwd more dominant than PT fwd");
+    let top6 = &f6.get("kernels").unwrap().as_arr().unwrap()[0];
+    assert_eq!(top6.get("tensor").unwrap().as_bool().unwrap(), false);
+}
