@@ -10,6 +10,7 @@ use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
 use hroofline::profiler::Session;
+use hroofline::util::error as anyhow;
 use hroofline::util::{fmt, Table};
 
 fn main() -> anyhow::Result<()> {

@@ -24,6 +24,7 @@ use hroofline::ert::{empirical, sweep::SweepConfig};
 use hroofline::profiler::Session;
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
+use hroofline::util::error as anyhow;
 use hroofline::util::fmt;
 
 fn main() -> anyhow::Result<()> {

@@ -9,6 +9,7 @@
 
 use hroofline::device::{GpuSpec, Precision};
 use hroofline::profiler::Session;
+use hroofline::util::error as anyhow;
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
 use hroofline::sim::kernel::{KernelDesc, KernelInvocation};

@@ -39,9 +39,16 @@ pub struct Parsed {
 }
 
 /// CLI parse error with a user-facing message.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("{0}")]
+#[derive(Debug, PartialEq)]
 pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Cmd {
     pub fn new(name: &str, about: &str) -> Cmd {

@@ -2,9 +2,8 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::cli::Parsed;
+use crate::util::error::{self as anyhow, Context, Result};
 use crate::device::{GpuSpec, MemLevel};
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, Phase};
@@ -29,6 +28,10 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
 
     if mode == "modeled" || mode == "both" {
         let spec = GpuSpec::v100();
+        // The modeled sweep fans its working-set × intensity grid across
+        // the machine's cores via `exec::parallel_map` (see
+        // `ert::modeled::run_sweep_threads`); output is identical to the
+        // serial path because every grid point is a pure evaluation.
         let ceilings = modeled::characterize(&spec, &config);
         let mut t = Table::new(&["ceiling", "value"]);
         for (label, gf) in &ceilings.compute_gflops {
@@ -44,6 +47,9 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
     }
 
     if mode == "empirical" || mode == "both" {
+        // Deliberately serial: the empirical driver measures wall-clock
+        // bandwidth on real silicon, and concurrent sweeps would contend
+        // for the very cache/memory hierarchy being characterized.
         println!("== empirical host CPU sweep (this machine) ==");
         for result in empirical::characterize(&config) {
             let peak = result.peak_gflops();
@@ -121,17 +127,21 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
         other => anyhow::bail!("bad phase '{other}'"),
     };
 
-    for (phase, label) in phases {
+    // Profile the requested phases in parallel (each phase is an
+    // independent, deterministic simulation pass). Rendering is captured
+    // into strings inside the workers and printed in input order below,
+    // so stdout and the written SVGs are byte-identical to a serial run.
+    let workers = crate::exec::default_workers(phases.len());
+    let rendered = crate::exec::parallel_map(phases, workers, |(phase, label)| {
         let kernel_trace = trace.phase(phase);
         if kernel_trace.is_empty() {
-            println!("[{label}] no kernels (TF folds the optimizer into backward)");
-            continue;
+            return (label, None);
         }
         let profile = Session::standard(&spec).profile(kernel_trace);
         let model = RooflineModel::from_profile(&spec, &profile);
         let title = format!("{} DeepCAM {label} ({})", fw.name(), policy.name());
         let chart = RooflineChart::hierarchical(&model, &title);
-        println!(
+        let report = format!(
             "== {title} ==\ntotal {} | kernels {} | invocations {} | profiler overhead {}\n{}",
             fmt::duration(profile.total_seconds()),
             profile.n_kernels(),
@@ -139,8 +149,16 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
             fmt::duration(profile.profiling_overhead_s),
             chart.to_table().render()
         );
+        (label, Some((report, chart.to_svg())))
+    });
+    for (label, result) in rendered {
+        let Some((report, svg)) = result else {
+            println!("[{label}] no kernels (TF folds the optimizer into backward)");
+            continue;
+        };
+        println!("{report}");
         let svg_path = Path::new(&out_dir).join(format!("{}_{label}.svg", fw.name()));
-        std::fs::write(&svg_path, chart.to_svg())?;
+        std::fs::write(&svg_path, svg)?;
         println!("wrote {}", svg_path.display());
     }
     Ok(())

@@ -5,10 +5,10 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::runtime::engine::{literal_f32, to_vec_f32};
+use crate::runtime::xla;
 use crate::runtime::{ArtifactStore, Engine};
+use crate::util::error::{self as anyhow, Context, Result};
 use crate::util::{Rng, Summary};
 
 /// Training-run configuration.

@@ -57,38 +57,53 @@ pub fn ert_kernel(spec: &GpuSpec, p: Precision, ws: u64, fpe: u64, passes: u64) 
     }
 }
 
-/// Run the modeled sweep on a device for one precision.
+/// Run the modeled sweep on a device for one precision, fanning the
+/// (working set × FLOPs/elem) grid across the machine's cores.
 pub fn run_sweep(spec: &GpuSpec, p: Precision, config: &SweepConfig) -> SweepResult {
-    let cache = CacheModel::new(spec);
-    let cycles = CycleModel::new(spec);
-    let mut points = Vec::new();
-    for &ws in &config.working_sets {
-        for &fpe in &config.flops_per_elem {
-            // Enough passes that ramp is negligible, as real ERT does by
-            // repeating trials until the duration is measurable.
-            let passes = ((256u64 << 20) / ws.max(1)).clamp(4, 4096);
-            let k = ert_kernel(spec, p, ws, fpe, passes);
-            let t = cache.traffic(&k);
-            let secs = cycles.elapsed_seconds(&k, &t);
-            let flops = k.mix.cuda_core_flops() as f64;
-            // ERT credits algorithmic bytes at the measurement boundary;
-            // for bandwidth attribution we use the level the buffer
-            // resides in — i.e. traffic at the slowest level it touched.
-            // ERT credits *algorithmic* bytes (the kernel's requests) —
-            // the empirical bandwidth of the level the buffer lives in
-            // emerges from the sweep timing, exactly as on hardware.
-            let algorithmic_bytes = k.access.requested_bytes() as f64;
-            points.push(SweepPoint {
-                working_set_bytes: ws,
-                flops_per_elem: fpe,
-                flops,
-                bytes: algorithmic_bytes,
-                gflops: flops / secs / 1e9,
-                gbytes: algorithmic_bytes / secs / 1e9,
-                time: Summary::of(&[secs]),
-            });
+    // No artificial cap: `parallel_map` clamps the worker count to the
+    // grid size (standard config: 19 × 9 = 171 independent points).
+    run_sweep_threads(spec, p, config, crate::exec::default_workers(usize::MAX))
+}
+
+/// [`run_sweep`] with an explicit worker count. Every grid point is an
+/// independent pure evaluation of the analytic models, and
+/// `parallel_map` preserves input order, so the output is *identical*
+/// to the serial path (`threads = 1`) at any worker count.
+pub fn run_sweep_threads(
+    spec: &GpuSpec,
+    p: Precision,
+    config: &SweepConfig,
+    threads: usize,
+) -> SweepResult {
+    let grid: Vec<(u64, u64)> = config
+        .working_sets
+        .iter()
+        .flat_map(|&ws| config.flops_per_elem.iter().map(move |&fpe| (ws, fpe)))
+        .collect();
+    let points = crate::exec::parallel_map(grid, threads, |(ws, fpe)| {
+        let cache = CacheModel::new(spec);
+        let cycles = CycleModel::new(spec);
+        // Enough passes that ramp is negligible, as real ERT does by
+        // repeating trials until the duration is measurable.
+        let passes = ((256u64 << 20) / ws.max(1)).clamp(4, 4096);
+        let k = ert_kernel(spec, p, ws, fpe, passes);
+        let t = cache.traffic(&k);
+        let secs = cycles.elapsed_seconds(&k, &t);
+        let flops = k.mix.cuda_core_flops() as f64;
+        // ERT credits *algorithmic* bytes (the kernel's requests) —
+        // the empirical bandwidth of the level the buffer lives in
+        // emerges from the sweep timing, exactly as on hardware.
+        let algorithmic_bytes = k.access.requested_bytes() as f64;
+        SweepPoint {
+            working_set_bytes: ws,
+            flops_per_elem: fpe,
+            flops,
+            bytes: algorithmic_bytes,
+            gflops: flops / secs / 1e9,
+            gbytes: algorithmic_bytes / secs / 1e9,
+            time: Summary::of(&[secs]),
         }
-    }
+    });
     SweepResult {
         label: p.name().to_string(),
         points,
@@ -195,6 +210,23 @@ mod tests {
         assert!(l1 > l2 && l2 > hbm, "{l1} {l2} {hbm}");
         // HBM band should be near the spec's 900 GB/s (within model slack).
         assert!((hbm - 900.0).abs() < 200.0, "hbm {hbm}");
+    }
+
+    #[test]
+    fn parallel_sweep_identical_to_serial() {
+        // The coordinator's speed win must not change a single bit of
+        // output: grid points are pure and order is preserved.
+        let spec = GpuSpec::v100();
+        let cfg = SweepConfig::quick();
+        let serial = run_sweep_threads(&spec, Precision::Fp32, &cfg, 1);
+        let parallel = run_sweep_threads(&spec, Precision::Fp32, &cfg, 4);
+        assert_eq!(serial.points.len(), parallel.points.len());
+        for (a, b) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(a.working_set_bytes, b.working_set_bytes);
+            assert_eq!(a.flops_per_elem, b.flops_per_elem);
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+            assert_eq!(a.gbytes.to_bits(), b.gbytes.to_bits());
+        }
     }
 
     #[test]

@@ -45,11 +45,7 @@ impl ThreadPool {
 
     /// Pool sized to the machine (at least 1, at most `cap`).
     pub fn machine_sized(cap: usize) -> ThreadPool {
-        let n = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .min(cap.max(1));
-        ThreadPool::new(n)
+        ThreadPool::new(default_workers(cap))
     }
 
     /// Submit a job.
@@ -95,6 +91,16 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+/// Default worker count for CPU-bound sweeps: the machine's available
+/// parallelism, at least 2 on any multi-core host (so coordinator
+/// sweeps actually fan out), capped by `cap` and floored at 1.
+pub fn default_workers(cap: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .clamp(1, cap.max(1))
 }
 
 /// Apply `f` to every item, in parallel across up to `threads` workers,
@@ -180,5 +186,16 @@ mod tests {
     fn machine_sized_at_least_one() {
         let pool = ThreadPool::machine_sized(64);
         assert!(pool.n_workers() >= 1);
+    }
+
+    #[test]
+    fn default_workers_bounds() {
+        assert!(default_workers(8) >= 1);
+        assert!(default_workers(8) <= 8);
+        assert_eq!(default_workers(1), 1);
+        // On any multi-core machine the coordinator fans out.
+        if std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1) >= 2 {
+            assert!(default_workers(16) >= 2);
+        }
     }
 }

@@ -28,7 +28,8 @@
 //!
 //! Substrate modules ([`util`], [`cli`], [`exec`], [`prop`],
 //! [`bench_harness`]) replace crates unavailable in the offline build
-//! (clap/tokio/proptest/criterion/serde).
+//! (clap/tokio/proptest/criterion/serde); [`util::error`] stands in for
+//! `anyhow`/`thiserror` and [`runtime::xla`] for the PJRT bindings.
 //!
 //! ## Quickstart
 //!

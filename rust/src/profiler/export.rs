@@ -12,9 +12,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
-
 use crate::device::GpuSpec;
+use crate::util::error::{bail, Context, Result};
 use crate::profiler::profile::Profile;
 use crate::sim::counters::CounterSet;
 

@@ -23,13 +23,27 @@ pub struct Metric {
 }
 
 /// Metric-name error.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum MetricError {
-    #[error("malformed metric name '{0}': expected unit__counter.rollup[.submetric]")]
     Malformed(String),
-    #[error("unknown metric '{0}' (not in the Table II set)")]
     Unknown(String),
 }
+
+impl std::fmt::Display for MetricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricError::Malformed(name) => write!(
+                f,
+                "malformed metric name '{name}': expected unit__counter.rollup[.submetric]"
+            ),
+            MetricError::Unknown(name) => {
+                write!(f, "unknown metric '{name}' (not in the Table II set)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MetricError {}
 
 impl Metric {
     /// Parse a metric name into its structural components.

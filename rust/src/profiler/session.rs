@@ -59,20 +59,47 @@ impl Default for SessionConfig {
 }
 
 /// Session failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SessionError {
-    #[error(transparent)]
-    Metric(#[from] crate::profiler::metrics::MetricError),
-    #[error(
-        "non-deterministic execution detected for kernel '{kernel}' on metric '{metric}' \
-         across replay passes ({a} vs {b}); enable determinism (cf. tensorflow-determinism)"
-    )]
+    Metric(crate::profiler::metrics::MetricError),
     NonDeterministic {
         kernel: String,
         metric: String,
         a: f64,
         b: f64,
     },
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // Transparent: delegate to the wrapped metric error.
+            SessionError::Metric(e) => write!(f, "{e}"),
+            SessionError::NonDeterministic { kernel, metric, a, b } => write!(
+                f,
+                "non-deterministic execution detected for kernel '{kernel}' on metric \
+                 '{metric}' across replay passes ({a} vs {b}); enable determinism \
+                 (cf. tensorflow-determinism)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // Transparent: Display already *is* the inner error, so the
+            // source chain must continue past it (not repeat it).
+            SessionError::Metric(e) => e.source(),
+            SessionError::NonDeterministic { .. } => None,
+        }
+    }
+}
+
+impl From<crate::profiler::metrics::MetricError> for SessionError {
+    fn from(e: crate::profiler::metrics::MetricError) -> SessionError {
+        SessionError::Metric(e)
+    }
 }
 
 /// A profiling session bound to a device.

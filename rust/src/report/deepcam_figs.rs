@@ -11,9 +11,8 @@
 //! | 8 | TensorFlow | backward | manual FP16 |
 //! | 9 | PyTorch | backward | O0 |
 
-use anyhow::Result;
-
 use crate::device::GpuSpec;
+use crate::util::error::{self as anyhow, Result};
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
 use crate::dl::Policy;

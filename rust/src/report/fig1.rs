@@ -2,9 +2,8 @@
 //! for FP64 / FP32 / FP16 / Tensor Core plus L1/L2/HBM bandwidths,
 //! rendered as a roofline chart with no application points.
 
-use anyhow::Result;
-
 use crate::device::{GpuSpec, MemLevel};
+use crate::util::error::Result;
 use crate::ert::modeled;
 use crate::ert::sweep::SweepConfig;
 use crate::roofline::chart::{ChartConfig, RooflineChart};

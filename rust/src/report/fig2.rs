@@ -1,9 +1,8 @@
 //! Fig. 2 — Tensor-core GEMM performance vs matrix size, cuBLAS-class
 //! vs hand-written WMMA. Rendered as an SVG line chart plus a table.
 
-use anyhow::Result;
-
 use crate::device::GpuSpec;
+use crate::util::error::Result;
 use crate::ert::gemm::{gemm_sweep, GemmImpl, GemmPoint};
 use crate::util::{Json, Table};
 

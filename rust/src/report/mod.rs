@@ -12,7 +12,7 @@ pub mod fig2;
 pub mod tab1;
 pub mod tab3;
 
-use anyhow::Result;
+use crate::util::error::{self as anyhow, Result};
 use std::path::Path;
 
 /// A rendered artifact.

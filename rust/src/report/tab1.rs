@@ -1,8 +1,7 @@
 //! Table I — the FP16 CUDA-core tuning ladder (v1 naive → v5 u32-only).
 
-use anyhow::Result;
-
 use crate::device::GpuSpec;
+use crate::util::error::Result;
 use crate::ert::fp16_ladder::ladder;
 use crate::util::{fmt, Json, Table};
 

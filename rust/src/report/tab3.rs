@@ -5,9 +5,8 @@
 //! the *fractions* and the TF≈2×PT zero-AI relationship are the
 //! reproduction targets (see EXPERIMENTS.md).
 
-use anyhow::Result;
-
 use crate::device::GpuSpec;
+use crate::util::error::Result;
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
 use crate::dl::Policy;

@@ -8,8 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::util::error::{bail, Context, Result};
 use crate::util::Json;
 
 /// Shape + dtype of one runtime tensor.

@@ -3,9 +3,9 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::runtime::artifacts::{ArtifactEntry, ArtifactStore};
+use crate::runtime::xla;
+use crate::util::error::{self as anyhow, Context, Result};
 use crate::util::Summary;
 
 /// A compiled, executable module.

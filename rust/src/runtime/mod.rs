@@ -10,6 +10,7 @@
 
 pub mod artifacts;
 pub mod engine;
+pub mod xla;
 
 pub use artifacts::{ArtifactEntry, ArtifactStore};
 pub use engine::{Engine, LoadedModule, TimedRun};

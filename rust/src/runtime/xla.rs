@@ -1,0 +1,317 @@
+//! Offline stand-in for the `xla`/`xla_extension` PJRT bindings.
+//!
+//! The real runtime path (`/opt/xla-example/load_hlo`) goes
+//! `PjRtClient::cpu() → HloModuleProto::from_text_file → compile →
+//! execute`. This container has no `xla_extension` shared library, so
+//! this module provides the same API surface with:
+//!
+//! * a **fully functional [`Literal`]** (f32/i32 buffers with shapes,
+//!   `vec1`/`reshape`/`to_vec`/`to_tuple`) — everything the engine and
+//!   the training driver do on the host side works for real;
+//! * a **client/compile layer that loads and validates HLO text** but
+//!   reports a clear [`XlaError`] at `compile` time, because no PJRT
+//!   backend exists to execute it. Callers already gate on artifact
+//!   presence (`ArtifactStore::open`), so in this build the execution
+//!   path is never reached; when a real `xla_extension` is available,
+//!   swap the `use crate::runtime::xla;` aliases back to the external
+//!   crate and nothing else changes.
+
+use std::fmt;
+
+/// Error type for the PJRT surface. Implements `std::error::Error` so
+/// call sites can attach context via [`crate::util::error::Context`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn backend_unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: no XLA/PJRT backend in this offline build (xla_extension is \
+         not vendored); HLO artifacts can be loaded and inspected but not \
+         executed — see rust/src/runtime/xla.rs"
+    ))
+}
+
+/// Element types a [`Literal`] can hold (F32 activations/parameters,
+/// S32 labels — the only dtypes the AOT artifacts use).
+pub trait NativeType: Copy + Sized {
+    fn literal_vec1(data: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>, XlaError>;
+}
+
+impl NativeType for f32 {
+    fn literal_vec1(data: &[Self]) -> Literal {
+        Literal::F32 {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>, XlaError> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(XlaError(format!("literal is not f32: {}", other.kind()))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal_vec1(data: &[Self]) -> Literal {
+        Literal::I32 {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>, XlaError> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(XlaError(format!("literal is not s32: {}", other.kind()))),
+        }
+    }
+}
+
+/// A host-side tensor value: flat buffer + shape, or a tuple of values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a flat buffer.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal_vec1(data)
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Literal::F32 { .. } => "f32",
+            Literal::I32 { .. } => "s32",
+            Literal::Tuple(_) => "tuple",
+        }
+    }
+
+    /// Number of scalar elements (tuples report the sum).
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(items) => items.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Shape dimensions; tuples have no dims.
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Literal::F32 { dims, .. } | Literal::I32 { dims, .. } => dims,
+            Literal::Tuple(_) => &[],
+        }
+    }
+
+    /// Reinterpret the buffer under a new shape with the same element
+    /// count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        if dims.iter().any(|&d| d < 0) {
+            return Err(XlaError(format!("reshape to negative extent {dims:?}")));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() || matches!(self, Literal::Tuple(_)) {
+            return Err(XlaError(format!(
+                "cannot reshape {} literal of {} elements to {:?}",
+                self.kind(),
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } => Literal::F32 {
+                data: data.clone(),
+                dims: dims.to_vec(),
+            },
+            Literal::I32 { data, .. } => Literal::I32 {
+                data: data.clone(),
+                dims: dims.to_vec(),
+            },
+            Literal::Tuple(_) => unreachable!("tuple rejected above"),
+        })
+    }
+
+    /// Copy the buffer out as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::extract(self)
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self {
+            Literal::Tuple(items) => Ok(items),
+            other => Err(XlaError(format!(
+                "literal is not a tuple: {}",
+                other.kind()
+            ))),
+        }
+    }
+}
+
+/// Parsed HLO module text (id-reassignment happens in the real parser;
+/// here we retain the text and its entry name for diagnostics).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file (the jax ≥ 0.5 interchange format).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading HLO text {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(XlaError(format!("{path} is not HLO text (no HloModule header)")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    /// The module name from the `HloModule <name>` header, if present.
+    pub fn name(&self) -> Option<&str> {
+        self.text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule "))
+            .map(|rest| rest.split([',', ' ']).next().unwrap_or(rest))
+    }
+}
+
+/// A computation handle wrapping a parsed module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            proto: proto.clone(),
+        }
+    }
+}
+
+/// The PJRT CPU client. Creation succeeds (there is always a host CPU);
+/// compilation is where the missing backend surfaces.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient { platform: "cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        let name = comp.proto.name().unwrap_or("<unnamed>").to_string();
+        Err(backend_unavailable(&format!("compiling HLO module '{name}'")))
+    }
+}
+
+/// A compiled executable. Never constructed in the offline build (see
+/// [`PjRtClient::compile`]); the type exists so the engine's signatures
+/// match the real bindings.
+pub struct PjRtLoadedExecutable {
+    _name: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on device; returns per-device, per-output buffers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(backend_unavailable(&format!(
+            "executing module '{}'",
+            self._name
+        )))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer to the host synchronously.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.dims(), &[6]);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.dims(), &[2, 3]);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(shaped.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_i32_and_bad_reshape() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+        // Negative extents rejected even when their product matches.
+        assert!(lit.reshape(&[-1, -3]).is_err());
+    }
+
+    #[test]
+    fn tuple_destructure() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        assert_eq!(t.element_count(), 2);
+        let items = t.to_tuple().unwrap();
+        assert_eq!(items.len(), 2);
+        assert!(Literal::vec1(&[0.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_exists_compile_reports_missing_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu");
+        let proto = HloModuleProto {
+            text: "HloModule train_step, entry_computation_layout={()->f32[]}".into(),
+        };
+        assert_eq!(proto.name(), Some("train_step"));
+        let err = client.compile(&XlaComputation::from_proto(&proto)).unwrap_err();
+        assert!(err.0.contains("train_step"), "{err}");
+        assert!(err.0.contains("offline"), "{err}");
+    }
+
+    #[test]
+    fn hlo_text_loader_validates_header() {
+        let dir = std::env::temp_dir().join(format!("hroofline-xla-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("m.hlo.txt");
+        std::fs::write(&good, "HloModule m\nENTRY main { ROOT c = f32[] constant(0) }\n").unwrap();
+        assert!(HloModuleProto::from_text_file(good.to_str().unwrap()).is_ok());
+        let bad = dir.join("bad.txt");
+        std::fs::write(&bad, "not hlo").unwrap();
+        assert!(HloModuleProto::from_text_file(bad.to_str().unwrap()).is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

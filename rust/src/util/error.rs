@@ -1,0 +1,247 @@
+//! Error-handling substrate: an `anyhow`-compatible dynamic error type
+//! plus the `anyhow!` / `bail!` / `ensure!` macros and the `Context`
+//! extension trait.
+//!
+//! The offline vendor set has neither `anyhow` nor `thiserror` (see
+//! DESIGN.md §1), so this module provides the same call-site surface:
+//! import it under the familiar name and existing code compiles
+//! unchanged:
+//!
+//! ```
+//! use hroofline::util::error as anyhow;
+//! use hroofline::util::error::{Context, Result};
+//!
+//! fn parse(s: &str) -> Result<u32> {
+//!     let n: u32 = s.parse().context("not a number")?;
+//!     anyhow::ensure!(n > 0, "need a positive count, got {n}");
+//!     Ok(n)
+//! }
+//!
+//! let err = parse("zzz").unwrap_err();
+//! assert!(format!("{err:#}").contains("not a number"));
+//! ```
+//!
+//! Design notes, mirroring `anyhow`:
+//!
+//! * [`Error`] deliberately does **not** implement `std::error::Error`;
+//!   that is what makes the blanket `impl<E: std::error::Error> From<E>`
+//!   coherent alongside the reflexive `From<Error> for Error`.
+//! * `{err}` displays the outermost message; `{err:#}` displays the full
+//!   `context: cause: root-cause` chain, like `anyhow`'s alternate mode.
+
+use std::fmt;
+
+/// A dynamic error: an ordered chain of messages, outermost context
+/// first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` specialized to [`Error`], with the same escape hatch
+/// (`Result<T, E>`) as `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug renders the full chain: that is what `.unwrap()` panics
+        // print, where the whole story matters.
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// The `anyhow` trick: `Error` is not `std::error::Error`, so this
+// blanket conversion cannot overlap the reflexive `From<Error>`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`, mirroring
+/// `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error into [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+///
+/// Divergence from real `anyhow`: the expression arm flattens its
+/// argument to one Display message — `anyhow!(err)` on an error with a
+/// source chain keeps only the outermost message (real `anyhow` keeps
+/// the chain via autoref specialization, which is not worth vendoring
+/// here). To preserve a chain, convert with `?`/`.into()` instead,
+/// which routes through `From<E: std::error::Error>`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+// Make the macros addressable through this module (and through aliases
+// of it, e.g. `use crate::util::error as anyhow; anyhow::bail!(...)`).
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("leaf failure")
+        }
+    }
+    impl std::error::Error for Leaf {}
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e: Error = Leaf.into();
+        let e = e.context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: leaf failure");
+        assert_eq!(e.root_cause(), "leaf failure");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn from_preserves_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, Leaf);
+        let e: Error = io.into();
+        assert!(format!("{e:#}").contains("leaf failure"), "{e:#}");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), Leaf> = Err(Leaf);
+        let e = r.context("while doing x").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while doing x: leaf failure");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(5).context("never used").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            let _ = "zz".parse::<u32>()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn positive(n: i64) -> Result<i64> {
+            ensure!(n != 0);
+            ensure!(n > 0, "need positive, got {n}");
+            if n == 13 {
+                bail!("unlucky {}", n);
+            }
+            Ok(n)
+        }
+        assert_eq!(positive(4).unwrap(), 4);
+        assert!(format!("{}", positive(0).unwrap_err()).contains("condition failed"));
+        assert_eq!(format!("{}", positive(-2).unwrap_err()), "need positive, got -2");
+        assert_eq!(format!("{}", positive(13).unwrap_err()), "unlucky 13");
+        let from_string = anyhow!(String::from("prebuilt"));
+        assert_eq!(format!("{from_string}"), "prebuilt");
+    }
+}

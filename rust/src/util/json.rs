@@ -19,15 +19,24 @@ pub enum Json {
 }
 
 /// Parse or access error.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json: missing key '{0}'")]
     MissingKey(String),
-    #[error("json: wrong type, wanted {0}")]
     WrongType(&'static str),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(pos, what) => write!(f, "json parse error at byte {pos}: {what}"),
+            JsonError::MissingKey(key) => write!(f, "json: missing key '{key}'"),
+            JsonError::WrongType(wanted) => write!(f, "json: wrong type, wanted {wanted}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------- constructors ----------

@@ -1,15 +1,18 @@
 //! Shared substrate utilities: deterministic PRNG, statistics, JSON,
-//! human-unit formatting and fixed-width text tables.
+//! human-unit formatting, fixed-width text tables, and the
+//! `anyhow`-compatible error type.
 //!
 //! These exist in-repo because the offline vendor set has no `rand`,
-//! `serde`, or `prettytable` — see DESIGN.md §1.
+//! `serde`, `prettytable`, `anyhow` or `thiserror` — see DESIGN.md §1.
 
+pub mod error;
 pub mod fmt;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use error::{Context, Error};
 pub use fmt::{si, si_bytes, si_flops};
 pub use json::Json;
 pub use rng::Rng;

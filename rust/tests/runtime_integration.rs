@@ -6,6 +6,7 @@
 //! checkout; CI and `make test` always build artifacts first.
 
 use hroofline::runtime::engine::{literal_f32, to_vec_f32};
+use hroofline::runtime::xla;
 use hroofline::runtime::{ArtifactStore, Engine};
 
 fn store_or_skip() -> Option<ArtifactStore> {
