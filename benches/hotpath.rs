@@ -1,23 +1,29 @@
 //! Hot-path micro-benches for the §Perf optimization pass (L3 targets):
 //!
-//! * the analytic cache/cycle simulator (per-kernel cost),
+//! * the analytic cache/cycle simulator (per-kernel cost, with and
+//!   without the `SimCache` memoizer),
 //! * profiler session throughput (kernels/second through a standard
-//!   metric collection),
+//!   metric collection) — `profile_full_step` is the headline number;
+//!   `profile_full_step_unmemoized` is the ablation against the
+//!   pre-memoization behaviour,
 //! * SVG chart emission,
 //! * the exact set-associative cache simulator (ablation: exact vs
-//!   analytic),
+//!   analytic) — `cache_exact_100k_accesses` is the other headline,
 //! * PJRT train-step execution (when artifacts are present) — the only
 //!   real-hardware hot path.
+//!
+//! Every run writes `BENCH_hotpath.json` (case → ns/iter + items/sec);
+//! CI archives it so the perf trajectory is diffable across PRs.
 
 use hroofline::bench_harness::{black_box, Bench};
 use hroofline::device::{GpuSpec, Precision};
 use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
-use hroofline::profiler::Session;
+use hroofline::profiler::{Session, SessionConfig};
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
-use hroofline::sim::{self, cache_sim, KernelDesc};
+use hroofline::sim::{self, cache_sim, KernelDesc, SimCache};
 
 fn main() {
     let spec = GpuSpec::v100();
@@ -46,12 +52,42 @@ fn main() {
         });
     }
 
-    // full profiling session over the whole training step
+    // memoized re-simulation of the full trace (K distinct kernels)
+    {
+        let all = all.clone();
+        b.case("simulate_trace_memoized", move || {
+            let spec = GpuSpec::v100();
+            let mut cache = SimCache::new(&spec);
+            let mut acc = 0.0f64;
+            for inv in &all {
+                acc += cache.simulate(&inv.kernel).elapsed_seconds();
+            }
+            black_box(acc);
+            all.len() as u64
+        });
+    }
+
+    // full profiling session over the whole training step (headline)
     {
         let all = all.clone();
         b.case("profile_full_step", move || {
             let spec = GpuSpec::v100();
             let p = Session::standard(&spec).profile(&all);
+            black_box(p.n_kernels() as u64);
+            n_inv
+        });
+    }
+
+    // ablation: the same session with memoization off and a single
+    // worker — the pre-optimization per-entry behaviour
+    {
+        let all = all.clone();
+        b.case("profile_full_step_unmemoized", move || {
+            let spec = GpuSpec::v100();
+            let mut cfg = SessionConfig::default();
+            cfg.memoize = false;
+            cfg.threads = Some(1);
+            let p = Session::new(&spec, cfg).profile(&all);
             black_box(p.n_kernels() as u64);
             n_inv
         });

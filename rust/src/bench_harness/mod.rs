@@ -7,9 +7,15 @@
 //! fig3_tf_forward/profile   time: [1.234 ms 1.250 ms 1.271 ms]  n=50
 //! ```
 //!
-//! Timings are wall-clock medians over warmup + measured iterations;
-//! a machine-readable JSON blob is appended to `out/bench/<name>.json`
-//! so the §Perf iteration log in EXPERIMENTS.md can diff runs.
+//! Timings are wall-clock medians over warmup + measured iterations.
+//! Two machine-readable artifacts are written per group:
+//!
+//! * `out/bench/<group>.json` — the full stats (median/mean/p05/p95),
+//!   for the §Perf iteration log in EXPERIMENTS.md;
+//! * `BENCH_<group>.json` — the perf-trajectory summary (case name →
+//!   `ns_per_iter` and `items_per_sec`), written to the working
+//!   directory (override with `HROOFLINE_BENCH_DIR`) so CI can archive
+//!   one small file per run and diff regressions across PRs.
 
 use crate::util::{fmt, Json, Summary};
 use std::time::Instant;
@@ -131,6 +137,43 @@ impl Bench {
             let path = dir.join(format!("{}.json", self.group));
             let _ = std::fs::write(path, doc.to_string_pretty());
         }
+
+        // Perf-trajectory summary: BENCH_<group>.json, flat and stable
+        // so successive runs diff cleanly (case → ns/iter + items/sec).
+        let summary = Json::Obj(
+            [
+                ("schema".to_string(), Json::str("hroofline-bench-v1")),
+                ("group".to_string(), Json::str(&self.group)),
+                ("iters".to_string(), Json::num(self.iters as f64)),
+                (
+                    "cases".to_string(),
+                    Json::Obj(
+                        results
+                            .iter()
+                            .map(|r| {
+                                let items_per_sec = if r.secs.median > 0.0 {
+                                    r.work_units as f64 / r.secs.median
+                                } else {
+                                    0.0
+                                };
+                                (
+                                    r.name.clone(),
+                                    Json::obj(vec![
+                                        ("ns_per_iter", Json::num(r.secs.median * 1e9)),
+                                        ("items_per_sec", Json::num(items_per_sec)),
+                                    ]),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let bench_dir = std::env::var("HROOFLINE_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        let path = std::path::Path::new(&bench_dir).join(format!("BENCH_{}.json", self.group));
+        let _ = std::fs::write(path, summary.to_string_pretty());
     }
 }
 
@@ -154,8 +197,11 @@ mod tests {
 
     #[test]
     fn bench_runs_and_reports() {
+        let dir = std::env::temp_dir().join(format!("hroofline-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
         std::env::set_var("HROOFLINE_BENCH_ITERS", "5");
         std::env::set_var("HROOFLINE_BENCH_WARMUP", "1");
+        std::env::set_var("HROOFLINE_BENCH_DIR", &dir);
         let mut b = Bench::new("selftest");
         b.case("spin", || {
             let mut acc = 0u64;
@@ -168,9 +214,20 @@ mod tests {
         let results = b.run();
         std::env::remove_var("HROOFLINE_BENCH_ITERS");
         std::env::remove_var("HROOFLINE_BENCH_WARMUP");
+        std::env::remove_var("HROOFLINE_BENCH_DIR");
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].secs.n, 5);
         assert!(results[0].secs.median >= 0.0);
         assert_eq!(results[0].work_units, 1000);
+
+        // The perf-trajectory summary is valid JSON with the promised
+        // shape: case name → {ns_per_iter, items_per_sec}.
+        let text = std::fs::read_to_string(dir.join("BENCH_selftest.json")).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("group").unwrap().as_str().unwrap(), "selftest");
+        let spin = doc.get("cases").unwrap().get("spin").unwrap();
+        assert!(spin.get("ns_per_iter").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(spin.get("items_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -128,16 +128,19 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     };
 
     // Profile the requested phases in parallel (each phase is an
-    // independent, deterministic simulation pass). Rendering is captured
+    // independent, deterministic simulation pass; within each phase the
+    // session additionally dedupes kernel descriptors and fans the
+    // trace out — see `Session::try_profile`). Rendering is captured
     // into strings inside the workers and printed in input order below,
     // so stdout and the written SVGs are byte-identical to a serial run.
+    let session = Session::standard(&spec);
     let workers = crate::exec::default_workers(phases.len());
     let rendered = crate::exec::parallel_map(phases, workers, |(phase, label)| {
         let kernel_trace = trace.phase(phase);
         if kernel_trace.is_empty() {
             return (label, None);
         }
-        let profile = Session::standard(&spec).profile(kernel_trace);
+        let profile = session.profile(kernel_trace);
         let model = RooflineModel::from_profile(&spec, &profile);
         let title = format!("{} DeepCAM {label} ({})", fw.name(), policy.name());
         let chart = RooflineChart::hierarchical(&model, &title);

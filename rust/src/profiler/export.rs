@@ -19,16 +19,20 @@ use crate::sim::counters::CounterSet;
 
 /// Serialize a profile to CSV.
 pub fn to_csv(profile: &Profile) -> String {
-    let mut out = String::from("\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n");
+    use std::fmt::Write as _;
+    // One row per (kernel, metric): ~16 metrics/kernel at < 96 bytes/row.
+    let mut out = String::with_capacity(64 + profile.n_kernels() * 16 * 96);
+    out.push_str("\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n");
     for k in profile.kernels() {
         for (metric, value) in k.counters.metrics() {
-            out.push_str(&format!(
-                "\"{}\",\"{}\",{},{}\n",
+            let _ = writeln!(
+                out,
+                "\"{}\",\"{}\",{},{}",
                 escape(&k.name),
                 metric,
                 value,
                 k.invocations
-            ));
+            );
         }
     }
     out
@@ -186,6 +190,29 @@ mod tests {
         // 1e8 insts * 512 = 5.12e10 FLOPs over 1e6/1.53e9 s.
         let expected = 5.12e10 / (1e6 / 1.53e9);
         assert!((point.flops_per_sec - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn unknown_metrics_survive_roundtrip_via_fallback_lane() {
+        // Real-Nsight exports can carry counters outside the Table II
+        // set; they ride the CounterSet fallback lane and must survive
+        // ingest → profile → re-export unchanged.
+        let spec = GpuSpec::v100();
+        let csv = "\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n\
+            \"k\",\"sm__cycles_elapsed.avg\",1000,1\n\
+            \"k\",\"sm__cycles_elapsed.avg.per_second\",1530000000,1\n\
+            \"k\",\"smsp__warps_active.avg\",47.5,1\n";
+        let p = from_csv(csv, &spec).unwrap();
+        let k = p.kernel("k").unwrap();
+        assert_eq!(k.counters.get("smsp__warps_active.avg"), 47.5);
+        let re = to_csv(&p);
+        assert!(re.contains("\"smsp__warps_active.avg\",47.5,1"), "{re}");
+        // And it parses back once more, identically.
+        let p2 = from_csv(&re, &spec).unwrap();
+        assert_eq!(
+            p2.kernel("k").unwrap().counters.get("smsp__warps_active.avg"),
+            47.5
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::collections::BTreeSet;
 
-use crate::sim::counters::names;
+use crate::sim::counters::{names, CounterId};
 
 /// A parsed metric name.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -20,6 +20,10 @@ pub struct Metric {
     pub counter: String,
     pub rollup: String,
     pub submetric: Option<String>,
+    /// Dense counter slot, resolved once at parse time so the session's
+    /// per-pass metric copies are array indexing instead of string
+    /// lookups. `None` = fallback-lane metric (outside Table II).
+    pub id: Option<CounterId>,
 }
 
 /// Metric-name error.
@@ -70,6 +74,7 @@ impl Metric {
             counter: counter.to_string(),
             rollup: rollup.to_string(),
             submetric,
+            id: CounterId::from_name(name),
         })
     }
 }
@@ -180,6 +185,16 @@ mod tests {
         let reg = MetricRegistry::standard();
         let resolved = reg.resolve(&names::STANDARD).unwrap();
         assert_eq!(resolved.len(), 15);
+        // Every Table II metric carries its dense slot.
+        for m in &resolved {
+            assert_eq!(m.id.map(|id| id.name()), Some(m.raw.as_str()));
+        }
+    }
+
+    #[test]
+    fn well_formed_unknown_metric_has_no_dense_slot() {
+        let m = Metric::parse("smsp__warps_active.avg").unwrap();
+        assert_eq!(m.id, None);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::sim::counters::CounterSet;
 /// Aggregate over all invocations of one kernel (keyed by kernel name),
 /// as the paper plots: "there could be many invocations of the same
 /// kernel and the data presented ... is the aggregation" (§IV).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct KernelProfile {
     pub name: String,
     pub invocations: u64,
@@ -68,7 +68,11 @@ impl KernelProfile {
 
 /// A full application profile: per-kernel aggregates plus session
 /// bookkeeping.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` is exact (bitwise on counter values) — the profiler's
+/// memoized/parallel paths are required to produce *identical* output
+/// to the serial path, and tests assert it through this impl.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Profile {
     kernels: BTreeMap<String, KernelProfile>,
     /// Number of replay passes the session used.
@@ -82,6 +86,18 @@ impl Profile {
         Profile::default()
     }
 
+    /// The aggregate slot for one kernel name, created empty on first use.
+    fn entry_for(&mut self, name: &str, spec: &GpuSpec) -> &mut KernelProfile {
+        self.kernels
+            .entry(name.to_string())
+            .or_insert_with(|| KernelProfile {
+                name: name.to_string(),
+                invocations: 0,
+                counters: CounterSet::new(),
+                flops_per_tensor_inst: spec.flops_per_tensor_inst as f64,
+            })
+    }
+
     /// Merge one kernel invocation's counters into the aggregate.
     pub fn record(
         &mut self,
@@ -90,22 +106,15 @@ impl Profile {
         counters: &CounterSet,
         spec: &GpuSpec,
     ) {
-        let entry = self
-            .kernels
-            .entry(name.to_string())
-            .or_insert_with(|| KernelProfile {
-                name: name.to_string(),
-                invocations: 0,
-                counters: CounterSet::new(),
-                flops_per_tensor_inst: spec.flops_per_tensor_inst as f64,
-            });
+        let entry = self.entry_for(name, spec);
         entry.invocations += invocations;
         entry.counters.accumulate(counters);
     }
 
     /// Record `invocations` identical executions in one accumulate by
     /// scaling the counters (§Perf L3-2; valid because deterministic
-    /// invocations of one kernel observe identical counters).
+    /// invocations of one kernel observe identical counters). Runs on
+    /// the dense representation directly — no intermediate scaled copy.
     pub fn record_scaled(
         &mut self,
         name: &str,
@@ -116,15 +125,9 @@ impl Profile {
         if invocations == 0 {
             return;
         }
-        let mut scaled = CounterSet::new();
-        for (metric, value) in counters.metrics() {
-            if metric == crate::sim::counters::names::CYCLES_PER_SEC {
-                scaled.set(metric, value);
-            } else {
-                scaled.set(metric, value * invocations as f64);
-            }
-        }
-        self.record(name, invocations, &scaled, spec);
+        let entry = self.entry_for(name, spec);
+        entry.invocations += invocations;
+        entry.counters.accumulate_scaled(counters, invocations);
     }
 
     pub fn kernel(&self, name: &str) -> Option<&KernelProfile> {
@@ -212,6 +215,28 @@ mod tests {
         // 3 invocations => 3x the single-run flops.
         let single = (1u64 << 18) * 2;
         assert_eq!(kp.flops() as u64, 3 * single);
+    }
+
+    #[test]
+    fn record_scaled_identical_to_explicit_scaled_record() {
+        // The dense fast path must be bit-identical to the original
+        // implementation (build a scaled copy, then record it).
+        let spec = spec();
+        let k = KernelDesc::streaming_elementwise("relu", 1 << 16, Precision::Fp32, 2);
+        let c = sim::simulate(&spec, &k);
+        let mut scaled = CounterSet::new();
+        for (metric, value) in c.metrics() {
+            if metric == crate::sim::counters::names::CYCLES_PER_SEC {
+                scaled.set(metric, value);
+            } else {
+                scaled.set(metric, value * 5.0);
+            }
+        }
+        let mut reference = Profile::new();
+        reference.record("relu", 5, &scaled, &spec);
+        let mut fast = Profile::new();
+        fast.record_scaled("relu", 5, &c, &spec);
+        assert_eq!(fast, reference, "scaled accumulate must be bit-identical");
     }
 
     #[test]

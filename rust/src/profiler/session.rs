@@ -20,11 +20,13 @@
 //!   the session accounts it so `repro profile` can report overhead like
 //!   the real tool.
 
+use std::collections::HashMap;
+
 use crate::device::GpuSpec;
 use crate::profiler::metrics::{Metric, MetricRegistry};
 use crate::profiler::profile::Profile;
-use crate::sim::counters::names;
-use crate::sim::kernel::KernelInvocation;
+use crate::sim::counters::{names, CounterId};
+use crate::sim::kernel::{KernelDesc, KernelInvocation};
 use crate::sim::{self, CounterSet};
 
 /// Session configuration.
@@ -44,6 +46,17 @@ pub struct SessionConfig {
     /// Inject nondeterminism (test hook modelling TF autotuning; the
     /// library user never sets this).
     pub nondeterminism: Option<u64>,
+    /// Memoize simulation across identical kernel descriptors: a trace
+    /// with N invocations of K distinct kernels costs K simulations,
+    /// not N. Valid because simulation is a pure function of the
+    /// descriptor — output is bit-identical either way (test-asserted).
+    /// Disable only to cross-check that equivalence.
+    pub memoize: bool,
+    /// Worker threads for the trace fan-out; `None` = automatic (serial
+    /// for small traces, machine-sized for large ones). Per-entry work
+    /// is pure and aggregation preserves trace order, so the profile is
+    /// bit-identical for every setting (test-asserted).
+    pub threads: Option<usize>,
 }
 
 impl Default for SessionConfig {
@@ -54,6 +67,8 @@ impl Default for SessionConfig {
             warmup_iterations: 5,
             replay_overhead_s: 150e-6,
             nondeterminism: None,
+            memoize: true,
+            threads: None,
         }
     }
 }
@@ -125,6 +140,20 @@ impl<'a> Session<'a> {
 
     /// Profile a trace, aggregating by kernel name. Panics never; returns
     /// [`SessionError`] on unknown metrics or nondeterminism.
+    ///
+    /// Hot-path structure (§Perf L3 in EXPERIMENTS.md):
+    ///
+    /// 1. **Dedup + memoize** — identical kernel descriptors share one
+    ///    simulation (K simulations for N entries); valid because
+    ///    simulation is pure, disabled when the nondeterminism hook is
+    ///    armed (each pass must then genuinely re-execute).
+    /// 2. **Fan out** — the unique-kernel simulations and the per-entry
+    ///    pass merges run through [`crate::exec::parallel_map`]; every
+    ///    unit of work is pure, so parallelism cannot change the result.
+    /// 3. **Order-preserving aggregation** — merged counter sets are
+    ///    recorded into the [`Profile`] strictly in trace order, making
+    ///    the output bit-identical to the serial path (test-asserted,
+    ///    like PR 1's ERT sweep).
     pub fn try_profile(&self, trace: &[KernelInvocation]) -> Result<Profile, SessionError> {
         let metric_refs: Vec<&str> = self.config.metrics.iter().map(|s| s.as_str()).collect();
         let metrics = self.registry.resolve(&metric_refs)?;
@@ -136,86 +165,153 @@ impl<'a> Session<'a> {
 
         let mut profile = Profile::new();
         profile.passes = passes.len() as u64;
+        if trace.is_empty() {
+            return Ok(profile);
+        }
+        let deterministic = self.config.nondeterminism.is_none();
 
-        // Simulate each kernel once per pass; each pass observes its own
-        // metric subset. Counters must agree across passes (determinism).
-        //
-        // Perf (§Perf L3-1 in EXPERIMENTS.md): when the execution target
-        // is deterministic (no nondeterminism injected), all replay
-        // passes observe identical counters, so the kernel is simulated
-        // once and the counter set is reused across passes — the replay
-        // accounting (overhead, pass census) is unchanged. With the
-        // nondeterminism hook armed, every pass re-executes and the
-        // cross-pass consistency check runs exactly as the real tool's
-        // workflow requires.
-        for inv in trace {
-            let mut merged = CounterSet::new();
-            let baseline = sim::simulate(self.spec, &inv.kernel);
-            if self.config.nondeterminism.is_none() {
-                // §Perf L3-3: deterministic fast path — no per-pass
-                // counter clones; copy the requested metrics straight
-                // from the single simulation.
-                for pass in &passes {
-                    for m in pass {
-                        merged.set(&m.raw, baseline.get(&m.raw));
-                    }
+        // 1. Baseline simulations, one per distinct kernel descriptor.
+        // `baseline_of[i]` maps trace entry i to its slot in `baselines`.
+        let mut unique: Vec<&KernelDesc> = Vec::new();
+        let mut baseline_of: Vec<usize> = Vec::with_capacity(trace.len());
+        if deterministic && self.config.memoize {
+            let mut seen: HashMap<&KernelDesc, usize> = HashMap::new();
+            for inv in trace {
+                let next = unique.len();
+                let idx = *seen.entry(&inv.kernel).or_insert(next);
+                if idx == next {
+                    unique.push(&inv.kernel);
                 }
-                merged.set(names::CYCLES, baseline.get(names::CYCLES));
-                merged.set(names::CYCLES_PER_SEC, baseline.get(names::CYCLES_PER_SEC));
-                profile.record_scaled(&inv.kernel.name, inv.invocations, &merged, self.spec);
-                profile.profiling_overhead_s +=
-                    passes.len() as f64 * inv.invocations as f64 * self.config.replay_overhead_s;
-                continue;
+                baseline_of.push(idx);
             }
-            let mut reference: Option<CounterSet> = None;
-            for (pass_idx, pass) in passes.iter().enumerate() {
-                let observed = if let Some(seed) = self.config.nondeterminism {
-                    // Model autotuning flakiness: perturb cycle counts per
-                    // pass, as a re-autotuned algorithm would.
-                    let mut fresh = sim::simulate(self.spec, &inv.kernel);
-                    let jitter = 1.0
-                        + 0.05
-                            * (((seed
-                                .wrapping_mul(pass_idx as u64 + 1)
-                                .wrapping_mul(inv.kernel.name.len() as u64 + 1))
-                                % 7) as f64);
-                    fresh.set(names::CYCLES, fresh.get(names::CYCLES) * jitter);
-                    // Determinism check on the time base, which every
-                    // pass re-measures.
-                    if let Some(ref first) = reference {
-                        let a = first.get(names::CYCLES);
-                        let b = fresh.get(names::CYCLES);
-                        if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
-                            return Err(SessionError::NonDeterministic {
-                                kernel: inv.kernel.name.clone(),
-                                metric: names::CYCLES.to_string(),
-                                a,
-                                b,
-                            });
-                        }
-                    } else {
-                        reference = Some(fresh.clone());
-                    }
-                    fresh
-                } else {
-                    baseline.clone()
-                };
-                // Keep only this pass's metrics (plus the time base).
-                for m in pass {
-                    merged.set(&m.raw, observed.get(&m.raw));
-                }
-                merged.set(names::CYCLES, observed.get(names::CYCLES));
-                merged.set(names::CYCLES_PER_SEC, observed.get(names::CYCLES_PER_SEC));
+        } else if deterministic {
+            for (i, inv) in trace.iter().enumerate() {
+                unique.push(&inv.kernel);
+                baseline_of.push(i);
             }
+        }
+        let sim_workers = self.workers_for(unique.len());
+        let baselines: Vec<CounterSet> =
+            crate::exec::parallel_map(unique, sim_workers, |k| sim::simulate(self.spec, k));
+
+        // 2. Merge each entry's replay passes (pure per entry; with the
+        // nondeterminism hook armed, `baseline = None` forces per-pass
+        // re-execution plus the cross-pass consistency check).
+        let entries: Vec<(usize, &KernelInvocation)> = trace.iter().enumerate().collect();
+        let merge_workers = self.workers_for(entries.len());
+        let merged: Vec<Result<CounterSet, SessionError>> =
+            crate::exec::parallel_map(entries, merge_workers, |(i, inv)| {
+                let baseline = deterministic.then(|| &baselines[baseline_of[i]]);
+                self.merge_replay_passes(inv, &passes, baseline)
+            });
+
+        // 3. Aggregate in trace order; the first failing entry (in trace
+        // order) wins, exactly as a serial scan would report.
+        for (inv, counters) in trace.iter().zip(merged) {
             // One merged CounterSet scaled by the invocation count
-            // (invocations of one kernel are identical in a deterministic
-            // app) — §Perf L3-2: scale once instead of re-accumulating
-            // per invocation.
-            profile.record_scaled(&inv.kernel.name, inv.invocations, &merged, self.spec);
+            // (invocations of one kernel are identical in a
+            // deterministic app) — §Perf L3-2: scale once instead of
+            // re-accumulating per invocation.
+            profile.record_scaled(&inv.kernel.name, inv.invocations, &counters?, self.spec);
             profile.profiling_overhead_s +=
                 passes.len() as f64 * inv.invocations as f64 * self.config.replay_overhead_s;
         }
         Ok(profile)
+    }
+
+    /// Merge one trace entry's replay passes into a single counter set;
+    /// each pass observes its own metric subset plus the time base.
+    ///
+    /// `baseline = Some(c)`: deterministic execution — every pass
+    /// observes the same counters `c` (simulated once, possibly shared
+    /// across entries by the memoizer), so requested metrics are copied
+    /// straight out of it with no per-pass clone.
+    /// `baseline = None`: every pass re-executes the kernel and the
+    /// determinism check runs, as the real tool's workflow requires.
+    fn merge_replay_passes(
+        &self,
+        inv: &KernelInvocation,
+        passes: &[Vec<Metric>],
+        baseline: Option<&CounterSet>,
+    ) -> Result<CounterSet, SessionError> {
+        let mut merged = CounterSet::new();
+        let mut reference_cycles: Option<f64> = None;
+        for (pass_idx, pass) in passes.iter().enumerate() {
+            let replayed;
+            let observed = match baseline {
+                Some(c) => c,
+                None => {
+                    replayed = self.replay_once(inv, pass_idx, &mut reference_cycles)?;
+                    &replayed
+                }
+            };
+            // Keep only this pass's metrics (plus the time base).
+            for m in pass {
+                match m.id {
+                    Some(id) => merged.set_id(id, observed.get_id(id)),
+                    None => merged.set(&m.raw, observed.get(&m.raw)),
+                }
+            }
+            merged.set_id(CounterId::Cycles, observed.get_id(CounterId::Cycles));
+            merged.set_id(
+                CounterId::CyclesPerSec,
+                observed.get_id(CounterId::CyclesPerSec),
+            );
+        }
+        Ok(merged)
+    }
+
+    /// Re-execute one kernel for one replay pass with the nondeterminism
+    /// hook armed, and verify the time base agrees across passes.
+    fn replay_once(
+        &self,
+        inv: &KernelInvocation,
+        pass_idx: usize,
+        reference_cycles: &mut Option<f64>,
+    ) -> Result<CounterSet, SessionError> {
+        let seed = self
+            .config
+            .nondeterminism
+            .expect("replay_once requires the nondeterminism hook");
+        // Model autotuning flakiness: perturb cycle counts per pass, as
+        // a re-autotuned algorithm would.
+        let mut fresh = sim::simulate(self.spec, &inv.kernel);
+        let jitter = 1.0
+            + 0.05
+                * (((seed
+                    .wrapping_mul(pass_idx as u64 + 1)
+                    .wrapping_mul(inv.kernel.name.len() as u64 + 1))
+                    % 7) as f64);
+        fresh.set_id(CounterId::Cycles, fresh.get_id(CounterId::Cycles) * jitter);
+        // Determinism check on the time base, which every pass
+        // re-measures.
+        let b = fresh.get_id(CounterId::Cycles);
+        match *reference_cycles {
+            Some(a) => {
+                if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                    return Err(SessionError::NonDeterministic {
+                        kernel: inv.kernel.name.clone(),
+                        metric: names::CYCLES.to_string(),
+                        a,
+                        b,
+                    });
+                }
+            }
+            None => *reference_cycles = Some(b),
+        }
+        Ok(fresh)
+    }
+
+    /// Worker count for a fan-out of `items` units: explicit override,
+    /// else serial below the point where thread spawn costs more than
+    /// the work, else machine-sized (capped by the item count — more
+    /// workers than items would idle).
+    fn workers_for(&self, items: usize) -> usize {
+        match self.config.threads {
+            Some(n) => n.max(1),
+            None if items < 32 => 1,
+            None => crate::exec::default_workers(items),
+        }
     }
 
     /// Convenience: standard sessions on valid traces cannot fail.
@@ -282,6 +378,67 @@ mod tests {
         let separate = Session::new(&spec, cfg).profile(&trace());
         assert!(separate.passes > packed.passes);
         assert!(separate.profiling_overhead_s > packed.profiling_overhead_s);
+    }
+
+    /// A trace exercising the memoizer: distinct descriptors plus exact
+    /// duplicates under different entries/streams.
+    fn trace_with_duplicates() -> Vec<KernelInvocation> {
+        let mut t = trace();
+        t.push(KernelInvocation {
+            kernel: KernelDesc::streaming_elementwise("relu", 1 << 18, Precision::Fp32, 1),
+            invocations: 3,
+            stream: 2,
+        });
+        t.push(KernelInvocation {
+            kernel: KernelDesc::gemm(
+                "hmma", 512, 512, 512, Precision::Fp16, true, 64, &GpuSpec::v100(),
+            ),
+            invocations: 2,
+            stream: 0,
+        });
+        t
+    }
+
+    #[test]
+    fn memoized_profile_identical_to_unmemoized() {
+        // Regression: the simulation memoizer must not change a single
+        // bit of the profile (simulation is pure, so a cached baseline
+        // equals a fresh one exactly).
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let memoized = Session::standard(&spec).profile(&t);
+        let mut cfg = SessionConfig::default();
+        cfg.memoize = false;
+        cfg.threads = Some(1);
+        let unmemoized = Session::new(&spec, cfg).profile(&t);
+        assert_eq!(memoized, unmemoized);
+    }
+
+    #[test]
+    fn parallel_profile_bit_identical_to_serial() {
+        // Like PR 1's ERT sweep: the fan-out is pure and aggregation is
+        // order-preserving, so thread count cannot change the output.
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let mut serial_cfg = SessionConfig::default();
+        serial_cfg.threads = Some(1);
+        let serial = Session::new(&spec, serial_cfg).profile(&t);
+        for threads in [2, 4, 8] {
+            let mut cfg = SessionConfig::default();
+            cfg.threads = Some(threads);
+            let parallel = Session::new(&spec, cfg).profile(&t);
+            assert_eq!(parallel, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn nondeterminism_detected_under_parallel_fanout() {
+        let spec = GpuSpec::v100();
+        let mut cfg = SessionConfig::default();
+        cfg.nondeterminism = Some(1234);
+        cfg.threads = Some(4);
+        let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
+        assert!(matches!(err, SessionError::NonDeterministic { .. }), "{err}");
     }
 
     #[test]

@@ -11,11 +11,13 @@
 //! | 8 | TensorFlow | backward | manual FP16 |
 //! | 9 | PyTorch | backward | O0 |
 
+use std::sync::OnceLock;
+
 use crate::device::GpuSpec;
 use crate::util::error::{self as anyhow, Result};
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
-use crate::dl::Policy;
+use crate::dl::{Graph, Policy};
 use crate::profiler::{Profile, Session};
 use crate::roofline::chart::RooflineChart;
 use crate::roofline::model::RooflineModel;
@@ -43,10 +45,17 @@ pub const FIGS: [FigSpec; 7] = [
     FigSpec { id: "fig9", framework: Framework::PyTorch, phase: Phase::Backward, policy: Policy::O0, title: "Fig. 9 — PyTorch backward, AMP O0" },
 ];
 
+/// The paper-scale DeepCAM operator graph, built once per process: the
+/// graph is immutable and every figure (and the fig3–fig9 benches)
+/// lowers the same one, so rebuilding it per artifact was pure waste.
+pub(crate) fn paper_graph() -> &'static Graph {
+    static GRAPH: OnceLock<Graph> = OnceLock::new();
+    GRAPH.get_or_init(|| deepcam(&DeepCamConfig::paper()))
+}
+
 /// Profile one figure's (framework, phase, policy) at paper scale.
 pub fn profile_for(spec: &GpuSpec, fig: &FigSpec) -> (FrameworkTrace, Profile) {
-    let graph = deepcam(&DeepCamConfig::paper());
-    let trace = lower(&graph, fig.framework, fig.policy);
+    let trace = lower(paper_graph(), fig.framework, fig.policy);
     let profile = Session::standard(spec).profile(trace.phase(fig.phase));
     (trace, profile)
 }

@@ -7,7 +7,6 @@
 
 use crate::device::GpuSpec;
 use crate::util::error::Result;
-use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
 use crate::dl::Policy;
 use crate::util::{fmt, Json, Table};
@@ -30,10 +29,12 @@ pub struct Census {
 }
 
 pub fn census() -> Census {
-    let graph = deepcam(&DeepCamConfig::paper());
+    // Shares the process-wide paper-scale graph with the figure
+    // generators (see `deepcam_figs::paper_graph`).
+    let graph = super::deepcam_figs::paper_graph();
     Census {
-        tf: lower(&graph, Framework::TensorFlow, Policy::O1),
-        pt: lower(&graph, Framework::PyTorch, Policy::O1),
+        tf: lower(graph, Framework::TensorFlow, Policy::O1),
+        pt: lower(graph, Framework::PyTorch, Policy::O1),
         spec: GpuSpec::v100(),
     }
 }

@@ -5,6 +5,8 @@
 //! radius proportional to aggregated kernel run time (Figs 3–9 reading
 //! guide in §IV).
 
+use std::fmt::Write as _;
+
 use crate::device::MemLevel;
 use crate::roofline::model::RooflineModel;
 use crate::util::Table;
@@ -93,23 +95,37 @@ impl<'a> RooflineChart<'a> {
     }
 
     /// Render the chart as a standalone SVG document.
+    ///
+    /// The output buffer is preallocated from the model's size (points
+    /// dominate: one `<circle><title>…` element per (kernel, level)), so
+    /// emission never reallocates mid-build; all rendering writes in
+    /// place via `write!` rather than formatting temporaries.
     pub fn to_svg(&self) -> String {
         let c = &self.config;
-        let mut svg = String::with_capacity(16 * 1024);
-        svg.push_str(&format!(
+        let ceilings =
+            self.model.ceilings.compute.len() + self.model.ceilings.bandwidth.len();
+        let mut svg = String::with_capacity(
+            8 * 1024
+                + self.model.points.len() * (MemLevel::ALL.len() * 256 + 64)
+                + ceilings * 256,
+        );
+        let _ = write!(
+            svg,
             r##"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"##,
             w = c.width,
             h = c.height
-        ));
-        svg.push_str(&format!(
+        );
+        let _ = write!(
+            svg,
             r##"<rect width="{}" height="{}" fill="white"/>"##,
             c.width, c.height
-        ));
-        svg.push_str(&format!(
+        );
+        let _ = write!(
+            svg,
             r##"<text x="{}" y="24" text-anchor="middle" font-size="16" font-family="sans-serif">{}</text>"##,
             c.width / 2,
             xml_escape(&c.title)
-        ));
+        );
 
         self.push_axes(&mut svg);
         self.push_bandwidth_ceilings(&mut svg);
@@ -127,40 +143,45 @@ impl<'a> RooflineChart<'a> {
         let x1 = c.width as f64 - 30.0;
         let y0 = c.height as f64 - 50.0;
         let y1 = 40.0;
-        svg.push_str(&format!(
+        let _ = write!(
+            svg,
             r##"<line x1="{x0}" y1="{y0}" x2="{x1}" y2="{y0}" stroke="black"/><line x1="{x0}" y1="{y0}" x2="{x0}" y2="{y1}" stroke="black"/>"##
-        ));
+        );
         // Decade gridlines + labels.
         let mut ai = self.config.ai_min;
         while ai <= self.config.ai_max * 1.0001 {
             let x = self.x(ai);
-            svg.push_str(&format!(
+            let _ = write!(
+                svg,
                 r##"<line x1="{x}" y1="{y0}" x2="{x}" y2="{y1}" stroke="#eeeeee"/><text x="{x}" y="{ly}" text-anchor="middle" font-size="10" font-family="sans-serif">{label}</text>"##,
                 ly = y0 + 16.0,
                 label = pow10_label(ai),
-            ));
+            );
             ai *= 10.0;
         }
         let mut perf = self.config.perf_min;
         while perf <= self.config.perf_max * 1.0001 {
             let y = self.y(perf);
-            svg.push_str(&format!(
+            let _ = write!(
+                svg,
                 r##"<line x1="{x0}" y1="{y}" x2="{x1}" y2="{y}" stroke="#eeeeee"/><text x="{lx}" y="{yt}" text-anchor="end" font-size="10" font-family="sans-serif">{label}</text>"##,
                 lx = x0 - 6.0,
                 yt = y + 3.0,
                 label = perf_label(perf),
-            ));
+            );
             perf *= 10.0;
         }
-        svg.push_str(&format!(
+        let _ = write!(
+            svg,
             r##"<text x="{cx}" y="{by}" text-anchor="middle" font-size="12" font-family="sans-serif">Arithmetic Intensity (FLOPs/Byte)</text>"##,
             cx = (x0 + x1) / 2.0,
             by = self.config.height as f64 - 14.0
-        ));
-        svg.push_str(&format!(
+        );
+        let _ = write!(
+            svg,
             r##"<text x="18" y="{cy}" text-anchor="middle" font-size="12" font-family="sans-serif" transform="rotate(-90 18 {cy})">Performance (FLOP/s)</text>"##,
             cy = (y0 + y1) / 2.0
-        ));
+        );
     }
 
     fn push_compute_ceilings(&self, svg: &mut String) {
@@ -168,12 +189,13 @@ impl<'a> RooflineChart<'a> {
             let y = self.y(ceil.flops_per_sec);
             let x0 = 60.0;
             let x1 = self.config.width as f64 - 30.0;
-            svg.push_str(&format!(
+            let _ = write!(
+                svg,
                 r##"<line x1="{x0}" y1="{y}" x2="{x1}" y2="{y}" stroke="#444444" stroke-dasharray="6,3"/><text x="{tx}" y="{ty}" text-anchor="end" font-size="10" font-family="sans-serif" fill="#333333">{label}</text>"##,
                 tx = x1 - 4.0,
                 ty = y - 4.0,
                 label = xml_escape(&ceil.label),
-            ));
+            );
         }
     }
 
@@ -187,13 +209,14 @@ impl<'a> RooflineChart<'a> {
             let ai_end = (max_perf / bw.bytes_per_sec).min(c.ai_max);
             let (x0, y0) = (self.x(ai_start), self.y(perf_start));
             let (x1, y1) = (self.x(ai_end), self.y(ai_end * bw.bytes_per_sec));
-            svg.push_str(&format!(
+            let _ = write!(
+                svg,
                 r##"<line x1="{x0:.1}" y1="{y0:.1}" x2="{x1:.1}" y2="{y1:.1}" stroke="{color}" stroke-width="1.2"/><text x="{tx:.1}" y="{ty:.1}" font-size="10" font-family="sans-serif" fill="{color}">{label}</text>"##,
                 color = level_color(bw.level),
                 tx = x0 + 8.0,
                 ty = y0 - 6.0,
                 label = xml_escape(&bw.label),
-            ));
+            );
         }
     }
 
@@ -209,7 +232,8 @@ impl<'a> RooflineChart<'a> {
             let y = self.y(p.flops_per_sec);
             for &(level, ai) in &p.ai {
                 let x = self.x(ai);
-                svg.push_str(&format!(
+                let _ = write!(
+                    svg,
                     r##"<circle cx="{x:.1}" cy="{y:.1}" r="{r:.1}" fill="none" stroke="{color}" stroke-width="1.5"><title>{name} [{lvl}] AI={ai:.3} perf={perf:.3e} t={t:.3e}s inv={inv}</title></circle>"##,
                     color = level_color(level),
                     name = xml_escape(&p.name),
@@ -217,7 +241,7 @@ impl<'a> RooflineChart<'a> {
                     perf = p.flops_per_sec,
                     t = p.seconds,
                     inv = p.invocations,
-                ));
+                );
             }
         }
     }
@@ -226,19 +250,21 @@ impl<'a> RooflineChart<'a> {
         let x = 70.0;
         let mut y = 50.0;
         for level in MemLevel::ALL {
-            svg.push_str(&format!(
+            let _ = write!(
+                svg,
                 r##"<circle cx="{x}" cy="{y}" r="5" fill="none" stroke="{color}" stroke-width="1.5"/><text x="{tx}" y="{ty}" font-size="11" font-family="sans-serif">{name}</text>"##,
                 color = level_color(level),
                 tx = x + 10.0,
                 ty = y + 4.0,
                 name = level.name(),
-            ));
+            );
             y += 16.0;
         }
-        svg.push_str(&format!(
+        let _ = write!(
+            svg,
             r##"<text x="{x}" y="{y}" font-size="10" font-family="sans-serif" fill="#555555">circle area &#8733; kernel time &#8212; {}</text>"##,
             xml_escape(&self.model.device_name),
-        ));
+        );
     }
 
     /// Text rendering of the dataset (kernel table), for terminals and
@@ -353,6 +379,20 @@ mod tests {
         for color in ["#1f6fd0", "#d03030", "#1f9d3a"] {
             assert!(svg.contains(color));
         }
+    }
+
+    #[test]
+    fn svg_buffer_preallocation_covers_output() {
+        // The capacity estimate must dominate the real output so the
+        // buffer never reallocates mid-emit.
+        let (_, model) = example_model();
+        let chart = RooflineChart::hierarchical(&model, "Preallocation check");
+        let svg = chart.to_svg();
+        let ceilings = model.ceilings.compute.len() + model.ceilings.bandwidth.len();
+        let cap = 8 * 1024
+            + model.points.len() * (MemLevel::ALL.len() * 256 + 64)
+            + ceilings * 256;
+        assert!(svg.len() <= cap, "svg {} > preallocated {}", svg.len(), cap);
     }
 
     #[test]

@@ -9,13 +9,31 @@
 //! section of the hotpath bench to quantify the cost of exact simulation
 //! versus the analytic fast path.
 
+/// One cached line slot: tag plus the age stamp of its last use.
+/// `stamp == 0` marks an invalid (never-filled) slot.
+#[derive(Clone, Copy, Debug)]
+struct Line {
+    tag: u64,
+    stamp: u64,
+}
+
+const INVALID: Line = Line { tag: 0, stamp: 0 };
+
 /// One set-associative LRU cache level.
+///
+/// Recency is tracked with an **age-stamp scheme**: every access gets a
+/// monotonically increasing tick, a hit refreshes the line's stamp, and
+/// eviction picks the smallest stamp in the set (invalid slots stamp 0
+/// fill first). Exact LRU, but `access` only scans the ways — no
+/// MRU-list `remove`/`insert` shifting per access like the original
+/// Vec-stack representation (the `cache_exact_100k_accesses` hot loop).
 #[derive(Clone, Debug)]
 pub struct SetAssocCache {
-    sets: Vec<Vec<u64>>, // per-set stack of line tags, MRU first
+    lines: Vec<Line>, // n_sets * ways, flat, set-major
     ways: usize,
     line_bytes: u64,
     n_sets: u64,
+    tick: u64,
     pub hits: u64,
     pub misses: u64,
 }
@@ -28,34 +46,43 @@ impl SetAssocCache {
         let n_lines = capacity_bytes / line_bytes;
         let n_sets = (n_lines / ways as u64).max(1);
         SetAssocCache {
-            sets: vec![Vec::with_capacity(ways as usize); n_sets as usize],
+            lines: vec![INVALID; n_sets as usize * ways as usize],
             ways: ways as usize,
             line_bytes,
             n_sets,
+            tick: 0,
             hits: 0,
             misses: 0,
         }
     }
 
     /// Access one byte address; returns true on hit. On miss the line is
-    /// filled (allocate-on-miss for both loads and stores).
+    /// filled (allocate-on-miss for both loads and stores), evicting the
+    /// least-recently-used way.
     pub fn access(&mut self, addr: u64) -> bool {
         let line = addr / self.line_bytes;
-        let set_idx = (line % self.n_sets) as usize;
-        let set = &mut self.sets[set_idx];
-        if let Some(pos) = set.iter().position(|&t| t == line) {
-            set.remove(pos);
-            set.insert(0, line);
-            self.hits += 1;
-            true
-        } else {
-            if set.len() == self.ways {
-                set.pop();
+        let base = (line % self.n_sets) as usize * self.ways;
+        self.tick += 1;
+        let set = &mut self.lines[base..base + self.ways];
+        let mut victim = 0usize;
+        let mut victim_stamp = u64::MAX;
+        for (way, slot) in set.iter_mut().enumerate() {
+            if slot.stamp != 0 && slot.tag == line {
+                slot.stamp = self.tick;
+                self.hits += 1;
+                return true;
             }
-            set.insert(0, line);
-            self.misses += 1;
-            false
+            if slot.stamp < victim_stamp {
+                victim_stamp = slot.stamp;
+                victim = way;
+            }
         }
+        set[victim] = Line {
+            tag: line,
+            stamp: self.tick,
+        };
+        self.misses += 1;
+        false
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -167,6 +194,65 @@ mod tests {
         c.access(64 * 2); // miss, evicts 0 → {2,1}
         assert!(!c.access(0), "0 was evicted");
         assert!(c.access(64 * 2), "2 still resident");
+    }
+
+    /// Reference implementation: the original MRU-first Vec-stack LRU.
+    struct StackLru {
+        sets: Vec<Vec<u64>>,
+        ways: usize,
+        line_bytes: u64,
+        n_sets: u64,
+    }
+
+    impl StackLru {
+        fn new(capacity_bytes: u64, line_bytes: u64, ways: u32) -> StackLru {
+            let n_sets = ((capacity_bytes / line_bytes) / ways as u64).max(1);
+            StackLru {
+                sets: vec![Vec::new(); n_sets as usize],
+                ways: ways as usize,
+                line_bytes,
+                n_sets,
+            }
+        }
+
+        fn access(&mut self, addr: u64) -> bool {
+            let line = addr / self.line_bytes;
+            let set = &mut self.sets[(line % self.n_sets) as usize];
+            if let Some(pos) = set.iter().position(|&t| t == line) {
+                set.remove(pos);
+                set.insert(0, line);
+                true
+            } else {
+                if set.len() == self.ways {
+                    set.pop();
+                }
+                set.insert(0, line);
+                false
+            }
+        }
+    }
+
+    #[test]
+    fn age_stamp_scheme_is_exact_lru() {
+        // Every access's hit/miss outcome must match the reference
+        // MRU-stack implementation over a mixed random/looping stream.
+        let mut fast = SetAssocCache::new(4 * 1024, 128, 4);
+        let mut reference = StackLru::new(4 * 1024, 128, 4);
+        let mut rng = crate::util::Rng::new(99);
+        for i in 0..50_000u64 {
+            // Mix regimes: random, strided, and small-loop reuse.
+            let addr = match i % 3 {
+                0 => rng.below(1 << 16),
+                1 => (i * 128) % (1 << 14),
+                _ => (i % 40) * 128,
+            };
+            assert_eq!(
+                fast.access(addr),
+                reference.access(addr),
+                "divergence at access {i} addr {addr}"
+            );
+        }
+        assert!(fast.hits > 0 && fast.misses > 0);
     }
 
     #[test]

@@ -1,9 +1,19 @@
 //! PerfWorks-style counter synthesis.
 //!
-//! The simulator's public output is a [`CounterSet`]: a map from metric
-//! name to value using the *exact* metric names of the paper's Table II,
-//! so the profiler layer consumes simulated GPUs and (hypothetically)
-//! real Nsight CSV exports through one code path.
+//! The simulator's public output is a [`CounterSet`]: metric name →
+//! value using the *exact* metric names of the paper's Table II, so the
+//! profiler layer consumes simulated GPUs and (hypothetically) real
+//! Nsight CSV exports through one code path.
+//!
+//! Storage is a dense fixed-size array indexed by [`CounterId`] (the
+//! Table II set) — counter reads/writes on the profiling hot path are
+//! array indexing, not string hashing — with a string-keyed fallback
+//! lane for metrics outside the known set (real-Nsight CSV ingestion
+//! can carry counters we do not simulate; they still round-trip through
+//! [`crate::profiler::export`]). The map semantics of the original
+//! `BTreeMap` representation are preserved exactly: `get` of a
+//! never-set metric is 0.0, equality ignores insertion order, and
+//! [`CounterSet::metrics`] iterates in lexicographic metric-name order.
 //!
 //! Note: Table II as typeset in the paper lists the FP64 rows with
 //! `h{add,mul,fma}` — a typesetting slip; the real Nsight FP64 counters
@@ -66,10 +76,138 @@ pub mod names {
     }
 }
 
+/// Number of dense counter slots (the Table II set).
+pub const N_COUNTERS: usize = 15;
+
+/// Dense identifier for a Table II counter.
+///
+/// Variant order is the *lexicographic order of the metric names* — the
+/// invariant that lets [`CounterSet::metrics`] emit sorted output by
+/// walking the array in index order (guarded by a test below).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(usize)]
+pub enum CounterId {
+    DramBytes = 0,
+    L1Bytes,
+    L2Bytes,
+    Cycles,
+    CyclesPerSec,
+    Tensor,
+    Dadd,
+    Dfma,
+    Dmul,
+    Fadd,
+    Ffma,
+    Fmul,
+    Hadd,
+    Hfma,
+    Hmul,
+}
+
+impl CounterId {
+    /// Every dense counter, in slot (= name-sorted) order.
+    pub const ALL: [CounterId; N_COUNTERS] = [
+        CounterId::DramBytes,
+        CounterId::L1Bytes,
+        CounterId::L2Bytes,
+        CounterId::Cycles,
+        CounterId::CyclesPerSec,
+        CounterId::Tensor,
+        CounterId::Dadd,
+        CounterId::Dfma,
+        CounterId::Dmul,
+        CounterId::Fadd,
+        CounterId::Ffma,
+        CounterId::Fmul,
+        CounterId::Hadd,
+        CounterId::Hfma,
+        CounterId::Hmul,
+    ];
+
+    /// Canonical Table II metric name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CounterId::DramBytes => names::DRAM_BYTES,
+            CounterId::L1Bytes => names::L1_BYTES,
+            CounterId::L2Bytes => names::L2_BYTES,
+            CounterId::Cycles => names::CYCLES,
+            CounterId::CyclesPerSec => names::CYCLES_PER_SEC,
+            CounterId::Tensor => names::TENSOR,
+            CounterId::Dadd => names::DADD,
+            CounterId::Dfma => names::DFMA,
+            CounterId::Dmul => names::DMUL,
+            CounterId::Fadd => names::FADD,
+            CounterId::Ffma => names::FFMA,
+            CounterId::Fmul => names::FMUL,
+            CounterId::Hadd => names::HADD,
+            CounterId::Hfma => names::HFMA,
+            CounterId::Hmul => names::HMUL,
+        }
+    }
+
+    /// Resolve a metric name to its dense slot; `None` for metrics
+    /// outside the Table II set (they live in the fallback lane).
+    pub fn from_name(name: &str) -> Option<CounterId> {
+        Some(match name {
+            names::DRAM_BYTES => CounterId::DramBytes,
+            names::L1_BYTES => CounterId::L1Bytes,
+            names::L2_BYTES => CounterId::L2Bytes,
+            names::CYCLES => CounterId::Cycles,
+            names::CYCLES_PER_SEC => CounterId::CyclesPerSec,
+            names::TENSOR => CounterId::Tensor,
+            names::DADD => CounterId::Dadd,
+            names::DFMA => CounterId::Dfma,
+            names::DMUL => CounterId::Dmul,
+            names::FADD => CounterId::Fadd,
+            names::FFMA => CounterId::Ffma,
+            names::FMUL => CounterId::Fmul,
+            names::HADD => CounterId::Hadd,
+            names::HFMA => CounterId::Hfma,
+            names::HMUL => CounterId::Hmul,
+            _ => return None,
+        })
+    }
+
+    /// Per-precision (add, mul, fma) dense triplets.
+    pub fn fp_triplet(p: Precision) -> (CounterId, CounterId, CounterId) {
+        match p {
+            Precision::Fp64 => (CounterId::Dadd, CounterId::Dmul, CounterId::Dfma),
+            Precision::Fp32 => (CounterId::Fadd, CounterId::Fmul, CounterId::Ffma),
+            Precision::Fp16 => (CounterId::Hadd, CounterId::Hmul, CounterId::Hfma),
+        }
+    }
+
+    /// The byte counter of one memory level.
+    pub fn bytes_for(level: MemLevel) -> CounterId {
+        match level {
+            MemLevel::L1 => CounterId::L1Bytes,
+            MemLevel::L2 => CounterId::L2Bytes,
+            MemLevel::Hbm => CounterId::DramBytes,
+        }
+    }
+}
+
 /// One kernel launch's counters: metric name → value.
-#[derive(Clone, Debug, Default, PartialEq)]
+///
+/// Table II metrics live in a dense array; anything else (unknown /
+/// CSV-imported metrics) in a sorted fallback map. A presence bitmask
+/// distinguishes "explicitly set to 0.0" from "never set", matching the
+/// original map semantics.
+#[derive(Clone, Debug, PartialEq)]
 pub struct CounterSet {
-    values: BTreeMap<String, f64>,
+    dense: [f64; N_COUNTERS],
+    present: u16,
+    extra: BTreeMap<String, f64>,
+}
+
+impl Default for CounterSet {
+    fn default() -> CounterSet {
+        CounterSet {
+            dense: [0.0; N_COUNTERS],
+            present: 0,
+            extra: BTreeMap::new(),
+        }
+    }
 }
 
 impl CounterSet {
@@ -77,33 +215,99 @@ impl CounterSet {
         CounterSet::default()
     }
 
+    /// Set a dense counter (hot path: no string handling).
+    #[inline]
+    pub fn set_id(&mut self, id: CounterId, value: f64) {
+        self.dense[id as usize] = value;
+        self.present |= 1 << (id as usize);
+    }
+
+    /// Value of a dense counter; 0.0 when never set.
+    #[inline]
+    pub fn get_id(&self, id: CounterId) -> f64 {
+        self.dense[id as usize]
+    }
+
+    #[inline]
+    pub fn has_id(&self, id: CounterId) -> bool {
+        self.present & (1 << (id as usize)) != 0
+    }
+
     pub fn set(&mut self, metric: &str, value: f64) {
-        self.values.insert(metric.to_string(), value);
+        match CounterId::from_name(metric) {
+            Some(id) => self.set_id(id, value),
+            None => {
+                self.extra.insert(metric.to_string(), value);
+            }
+        }
     }
 
     /// Value of a metric; 0.0 for never-set metrics (Nsight reports 0 for
     /// counters a kernel does not touch).
     pub fn get(&self, metric: &str) -> f64 {
-        self.values.get(metric).copied().unwrap_or(0.0)
+        match CounterId::from_name(metric) {
+            Some(id) => self.get_id(id),
+            None => self.extra.get(metric).copied().unwrap_or(0.0),
+        }
     }
 
     pub fn has(&self, metric: &str) -> bool {
-        self.values.contains_key(metric)
+        match CounterId::from_name(metric) {
+            Some(id) => self.has_id(id),
+            None => self.extra.contains_key(metric),
+        }
     }
 
-    pub fn metrics(&self) -> impl Iterator<Item = (&str, f64)> {
-        self.values.iter().map(|(k, &v)| (k.as_str(), v))
+    /// Iterate set metrics in lexicographic name order (the order the
+    /// original map representation produced — CSV export depends on it).
+    pub fn metrics(&self) -> Metrics<'_> {
+        Metrics {
+            set: self,
+            next_dense: 0,
+            extra: self.extra.iter().peekable(),
+        }
     }
 
     /// Accumulate another invocation's counters (sums add; the rate
     /// metric `cycles.per_second` is carried over unchanged).
     pub fn accumulate(&mut self, other: &CounterSet) {
-        for (k, v) in &other.values {
-            if k == names::CYCLES_PER_SEC {
-                self.values.insert(k.clone(), *v);
-            } else {
-                *self.values.entry(k.clone()).or_insert(0.0) += v;
+        for id in CounterId::ALL {
+            let i = id as usize;
+            if other.present & (1 << i) != 0 {
+                if id == CounterId::CyclesPerSec {
+                    self.dense[i] = other.dense[i];
+                } else {
+                    self.dense[i] += other.dense[i];
+                }
+                self.present |= 1 << i;
             }
+        }
+        // The fallback lane never holds the rate metric (it is a known
+        // name), so everything here sums.
+        for (k, v) in &other.extra {
+            *self.extra.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+
+    /// Accumulate `invocations` identical executions of `other` in one
+    /// step: sums scale by the invocation count, the rate metric is
+    /// carried over. Float-for-float identical to building a scaled
+    /// copy and calling [`CounterSet::accumulate`].
+    pub fn accumulate_scaled(&mut self, other: &CounterSet, invocations: u64) {
+        let n = invocations as f64;
+        for id in CounterId::ALL {
+            let i = id as usize;
+            if other.present & (1 << i) != 0 {
+                if id == CounterId::CyclesPerSec {
+                    self.dense[i] = other.dense[i];
+                } else {
+                    self.dense[i] += other.dense[i] * n;
+                }
+                self.present |= 1 << i;
+            }
+        }
+        for (k, v) in &other.extra {
+            *self.extra.entry(k.clone()).or_insert(0.0) += v * n;
         }
     }
 
@@ -111,24 +315,24 @@ impl CounterSet {
 
     /// Kernel run time: `cycles / rate` (paper Eq. 5).
     pub fn elapsed_seconds(&self) -> f64 {
-        let rate = self.get(names::CYCLES_PER_SEC);
+        let rate = self.get_id(CounterId::CyclesPerSec);
         if rate == 0.0 {
             0.0
         } else {
-            self.get(names::CYCLES) / rate
+            self.get_id(CounterId::Cycles) / rate
         }
     }
 
     /// CUDA-core FLOPs for one precision: `add + 2*fma + mul`.
     pub fn flops(&self, p: Precision) -> f64 {
-        let (add, mul, fma) = names::fp_triplet(p);
-        self.get(add) + 2.0 * self.get(fma) + self.get(mul)
+        let (add, mul, fma) = CounterId::fp_triplet(p);
+        self.get_id(add) + 2.0 * self.get_id(fma) + self.get_id(mul)
     }
 
     /// Tensor-core FLOPs: `inst * 512` (paper Eq. 6) — the factor is the
     /// V100 one; pass the device's factor for other chips.
     pub fn tensor_flops(&self, flops_per_inst: f64) -> f64 {
-        self.get(names::TENSOR) * flops_per_inst
+        self.get_id(CounterId::Tensor) * flops_per_inst
     }
 
     /// All FLOPs (CUDA core all precisions + tensor).
@@ -139,12 +343,7 @@ impl CounterSet {
 
     /// Bytes at one memory level.
     pub fn bytes(&self, level: MemLevel) -> u64 {
-        let m = match level {
-            MemLevel::L1 => names::L1_BYTES,
-            MemLevel::L2 => names::L2_BYTES,
-            MemLevel::Hbm => names::DRAM_BYTES,
-        };
-        self.get(m) as u64
+        self.get_id(CounterId::bytes_for(level)) as u64
     }
 
     /// Arithmetic intensity at one level (FLOPs/byte); None when the
@@ -159,22 +358,61 @@ impl CounterSet {
     }
 }
 
+/// Name-ordered metric iterator: merges the (name-sorted) dense slots
+/// with the sorted fallback map.
+pub struct Metrics<'a> {
+    set: &'a CounterSet,
+    next_dense: usize,
+    extra: std::iter::Peekable<std::collections::btree_map::Iter<'a, String, f64>>,
+}
+
+impl<'a> Iterator for Metrics<'a> {
+    type Item = (&'a str, f64);
+
+    fn next(&mut self) -> Option<(&'a str, f64)> {
+        while self.next_dense < N_COUNTERS && self.set.present & (1 << self.next_dense) == 0 {
+            self.next_dense += 1;
+        }
+        let dense = if self.next_dense < N_COUNTERS {
+            Some(CounterId::ALL[self.next_dense])
+        } else {
+            None
+        };
+        // Decide which lane yields first (the peeked borrow ends here;
+        // known names never appear in the fallback lane, so no ties).
+        let take_extra = match (dense, self.extra.peek()) {
+            (Some(id), Some(&(k, _))) => k.as_str() < id.name(),
+            (Some(_), None) => false,
+            (None, Some(_)) => true,
+            (None, None) => return None,
+        };
+        if take_extra {
+            let (k, v) = self.extra.next().unwrap();
+            Some((k.as_str(), *v))
+        } else {
+            let id = dense.unwrap();
+            self.next_dense += 1;
+            Some((id.name(), self.set.dense[id as usize]))
+        }
+    }
+}
+
 /// Build the counter set for one simulated kernel invocation.
 pub fn synthesize(spec: &GpuSpec, k: &KernelDesc, t: &Traffic, cycles: f64) -> CounterSet {
     let mut c = CounterSet::new();
-    c.set(names::CYCLES, cycles);
-    c.set(names::CYCLES_PER_SEC, spec.cycles_per_second());
+    c.set_id(CounterId::Cycles, cycles);
+    c.set_id(CounterId::CyclesPerSec, spec.cycles_per_second());
     for p in Precision::ALL {
-        let (add_m, mul_m, fma_m) = names::fp_triplet(p);
+        let (add_m, mul_m, fma_m) = CounterId::fp_triplet(p);
         let counts = k.mix.counts(p);
-        c.set(add_m, counts.add as f64);
-        c.set(mul_m, counts.mul as f64);
-        c.set(fma_m, counts.fma as f64);
+        c.set_id(add_m, counts.add as f64);
+        c.set_id(mul_m, counts.mul as f64);
+        c.set_id(fma_m, counts.fma as f64);
     }
-    c.set(names::TENSOR, k.mix.tensor_insts as f64);
-    c.set(names::L1_BYTES, t.l1_bytes as f64);
-    c.set(names::L2_BYTES, t.l2_bytes as f64);
-    c.set(names::DRAM_BYTES, t.hbm_bytes as f64);
+    c.set_id(CounterId::Tensor, k.mix.tensor_insts as f64);
+    c.set_id(CounterId::L1Bytes, t.l1_bytes as f64);
+    c.set_id(CounterId::L2Bytes, t.l2_bytes as f64);
+    c.set_id(CounterId::DramBytes, t.hbm_bytes as f64);
     c
 }
 
@@ -229,6 +467,27 @@ mod tests {
     }
 
     #[test]
+    fn accumulate_scaled_matches_explicit_scaling() {
+        let k = KernelDesc::streaming_elementwise("s", 1 << 16, Precision::Fp32, 3);
+        let (c, _) = counters_for(&k);
+        // Reference: the original two-step path (build a scaled copy,
+        // then accumulate it).
+        let mut scaled = CounterSet::new();
+        for (metric, value) in c.metrics() {
+            if metric == names::CYCLES_PER_SEC {
+                scaled.set(metric, value);
+            } else {
+                scaled.set(metric, value * 7.0);
+            }
+        }
+        let mut reference = CounterSet::new();
+        reference.accumulate(&scaled);
+        let mut fast = CounterSet::new();
+        fast.accumulate_scaled(&c, 7);
+        assert_eq!(fast, reference);
+    }
+
+    #[test]
     fn ai_none_on_zero_bytes() {
         let c = CounterSet::new();
         assert!(c.arithmetic_intensity(MemLevel::Hbm, 512.0).is_none());
@@ -246,6 +505,123 @@ mod tests {
         assert_eq!(names::STANDARD.len(), 15);
         // FFMA spelled with pred_on suffix:
         assert!(names::FFMA.ends_with("_op_ffma_pred_on.sum"));
+    }
+
+    #[test]
+    fn counter_ids_cover_standard_and_sort_by_name() {
+        // Every Table II metric resolves to a dense slot and round-trips.
+        for name in names::STANDARD {
+            let id = CounterId::from_name(name).unwrap_or_else(|| panic!("no id for {name}"));
+            assert_eq!(id.name(), name);
+        }
+        assert!(CounterId::from_name("sm__bogus.sum").is_none());
+        // Slot order IS name order — the invariant `metrics()` relies on.
+        for w in CounterId::ALL.windows(2) {
+            assert!(w[0].name() < w[1].name(), "{} !< {}", w[0].name(), w[1].name());
+        }
+        assert_eq!(CounterId::ALL.len(), names::STANDARD.len());
+    }
+
+    #[test]
+    fn metrics_iteration_sorted_and_merged_with_fallback() {
+        let mut c = CounterSet::new();
+        c.set(names::TENSOR, 1.0);
+        c.set("zz__custom.sum", 2.0); // sorts after every sm__ metric
+        c.set("aa__custom.sum", 3.0); // sorts before dram__
+        c.set(names::DRAM_BYTES, 4.0);
+        let got: Vec<(&str, f64)> = c.metrics().collect();
+        let names_only: Vec<&str> = got.iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names_only,
+            vec!["aa__custom.sum", names::DRAM_BYTES, names::TENSOR, "zz__custom.sum"]
+        );
+        let mut sorted = names_only.clone();
+        sorted.sort_unstable();
+        assert_eq!(names_only, sorted);
+    }
+
+    #[test]
+    fn unknown_metric_fallback_lane_round_trips() {
+        let mut c = CounterSet::new();
+        c.set("smsp__warps_active.avg", 42.5);
+        assert!(c.has("smsp__warps_active.avg"));
+        assert_eq!(c.get("smsp__warps_active.avg"), 42.5);
+        assert_eq!(c.get("smsp__other.sum"), 0.0);
+        let mut acc = CounterSet::new();
+        acc.accumulate(&c);
+        acc.accumulate(&c);
+        assert_eq!(acc.get("smsp__warps_active.avg"), 85.0);
+    }
+
+    #[test]
+    fn dense_set_matches_map_semantics_property() {
+        // Property (vs the original BTreeMap representation): get of
+        // never-set metrics is 0.0; set-then-get round-trips; equality
+        // ignores insertion order; explicit 0.0 is distinct from unset.
+        const NAMES: [&str; 18] = [
+            names::CYCLES,
+            names::CYCLES_PER_SEC,
+            names::DADD,
+            names::DMUL,
+            names::DFMA,
+            names::FADD,
+            names::FMUL,
+            names::FFMA,
+            names::HADD,
+            names::HMUL,
+            names::HFMA,
+            names::TENSOR,
+            names::L1_BYTES,
+            names::L2_BYTES,
+            names::DRAM_BYTES,
+            "custom__a.sum",
+            "custom__b.avg",
+            "other__c.sum",
+        ];
+        crate::prop::check("dense CounterSet == map semantics", 200, |g| {
+            // Draw a random subset with random values.
+            let mut chosen: Vec<(usize, f64)> = Vec::new();
+            for (i, _) in NAMES.iter().enumerate() {
+                if g.bool() {
+                    chosen.push((i, g.f64_range(0.0, 1e12)));
+                }
+            }
+            let mut reference: BTreeMap<&str, f64> = BTreeMap::new();
+            let mut a = CounterSet::new();
+            for &(i, v) in &chosen {
+                a.set(NAMES[i], v);
+                reference.insert(NAMES[i], v);
+            }
+            // Same content inserted in reverse order: equal sets.
+            let mut b = CounterSet::new();
+            for &(i, v) in chosen.iter().rev() {
+                b.set(NAMES[i], v);
+            }
+            assert_eq!(a, b, "insertion order must not matter");
+            // get round-trips for set metrics, 0.0 for never-set ones.
+            for &name in NAMES.iter() {
+                match reference.get(name) {
+                    Some(&v) => {
+                        assert_eq!(a.get(name), v);
+                        assert!(a.has(name));
+                    }
+                    None => {
+                        assert_eq!(a.get(name), 0.0);
+                        assert!(!a.has(name));
+                        // Explicitly setting 0.0 is observable (!= unset).
+                        let mut c = a.clone();
+                        c.set(name, 0.0);
+                        assert!(c.has(name));
+                        assert_ne!(c, a);
+                    }
+                }
+            }
+            // metrics() yields exactly the set metrics, name-sorted.
+            let listed: Vec<(&str, f64)> = a.metrics().collect();
+            let expected: Vec<(&str, f64)> =
+                reference.iter().map(|(&k, &v)| (k, v)).collect();
+            assert_eq!(listed, expected);
+        });
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! per precision (paper §II-B2), tensor-pipe warp instructions, and the
 //! memory request pattern from which per-level traffic follows.
 
+use std::hash::{Hash, Hasher};
+
 use crate::device::{Precision, GpuSpec};
 
 /// Thread-level SASS floating-point instruction counts for one precision.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub struct FpCounts {
     pub add: u64,
     pub mul: u64,
@@ -28,7 +30,7 @@ impl FpCounts {
 
 /// Full instruction mix of a kernel (thread-level except tensor, which is
 /// counted in warp instructions as `sm__inst_executed_pipe_tensor` does).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub struct InstMix {
     pub fp64: FpCounts,
     pub fp32: FpCounts,
@@ -86,7 +88,12 @@ impl InstMix {
 /// bytes of traffic arriving at that level are served per byte passed
 /// down to the next level. 1.0 = pure streaming (every request misses
 /// through), N = each line fetched from below is referenced N times.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Equality and hashing are *bitwise* on the float fields (`to_bits`),
+/// making the pattern usable as a memoization key ([`crate::sim::SimCache`],
+/// the session's kernel dedup) with the Eq/Hash consistency the std
+/// collections require. Descriptors built by the same code path compare
+/// equal; `0.0` vs `-0.0` (never produced here) would not.
+#[derive(Clone, Copy, Debug)]
 pub struct AccessPattern {
     /// Bytes requested by threads from the L1/TEX interface (loads).
     /// NOTE: shared-memory traffic is *excluded*, as in Nsight's
@@ -149,7 +156,37 @@ impl AccessPattern {
     }
 }
 
+impl PartialEq for AccessPattern {
+    fn eq(&self, other: &AccessPattern) -> bool {
+        self.load_bytes == other.load_bytes
+            && self.store_bytes == other.store_bytes
+            && self.footprint_bytes == other.footprint_bytes
+            && self.l1_reuse.to_bits() == other.l1_reuse.to_bits()
+            && self.l2_reuse.to_bits() == other.l2_reuse.to_bits()
+            && self.l1_resident_bytes == other.l1_resident_bytes
+            && self.l2_resident_bytes == other.l2_resident_bytes
+    }
+}
+
+impl Eq for AccessPattern {}
+
+impl Hash for AccessPattern {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.load_bytes.hash(state);
+        self.store_bytes.hash(state);
+        self.footprint_bytes.hash(state);
+        self.l1_reuse.to_bits().hash(state);
+        self.l2_reuse.to_bits().hash(state);
+        self.l1_resident_bytes.hash(state);
+        self.l2_resident_bytes.hash(state);
+    }
+}
+
 /// One kernel's static description (aggregatable over many invocations).
+///
+/// Hashable (bitwise on the float fields, see [`AccessPattern`]): the
+/// simulator memoizes on whole descriptors, so a trace with N
+/// invocations of K distinct kernels costs K simulations.
 #[derive(Clone, Debug)]
 pub struct KernelDesc {
     pub name: String,
@@ -163,6 +200,32 @@ pub struct KernelDesc {
     /// Issue efficiency in (0, 1]: fraction of peak issue rate the kernel
     /// sustains when compute-bound (tail effects, bank conflicts, ...).
     pub efficiency: f64,
+}
+
+impl PartialEq for KernelDesc {
+    fn eq(&self, other: &KernelDesc) -> bool {
+        self.name == other.name
+            && self.grid == other.grid
+            && self.block == other.block
+            && self.mix == other.mix
+            && self.access == other.access
+            && self.occupancy.to_bits() == other.occupancy.to_bits()
+            && self.efficiency.to_bits() == other.efficiency.to_bits()
+    }
+}
+
+impl Eq for KernelDesc {}
+
+impl Hash for KernelDesc {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.name.hash(state);
+        self.grid.hash(state);
+        self.block.hash(state);
+        self.mix.hash(state);
+        self.access.hash(state);
+        self.occupancy.to_bits().hash(state);
+        self.efficiency.to_bits().hash(state);
+    }
 }
 
 impl KernelDesc {
@@ -343,6 +406,23 @@ mod tests {
         let large = KernelDesc::gemm("g", 1024, 1024, 1024, Precision::Fp16, true, 64, &spec);
         assert!(large.mix.tensor_insts > small.mix.tensor_insts * 32);
         assert!(large.access.footprint_bytes > small.access.footprint_bytes);
+    }
+
+    #[test]
+    fn kernel_desc_usable_as_hash_key() {
+        use std::collections::HashMap;
+        let spec = GpuSpec::v100();
+        let a = KernelDesc::gemm("g", 512, 512, 512, Precision::Fp16, true, 64, &spec);
+        let b = KernelDesc::gemm("g", 512, 512, 512, Precision::Fp16, true, 64, &spec);
+        let c = KernelDesc::gemm("g", 512, 512, 256, Precision::Fp16, true, 64, &spec);
+        assert_eq!(a, b, "identical construction => equal");
+        assert_ne!(a, c);
+        let mut map: HashMap<KernelDesc, u32> = HashMap::new();
+        map.insert(a, 1);
+        *map.entry(b).or_insert(0) += 10; // must land on a's slot
+        map.insert(c, 2);
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.values().copied().max(), Some(11));
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * [`cycles`] — SM issue-pipeline cycle model: compute cycles per
 //!   pipeline vs memory cycles per level; elapsed = max (+ ramp).
 //! * [`counters`] — counter synthesis from mix + traffic + cycles.
+//!
+//! [`simulate`] runs all three for one kernel; [`SimCache`] memoizes it
+//! over identical descriptors (simulation is pure, so cached results
+//! are bit-identical).
 
 pub mod cache;
 pub mod cache_sim;
@@ -22,9 +26,11 @@ pub mod kernel;
 pub mod schedule;
 
 pub use cache::{CacheModel, Traffic};
-pub use counters::CounterSet;
+pub use counters::{CounterId, CounterSet};
 pub use cycles::CycleModel;
 pub use kernel::{AccessPattern, InstMix, KernelDesc, KernelInvocation};
+
+use std::collections::HashMap;
 
 use crate::device::GpuSpec;
 
@@ -35,10 +41,62 @@ pub fn simulate(spec: &GpuSpec, k: &KernelDesc) -> CounterSet {
     counters::synthesize(spec, k, &traffic, cycles)
 }
 
+/// Memoizing wrapper around [`simulate`]: identical kernel descriptors
+/// (bitwise — [`KernelDesc`] hashes its floats via `to_bits`) are
+/// simulated once and the cached [`CounterSet`] is returned thereafter.
+/// Simulation is a pure function of `(spec, desc)`, so cached results
+/// are bit-identical to fresh ones; a trace replaying K distinct
+/// kernels N times costs K simulations, not N.
+pub struct SimCache<'a> {
+    spec: &'a GpuSpec,
+    cache: HashMap<KernelDesc, CounterSet>,
+}
+
+impl<'a> SimCache<'a> {
+    pub fn new(spec: &'a GpuSpec) -> SimCache<'a> {
+        SimCache {
+            spec,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Simulate `k`, reusing the cached result for descriptors already
+    /// seen (the descriptor is cloned only on first miss).
+    pub fn simulate(&mut self, k: &KernelDesc) -> &CounterSet {
+        if !self.cache.contains_key(k) {
+            let counters = simulate(self.spec, k);
+            self.cache.insert(k.clone(), counters);
+        }
+        &self.cache[k]
+    }
+
+    /// Number of distinct kernels simulated so far.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::device::Precision;
+
+    #[test]
+    fn memoized_simulation_bit_identical_and_deduped() {
+        let spec = GpuSpec::v100();
+        let a = KernelDesc::streaming_elementwise("relu", 1 << 18, Precision::Fp32, 1);
+        let b = KernelDesc::gemm("g", 512, 512, 512, Precision::Fp16, true, 64, &spec);
+        let mut cache = SimCache::new(&spec);
+        // First and repeat lookups agree with the direct path exactly.
+        for k in [&a, &b, &a, &b, &a] {
+            assert_eq!(cache.simulate(k), &simulate(&spec, k));
+        }
+        assert_eq!(cache.len(), 2, "2 distinct kernels => 2 simulations");
+    }
 
     #[test]
     fn simulate_produces_consistent_counterset() {

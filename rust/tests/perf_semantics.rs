@@ -1,0 +1,116 @@
+//! Semantics guards for the profiling hot path: the dense counter
+//! storage, the simulation memoizer, and the parallel session fan-out
+//! are *optimizations only* — every observable output must be
+//! bit-identical to the serial, unmemoized path (cf. PR 1's ERT-sweep
+//! guarantee for `exec::parallel_map`).
+
+use hroofline::device::{GpuSpec, Precision};
+use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
+use hroofline::dl::lower::{lower, Framework};
+use hroofline::dl::Policy;
+use hroofline::profiler::export::to_csv;
+use hroofline::profiler::{Session, SessionConfig};
+use hroofline::prop::check;
+use hroofline::sim::kernel::{KernelDesc, KernelInvocation};
+
+fn legacy_config() -> SessionConfig {
+    // The pre-optimization behaviour: one simulation per trace entry,
+    // strictly serial.
+    let mut cfg = SessionConfig::default();
+    cfg.memoize = false;
+    cfg.threads = Some(1);
+    cfg
+}
+
+#[test]
+fn full_step_profile_bit_identical_across_optimizations() {
+    // The acceptance check for this PR: `Session::standard(..).profile`
+    // over a full DeepCAM training step produces the same bits no
+    // matter which of memoization / parallel fan-out is active.
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let all = trace.all();
+    assert!(all.len() > 10, "paper-scale step should have many entries");
+
+    let reference = Session::new(&spec, legacy_config()).profile(&all);
+    let reference_csv = to_csv(&reference);
+
+    let standard = Session::standard(&spec).profile(&all);
+    assert_eq!(standard, reference, "standard (memoized, auto-threaded)");
+    assert_eq!(to_csv(&standard), reference_csv, "serialized output");
+
+    for (memoize, threads) in [(true, 1), (true, 8), (false, 8)] {
+        let mut cfg = SessionConfig::default();
+        cfg.memoize = memoize;
+        cfg.threads = Some(threads);
+        let p = Session::new(&spec, cfg).profile(&all);
+        assert_eq!(p, reference, "memoize={memoize} threads={threads}");
+        assert_eq!(to_csv(&p), reference_csv, "memoize={memoize} threads={threads}");
+    }
+}
+
+#[test]
+fn random_traces_profile_identically_memoized_and_parallel() {
+    // Property: for arbitrary traces (duplicate descriptors, repeated
+    // kernel names, mixed kernel families), the optimized session
+    // equals the serial unmemoized one exactly.
+    check("optimized profiling == legacy profiling", 20, |g| {
+        let spec = GpuSpec::v100();
+        // A small pool of distinct kernels; entries re-draw from it so
+        // the memoizer sees genuine duplicates.
+        let names = ["wgrad", "relu", "cast", "hmma", "adam"];
+        let n_pool = g.usize_range(1, 6);
+        let pool: Vec<KernelDesc> = (0..n_pool)
+            .map(|i| {
+                let name = names[i % names.len()];
+                if g.bool() {
+                    let m: u64 = 64 << g.usize_range(0, 3);
+                    KernelDesc::gemm(name, m, m, m, Precision::Fp16, g.bool(), 64, &spec)
+                } else {
+                    let p = *g.pick(&Precision::ALL);
+                    let n = 1u64 << g.usize_range(10, 18);
+                    KernelDesc::streaming_elementwise(name, n, p, g.usize_range(0, 3) as u64)
+                }
+            })
+            .collect();
+        let n_entries = g.usize_range(1, 24);
+        let trace: Vec<KernelInvocation> = (0..n_entries)
+            .map(|_| KernelInvocation {
+                kernel: g.pick(&pool).clone(),
+                invocations: g.usize_range(1, 9) as u64,
+                stream: g.usize_range(0, 3) as u32,
+            })
+            .collect();
+
+        let reference = Session::new(&spec, legacy_config()).profile(&trace);
+        let standard = Session::standard(&spec).profile(&trace);
+        assert_eq!(standard, reference);
+        let mut par = SessionConfig::default();
+        par.threads = Some(3);
+        let parallel = Session::new(&spec, par).profile(&trace);
+        assert_eq!(parallel, reference);
+        assert_eq!(to_csv(&parallel), to_csv(&reference));
+    });
+}
+
+#[test]
+fn one_metric_per_run_still_bit_identical_under_optimizations() {
+    // The §III-B protocol (one metric per execution) exercises the
+    // many-passes merge path; it must also be invariant.
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::lite());
+    let trace = lower(&graph, Framework::TensorFlow, Policy::O1);
+    let all = trace.all();
+
+    let mut legacy = legacy_config();
+    legacy.one_metric_per_run = true;
+    let reference = Session::new(&spec, legacy).profile(&all);
+
+    let mut fast = SessionConfig::default();
+    fast.one_metric_per_run = true;
+    fast.threads = Some(4);
+    let optimized = Session::new(&spec, fast).profile(&all);
+    assert_eq!(optimized, reference);
+    assert_eq!(to_csv(&optimized), to_csv(&reference));
+}
