@@ -84,14 +84,24 @@ fn main() {
         let all = all.clone();
         b.case("profile_full_step_unmemoized", move || {
             let spec = GpuSpec::v100();
-            let mut cfg = SessionConfig::default();
-            cfg.memoize = false;
-            cfg.threads = Some(1);
+            let cfg = SessionConfig { memoize: false, threads: Some(1), ..Default::default() };
             let p = Session::new(&spec, cfg).profile(&all);
             black_box(p.n_kernels() as u64);
             n_inv
         });
     }
+
+    // the scenario-matrix sweep in CI smoke configuration (restricted
+    // workload set): graph builds + lowerings + shared-cache profiling
+    b.case("matrix_quick_sweep", || {
+        let spec = GpuSpec::v100();
+        let matrix = hroofline::scenario::ScenarioMatrix::quick()
+            .with_workloads("deepcam-lite,transformer")
+            .expect("registered workloads");
+        let run = matrix.run(&spec);
+        black_box(run.sim_stats.1);
+        run.results.len() as u64
+    });
 
     // roofline + SVG emission
     {

@@ -114,7 +114,8 @@ fn main() -> anyhow::Result<()> {
         let profile = Session::standard(&spec).profile(trace.phase(phase));
         let model = RooflineModel::from_profile(&spec, &profile);
         model.validate_bounds().expect("roofline bounds");
-        let chart = RooflineChart::hierarchical(&model, &format!("DeepCAM {label} (V100, simulated)"));
+        let chart =
+            RooflineChart::hierarchical(&model, &format!("DeepCAM {label} (V100, simulated)"));
         let path = format!("{out_dir}/{label}.svg");
         std::fs::write(&path, chart.to_svg())?;
         println!(

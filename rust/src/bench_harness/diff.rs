@@ -1,0 +1,211 @@
+//! Bench-trajectory comparator: diff two `BENCH_<group>.json`
+//! summaries (schema `hroofline-bench-v1`, written by
+//! [`crate::bench_harness::Bench::run`]) and flag per-case `ns_per_iter`
+//! regressions beyond a threshold.
+//!
+//! CI commits a baseline under `ci/` and runs `repro bench-diff`
+//! against the fresh quick-mode run on every PR: any case regressing
+//! past the threshold fails the job. Cases present on only one side
+//! are reported but never fail (benches come and go across PRs).
+
+use crate::util::error::{ensure, Context, Result};
+use crate::util::table::Align;
+use crate::util::{fmt, Json, Table};
+
+/// One case present in both summaries.
+#[derive(Clone, Debug)]
+pub struct CaseDiff {
+    pub name: String,
+    pub base_ns: f64,
+    pub fresh_ns: f64,
+}
+
+impl CaseDiff {
+    /// fresh/baseline time ratio (> 1 is slower than baseline).
+    pub fn ratio(&self) -> f64 {
+        self.fresh_ns / self.base_ns
+    }
+}
+
+/// The full comparison.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    pub group: String,
+    pub compared: Vec<CaseDiff>,
+    /// Cases only in the fresh run (new benches).
+    pub added: Vec<String>,
+    /// Cases only in the baseline (removed benches).
+    pub removed: Vec<String>,
+    /// Allowed fractional slowdown (0.25 = +25% ns/iter).
+    pub max_regress: f64,
+}
+
+impl DiffReport {
+    /// Cases slower than `baseline * (1 + max_regress)`.
+    pub fn regressions(&self) -> Vec<&CaseDiff> {
+        self.compared.iter().filter(|c| c.ratio() > 1.0 + self.max_regress).collect()
+    }
+
+    /// Text rendering: one row per compared case plus added/removed
+    /// footnotes.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["case", "baseline", "fresh", "ratio", "verdict"]).aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Left,
+        ]);
+        for c in &self.compared {
+            let verdict = if c.ratio() > 1.0 + self.max_regress {
+                "REGRESSED"
+            } else if c.ratio() < 1.0 {
+                "improved"
+            } else {
+                "ok"
+            };
+            t.row(&[
+                c.name.clone(),
+                fmt::duration(c.base_ns * 1e-9),
+                fmt::duration(c.fresh_ns * 1e-9),
+                format!("{:.3}", c.ratio()),
+                verdict.to_string(),
+            ]);
+        }
+        let mut out = format!(
+            "bench group '{}' vs baseline (threshold +{:.0}%):\n{}",
+            self.group,
+            self.max_regress * 100.0,
+            t.render()
+        );
+        if !self.added.is_empty() {
+            out.push_str(&format!("new cases (no baseline): {}\n", self.added.join(", ")));
+        }
+        if !self.removed.is_empty() {
+            out.push_str(&format!("removed cases (baseline only): {}\n", self.removed.join(", ")));
+        }
+        out
+    }
+}
+
+/// Compare a fresh bench summary against a baseline. Cases are matched
+/// by name; baseline entries with non-positive `ns_per_iter` are
+/// skipped (placeholder rows). Errors on schema/shape mismatches, never
+/// on perf — regression policy is the caller's call via
+/// [`DiffReport::regressions`].
+pub fn diff(baseline: &Json, fresh: &Json, max_regress: f64) -> Result<DiffReport> {
+    for (doc, which) in [(baseline, "baseline"), (fresh, "fresh")] {
+        let schema = doc
+            .get("schema")
+            .with_context(|| format!("{which}: missing schema"))?
+            .as_str()?;
+        ensure!(
+            schema == "hroofline-bench-v1",
+            "{which}: unsupported bench schema '{schema}' (want hroofline-bench-v1)"
+        );
+    }
+    let group = baseline.get("group")?.as_str()?.to_string();
+    let base_cases = baseline.get("cases")?.as_obj()?;
+    let fresh_cases = fresh.get("cases")?.as_obj()?;
+
+    let mut compared = Vec::new();
+    let mut removed = Vec::new();
+    for (name, base) in base_cases {
+        let base_ns = base
+            .get("ns_per_iter")
+            .with_context(|| format!("baseline case '{name}'"))?
+            .as_f64()?;
+        match fresh_cases.get(name) {
+            None => removed.push(name.clone()),
+            Some(_) if base_ns <= 0.0 => {} // placeholder baseline row
+            Some(f) => {
+                let fresh_ns = f
+                    .get("ns_per_iter")
+                    .with_context(|| format!("fresh case '{name}'"))?
+                    .as_f64()?;
+                compared.push(CaseDiff { name: name.clone(), base_ns, fresh_ns });
+            }
+        }
+    }
+    let added = fresh_cases.keys().filter(|k| !base_cases.contains_key(*k)).cloned().collect();
+    Ok(DiffReport { group, compared, added, removed, max_regress })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(cases: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("hroofline-bench-v1")),
+            ("group", Json::str("hotpath")),
+            ("iters", Json::num(3.0)),
+            (
+                "cases",
+                Json::Obj(
+                    cases
+                        .iter()
+                        .map(|(name, ns)| {
+                            let case = Json::obj(vec![
+                                ("ns_per_iter", Json::num(*ns)),
+                                ("items_per_sec", Json::num(0.0)),
+                            ]);
+                            (name.to_string(), case)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn within_threshold_passes() {
+        let base = summary(&[("a", 1000.0), ("b", 2000.0)]);
+        let fresh = summary(&[("a", 1200.0), ("b", 1500.0)]);
+        let report = diff(&base, &fresh, 0.25).unwrap();
+        assert_eq!(report.compared.len(), 2);
+        assert!(report.regressions().is_empty());
+        assert!(report.render().contains("improved"), "{}", report.render());
+    }
+
+    #[test]
+    fn regression_beyond_threshold_flagged() {
+        let base = summary(&[("a", 1000.0), ("b", 2000.0)]);
+        let fresh = summary(&[("a", 1251.0), ("b", 2000.0)]);
+        let report = diff(&base, &fresh, 0.25).unwrap();
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "a");
+        assert!(report.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn added_and_removed_cases_reported_not_failed() {
+        let base = summary(&[("a", 1000.0), ("gone", 500.0)]);
+        let fresh = summary(&[("a", 1000.0), ("new", 700.0)]);
+        let report = diff(&base, &fresh, 0.25).unwrap();
+        assert_eq!(report.added, vec!["new".to_string()]);
+        assert_eq!(report.removed, vec!["gone".to_string()]);
+        assert!(report.regressions().is_empty());
+    }
+
+    #[test]
+    fn placeholder_baseline_rows_skipped() {
+        let base = summary(&[("a", 0.0)]);
+        let fresh = summary(&[("a", 99999.0)]);
+        let report = diff(&base, &fresh, 0.25).unwrap();
+        assert!(report.compared.is_empty());
+        assert!(report.regressions().is_empty());
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let mut bad = summary(&[("a", 1.0)]);
+        if let Json::Obj(m) = &mut bad {
+            m.insert("schema".into(), Json::str("v0"));
+        }
+        let good = summary(&[("a", 1.0)]);
+        assert!(diff(&bad, &good, 0.25).is_err());
+        assert!(diff(&good, &Json::Null, 0.25).is_err());
+    }
+}

@@ -17,6 +17,8 @@
 //!   directory (override with `HROOFLINE_BENCH_DIR`) so CI can archive
 //!   one small file per run and diff regressions across PRs.
 
+pub mod diff;
+
 use crate::util::{fmt, Json, Summary};
 use std::time::Instant;
 

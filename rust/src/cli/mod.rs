@@ -50,6 +50,54 @@ impl std::fmt::Display for CliError {
 
 impl std::error::Error for CliError {}
 
+/// Edit distance for did-you-mean suggestions (classic two-row DP).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest candidate to `input`, when close enough to be a
+/// plausible typo (distance ≤ 2, or ≤ a third of the input length for
+/// long names). Used for "did you mean" hints on unknown flags,
+/// commands, and workload names.
+pub fn suggest<'a, I>(input: &str, candidates: I) -> Option<&'a str>
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    let budget = 2usize.max(input.chars().count() / 3);
+    candidates
+        .into_iter()
+        .map(|c| (levenshtein(input, c), c))
+        .filter(|&(d, _)| d <= budget)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+/// Render a did-you-mean suffix for an error message ("" when no
+/// candidate is close enough). `prefix` decorates the suggestion (e.g.
+/// "--" for flags). Shared by flag/command errors here and by
+/// name-resolving registries ([`crate::dl::workloads`]).
+pub fn hint<'a, I>(input: &str, prefix: &str, candidates: I) -> String
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    match suggest(input, candidates) {
+        Some(s) => format!(" (did you mean '{prefix}{s}'?)"),
+        None => String::new(),
+    }
+}
+
 impl Cmd {
     pub fn new(name: &str, about: &str) -> Cmd {
         Cmd {
@@ -137,7 +185,10 @@ impl Cmd {
                 None => (body, None),
             };
             let Some(spec) = self.flags.iter().find(|f| f.name == name) else {
-                return Err(CliError(format!("unknown flag '--{name}' (try --help)")));
+                let hint = hint(name, "--", self.flags.iter().map(|f| f.name.as_str()));
+                return Err(CliError(format!(
+                    "unknown flag '--{name}'{hint} (try --help)"
+                )));
             };
             if spec.is_switch {
                 if inline_value.is_some() {
@@ -234,8 +285,9 @@ impl App {
             return Err(CliError(self.usage()));
         }
         let Some(cmd) = self.commands.iter().find(|c| &c.name == cmd_name) else {
+            let hint = hint(cmd_name, "", self.commands.iter().map(|c| c.name.as_str()));
             return Err(CliError(format!(
-                "unknown command '{cmd_name}'\n\n{}",
+                "unknown command '{cmd_name}'{hint}\n\n{}",
                 self.usage()
             )));
         };
@@ -282,6 +334,37 @@ mod tests {
         let cmd = Cmd::new("x", "t");
         let err = cmd.parse(&argv(&["--bogus"])).unwrap_err();
         assert!(err.0.contains("unknown flag"));
+    }
+
+    #[test]
+    fn unknown_flag_gets_did_you_mean() {
+        let cmd = Cmd::new("x", "t").flag("workloads", "all", "h").switch("quick", "h");
+        let err = cmd.parse(&argv(&["--workload", "a"])).unwrap_err();
+        assert!(err.0.contains("unknown flag '--workload'"), "{}", err.0);
+        assert!(err.0.contains("did you mean '--workloads'?"), "{}", err.0);
+        // A flag nothing like any spec gets no suggestion.
+        let err = cmd.parse(&argv(&["--zzzzzzzz"])).unwrap_err();
+        assert!(!err.0.contains("did you mean"), "{}", err.0);
+    }
+
+    #[test]
+    fn unknown_command_gets_did_you_mean() {
+        let app = App::new("repro", "t")
+            .command(Cmd::new("matrix", "a"))
+            .command(Cmd::new("report", "b"));
+        let err = app.dispatch(&argv(&["matrxi"])).unwrap_err();
+        assert!(err.0.contains("did you mean 'matrix'?"), "{}", err.0);
+    }
+
+    #[test]
+    fn suggest_picks_closest_within_budget() {
+        assert_eq!(suggest("pytorch", ["pytorch", "tensorflow"]), Some("pytorch"));
+        assert_eq!(suggest("pytroch", ["pytorch", "tensorflow"]), Some("pytorch"));
+        assert_eq!(suggest("resnt", ["resnet", "transformer"]), Some("resnet"));
+        assert_eq!(suggest("caffe", ["pytorch", "tensorflow"]), None);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
     }
 
     #[test]

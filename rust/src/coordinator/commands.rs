@@ -167,6 +167,68 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// `repro matrix` — the scenario-matrix sweep: workload registry ×
+/// framework × phase × AMP policy, profiled through one shared
+/// simulation cache, with per-scenario artifacts plus the
+/// cross-scenario comparison report.
+pub fn cmd_matrix(p: &Parsed) -> Result<()> {
+    let matrix = if p.has("quick") {
+        crate::scenario::ScenarioMatrix::quick()
+    } else {
+        crate::scenario::ScenarioMatrix::full()
+    };
+    let matrix = matrix.with_workloads(p.get("workloads"))?;
+    let out_dir = p.get("out").to_string();
+    let scenario_dir = Path::new(&out_dir).join("scenarios");
+    std::fs::create_dir_all(&scenario_dir)?;
+
+    let spec = GpuSpec::v100();
+    let run = matrix.run(&spec);
+
+    let mut written = 0usize;
+    for result in &run.results {
+        result.to_artifact(&spec).write_to(&scenario_dir)?;
+        written += 1;
+    }
+    let comparison = crate::scenario::comparison_artifact(&spec, &run);
+    comparison.write_to(Path::new(&out_dir))?;
+
+    println!("== {} ==\n{}", comparison.title, comparison.text);
+    println!(
+        "wrote {written} scenario artifacts under {}/ and the comparison report \
+         (matrix.{{txt,json,svg,csv}}) under {out_dir}/",
+        scenario_dir.display()
+    );
+    Ok(())
+}
+
+/// `repro bench-diff` — gate the bench trajectory: compare a fresh
+/// `BENCH_<group>.json` against a committed baseline and fail on
+/// ns/iter regressions beyond the threshold.
+pub fn cmd_bench_diff(p: &Parsed) -> Result<()> {
+    let max_regress: f64 = p.get_as("max-regress")?;
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading '{path}'"))?;
+        Json::parse(&text).with_context(|| format!("parsing '{path}'"))
+    };
+    let baseline = read(p.get("baseline"))?;
+    let fresh = read(p.get("fresh"))?;
+    let report = crate::bench_harness::diff::diff(&baseline, &fresh, max_regress)?;
+    print!("{}", report.render());
+    let regressions = report.regressions();
+    if !regressions.is_empty() {
+        let names: Vec<&str> = regressions.iter().map(|c| c.name.as_str()).collect();
+        anyhow::bail!(
+            "{} case(s) regressed beyond +{:.0}%: {}",
+            regressions.len(),
+            max_regress * 100.0,
+            names.join(", ")
+        );
+    }
+    println!("bench trajectory OK ({} cases within threshold)", report.compared.len());
+    Ok(())
+}
+
 /// `repro report` — regenerate paper artifacts.
 pub fn cmd_report(p: &Parsed) -> Result<()> {
     let out_dir = p.get("out").to_string();
@@ -283,6 +345,72 @@ mod tests {
             .flag("scale", "lite", "h")
             .flag("out", "/tmp/x", "h");
         assert!(cmd_profile(&parsed(cmd, &[])).is_err());
+    }
+
+    #[test]
+    fn matrix_quick_restricted_writes_artifacts() {
+        let dir = std::env::temp_dir().join(format!("hroofline-matrixcmd-{}", std::process::id()));
+        let cmd = Cmd::new("matrix", "t")
+            .flag("workloads", "all", "h")
+            .flag("out", dir.to_str().unwrap(), "h")
+            .switch("quick", "h");
+        cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "deepcam-lite,transformer"])).unwrap();
+        for name in ["matrix.txt", "matrix.json", "matrix.svg", "matrix.csv"] {
+            assert!(dir.join(name).exists(), "{name}");
+        }
+        // 2 workloads x 2 frameworks x 2 phases x 2 policies.
+        let scenario_jsons = std::fs::read_dir(dir.join("scenarios"))
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().path().extension().is_some_and(|x| x == "json")
+            })
+            .count();
+        assert_eq!(scenario_jsons, 16);
+        assert!(dir.join("scenarios/transformer-pt-forward-O1.svg").exists());
+        assert!(dir.join("scenarios/transformer-pt-forward-O1.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn matrix_rejects_unknown_workload_cleanly() {
+        let cmd = Cmd::new("matrix", "t")
+            .flag("workloads", "all", "h")
+            .flag("out", "/tmp/x", "h")
+            .switch("quick", "h");
+        let err = cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "resnet50"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown workload 'resnet50'"), "{msg}");
+        assert!(msg.contains("did you mean 'resnet'?"), "{msg}");
+    }
+
+    #[test]
+    fn bench_diff_gates_regressions() {
+        let dir = std::env::temp_dir().join(format!("hroofline-benchdiff-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let summary = |ns: f64| {
+            format!(
+                "{{\"schema\": \"hroofline-bench-v1\", \"group\": \"g\", \"iters\": 3, \
+                 \"cases\": {{\"a\": {{\"ns_per_iter\": {ns}, \"items_per_sec\": 0}}}}}}"
+            )
+        };
+        let base = dir.join("base.json");
+        let ok = dir.join("ok.json");
+        let slow = dir.join("slow.json");
+        std::fs::write(&base, summary(1000.0)).unwrap();
+        std::fs::write(&ok, summary(1100.0)).unwrap();
+        std::fs::write(&slow, summary(2000.0)).unwrap();
+        let cmd = || {
+            Cmd::new("bench-diff", "t")
+                .flag_required("baseline", "h")
+                .flag_required("fresh", "h")
+                .flag("max-regress", "0.25", "h")
+        };
+        let args_ok = ["--baseline", base.to_str().unwrap(), "--fresh", ok.to_str().unwrap()];
+        cmd_bench_diff(&parsed(cmd(), &args_ok)).unwrap();
+        let args_slow = ["--baseline", base.to_str().unwrap(), "--fresh", slow.to_str().unwrap()];
+        let err = cmd_bench_diff(&parsed(cmd(), &args_slow)).unwrap_err();
+        assert!(format!("{err:#}").contains("regressed"), "{err:#}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

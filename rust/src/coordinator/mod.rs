@@ -5,5 +5,7 @@
 pub mod commands;
 pub mod train;
 
-pub use commands::{cmd_ert, cmd_metrics, cmd_profile, cmd_report, cmd_train};
+pub use commands::{
+    cmd_bench_diff, cmd_ert, cmd_matrix, cmd_metrics, cmd_profile, cmd_report, cmd_train,
+};
 pub use train::{run_training, TrainConfig, TrainResult};

@@ -18,7 +18,7 @@ use crate::dl::autodiff::TrainGraph;
 use crate::dl::graph::{DType, Op, OpKind};
 
 /// AMP optimization level.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Policy {
     Off,
     O0,
@@ -151,7 +151,11 @@ pub fn apply(t: &mut TrainGraph, policy: Policy) -> usize {
     // apex also emits inf/nan checks — movement-only.
     let loss_scale_ops = 2;
     for i in 0..loss_scale_ops {
-        let scalar = t.graph.tensor(&format!("loss_scale_{i}"), crate::dl::graph::TensorShape(vec![1]), DType::F32);
+        let scalar = t.graph.tensor(
+            &format!("loss_scale_{i}"),
+            crate::dl::graph::TensorShape(vec![1]),
+            DType::F32,
+        );
         new_ops.push((
             usize::MAX,
             Op {

@@ -86,14 +86,24 @@ fn backward_of(op: &Op, g: &Graph) -> Vec<(String, OpKind, u64, TensorShape, DTy
             vec![
                 (
                     format!("{}_bwd_data", op.name),
-                    OpKind::Conv2dBwdData { kh: *kh, kw: *kw, stride: *stride, dilation: *dilation },
+                    OpKind::Conv2dBwdData {
+                        kh: *kh,
+                        kw: *kw,
+                        stride: *stride,
+                        dilation: *dilation,
+                    },
                     op.flops,
                     x_shape,
                     dt,
                 ),
                 (
                     format!("{}_bwd_filter", op.name),
-                    OpKind::Conv2dBwdFilter { kh: *kh, kw: *kw, stride: *stride, dilation: *dilation },
+                    OpKind::Conv2dBwdFilter {
+                        kh: *kh,
+                        kw: *kw,
+                        stride: *stride,
+                        dilation: *dilation,
+                    },
                     op.flops,
                     w_shape,
                     dt,

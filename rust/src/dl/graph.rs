@@ -235,7 +235,13 @@ impl Graph {
     }
 
     /// Transposed conv (x2 upsampling decoder layers).
-    pub fn conv2d_transpose(&mut self, name: &str, x: TensorId, w: TensorId, stride: u64) -> TensorId {
+    pub fn conv2d_transpose(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        w: TensorId,
+        stride: u64,
+    ) -> TensorId {
         let xs = self.shape(x).clone();
         let ws = self.shape(w).clone();
         let (n, h, wd) = (xs.dim(0), xs.dim(1), xs.dim(2));
@@ -253,7 +259,13 @@ impl Graph {
         )
     }
 
-    pub fn batch_norm(&mut self, name: &str, x: TensorId, gamma: TensorId, beta: TensorId) -> TensorId {
+    pub fn batch_norm(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        gamma: TensorId,
+        beta: TensorId,
+    ) -> TensorId {
         let xs = self.shape(x).clone();
         // ~10 FLOPs/element: stats + normalize + affine.
         let flops = 10 * xs.n_elems();
@@ -334,6 +346,74 @@ impl Graph {
     pub fn cast(&mut self, name: &str, x: TensorId, to: DType) -> TensorId {
         let xs = self.shape(x).clone();
         self.push_op(name, OpKind::Cast { to }, vec![x], xs, to, 0)
+    }
+
+    /// Dense projection: `x @ w` contracting `x`'s innermost axis with a
+    /// rank-2 weight `[k, n]`. Works for any `x` rank ≥ 1 (the leading
+    /// axes are the batched row space) — the shape Transformer Q/K/V,
+    /// output and FFN projections take.
+    pub fn matmul(&mut self, name: &str, x: TensorId, w: TensorId) -> TensorId {
+        let xs = self.shape(x).clone();
+        let ws = self.shape(w).clone();
+        assert_eq!(ws.0.len(), 2, "matmul {name}: weight must be rank-2 [k, n]");
+        let (k, n) = (ws.dim(0), ws.dim(1));
+        let last = *xs.0.last().expect("matmul input needs at least one axis");
+        assert_eq!(last, k, "matmul {name}: contraction mismatch");
+        let rows = xs.n_elems() / k;
+        let mut out = xs.0.clone();
+        *out.last_mut().unwrap() = n;
+        let flops = 2 * rows * k * n;
+        let dt = self.dtype(x);
+        self.push_op(name, OpKind::MatMul, vec![x, w], TensorShape(out), dt, flops)
+    }
+
+    /// Batched activation-by-activation matmul `a · bᵀ` contracting the
+    /// innermost axis: `a = [B, M, 1, K]` × `b = [B, N, 1, K]` →
+    /// `[B, M, 1, N]`. This is the attention-score / attention-apply
+    /// shape (Q·Kᵀ and P·V once V is transposed).
+    pub fn batched_matmul(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let as_ = self.shape(a).clone();
+        let bs = self.shape(b).clone();
+        assert_eq!(as_.0.len(), 4, "batched_matmul {name}: lhs must be rank-4");
+        assert_eq!(bs.0.len(), 4, "batched_matmul {name}: rhs must be rank-4");
+        assert_eq!(as_.dim(0), bs.dim(0), "batched_matmul {name}: batch mismatch");
+        assert_eq!(as_.dim(3), bs.dim(3), "batched_matmul {name}: contraction mismatch");
+        let (batch, m, n, k) = (as_.dim(0), as_.dim(1), bs.dim(1), as_.dim(3));
+        let flops = 2 * batch * m * n * k;
+        let dt = self.dtype(a);
+        self.push_op(
+            name,
+            OpKind::MatMul,
+            vec![a, b],
+            TensorShape::nhwc(batch, m, 1, n),
+            dt,
+            flops,
+        )
+    }
+
+    /// Swap the row/innermost axes of a `[B, M, 1, N]` activation —
+    /// pure data movement (zero-AI), like an eager `.transpose()` copy.
+    pub fn transpose_inner(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).clone();
+        assert_eq!(xs.0.len(), 4, "transpose {name}: needs rank-4");
+        let dt = self.dtype(x);
+        self.push_op(
+            name,
+            OpKind::Transpose,
+            vec![x],
+            TensorShape::nhwc(xs.dim(0), xs.dim(3), xs.dim(2), xs.dim(1)),
+            dt,
+            0,
+        )
+    }
+
+    /// Row-wise softmax over the innermost axis (attention weights):
+    /// exp + reduce + normalize ≈ 5 FLOPs/element.
+    pub fn softmax(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).clone();
+        let flops = 5 * xs.n_elems();
+        let dt = self.dtype(x);
+        self.push_op(name, OpKind::Softmax, vec![x], xs, dt, flops)
     }
 
     // ---------- whole-graph accounting ----------
@@ -427,6 +507,56 @@ mod tests {
         let (g, _) = tiny_graph();
         assert_eq!(g.params().len(), 1);
         assert_eq!(g.n_param_elems(), 3 * 3 * 3 * 16);
+    }
+
+    #[test]
+    fn matmul_shape_and_flops() {
+        let mut g = Graph::new();
+        let x = g.tensor("x", TensorShape::nhwc(2, 16, 1, 32), DType::F32);
+        let w = g.param("w", TensorShape(vec![32, 64]), DType::F32);
+        let y = g.matmul("proj", x, w);
+        assert_eq!(g.shape(y), &TensorShape::nhwc(2, 16, 1, 64));
+        // 2 * rows * k * n, rows = 2*16*1.
+        assert_eq!(g.ops[0].flops, 2 * 32 * 32 * 64);
+        assert!(g.ops[0].kind.is_tensor_core_eligible());
+    }
+
+    #[test]
+    fn batched_matmul_is_attention_shaped() {
+        let mut g = Graph::new();
+        let q = g.tensor("q", TensorShape::nhwc(2, 8, 1, 32), DType::F32);
+        let k = g.tensor("k", TensorShape::nhwc(2, 8, 1, 32), DType::F32);
+        let s = g.batched_matmul("scores", q, k);
+        assert_eq!(g.shape(s), &TensorShape::nhwc(2, 8, 1, 8));
+        assert_eq!(g.ops[0].flops, 2 * 2 * 8 * 8 * 32);
+    }
+
+    #[test]
+    fn transpose_swaps_axes_and_is_zero_ai() {
+        let mut g = Graph::new();
+        let v = g.tensor("v", TensorShape::nhwc(2, 8, 1, 32), DType::F32);
+        let vt = g.transpose_inner("vt", v);
+        assert_eq!(g.shape(vt), &TensorShape::nhwc(2, 32, 1, 8));
+        assert!(g.ops[0].kind.is_zero_ai());
+        assert_eq!(g.ops[0].flops, 0);
+    }
+
+    #[test]
+    fn softmax_preserves_shape() {
+        let mut g = Graph::new();
+        let s = g.tensor("s", TensorShape::nhwc(2, 8, 1, 8), DType::F32);
+        let p = g.softmax("attn", s);
+        assert_eq!(g.shape(p), g.shape(s));
+        assert_eq!(g.ops[0].flops, 5 * 2 * 8 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn matmul_contraction_mismatch_panics() {
+        let mut g = Graph::new();
+        let x = g.tensor("x", TensorShape::nhwc(1, 4, 1, 8), DType::F32);
+        let w = g.param("w", TensorShape(vec![16, 4]), DType::F32);
+        g.matmul("bad", x, w);
     }
 
     #[test]

@@ -31,17 +31,28 @@ use crate::dl::graph::{DType, Graph, Op, OpKind};
 use crate::sim::kernel::{AccessPattern, InstMix, KernelDesc, KernelInvocation};
 
 /// Which framework personality to lower with.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Framework {
     TensorFlow,
     PyTorch,
 }
 
 impl Framework {
+    /// Both personalities, in matrix-enumeration order.
+    pub const ALL: [Framework; 2] = [Framework::TensorFlow, Framework::PyTorch];
+
     pub fn name(self) -> &'static str {
         match self {
             Framework::TensorFlow => "tensorflow",
             Framework::PyTorch => "pytorch",
+        }
+    }
+
+    /// Short tag for scenario ids and file names.
+    pub fn short(self) -> &'static str {
+        match self {
+            Framework::TensorFlow => "tf",
+            Framework::PyTorch => "pt",
         }
     }
 
@@ -55,11 +66,33 @@ impl Framework {
 }
 
 /// Training phase a kernel belongs to.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Phase {
     Forward,
     Backward,
     Optimizer,
+}
+
+impl Phase {
+    /// All phases, in execution order.
+    pub const ALL: [Phase; 3] = [Phase::Forward, Phase::Backward, Phase::Optimizer];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::Backward => "backward",
+            Phase::Optimizer => "optimizer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        match s {
+            "forward" | "fwd" => Some(Phase::Forward),
+            "backward" | "bwd" => Some(Phase::Backward),
+            "optimizer" | "opt" => Some(Phase::Optimizer),
+            _ => None,
+        }
+    }
 }
 
 /// The lowered trace, phase-split. For TensorFlow the optimizer stream
@@ -209,7 +242,15 @@ fn lower_phase(
                         // accumulation pass (3 launches of the same
                         // kernel), plus layout + gradient staging copies.
                         for _ in 0..3 {
-                            kernels.push(conv_kernel(g, op, fw, policy, spec, op.flops / 3, "bwd_data"));
+                            kernels.push(conv_kernel(
+                                g,
+                                op,
+                                fw,
+                                policy,
+                                spec,
+                                op.flops / 3,
+                                "bwd_data",
+                            ));
                         }
                         kernels.push(movement_kernel(
                             "tf_nchw_transpose_grad",
@@ -250,7 +291,15 @@ fn lower_phase(
                 } else if fw == Framework::TensorFlow {
                     // Same k-chunk split as dgrad.
                     for _ in 0..3 {
-                        kernels.push(conv_kernel(g, op, fw, policy, spec, op.flops / 3, "bwd_filter"));
+                        kernels.push(conv_kernel(
+                            g,
+                            op,
+                            fw,
+                            policy,
+                            spec,
+                            op.flops / 3,
+                            "bwd_filter",
+                        ));
                     }
                 } else {
                     kernels.push(conv_kernel(g, op, fw, policy, spec, op.flops, "bwd_filter"));
@@ -450,10 +499,12 @@ fn conv_kernel(
 ) -> KernelDesc {
     let dt = dtype_of(op, policy);
     let tc = dt == DType::F16 && op.kind.is_tensor_core_eligible();
-    // GEMM dims from the implicit-GEMM view.
+    // GEMM dims from the implicit-GEMM view. `m` is the batched row
+    // space (every axis but the innermost), rank-agnostic so matmul
+    // outputs of any rank land here safely.
     let out_shape = &g.tensors[op.output.0].shape;
-    let m = out_shape.dim(0) * out_shape.dim(1).max(1) * out_shape.dim(2).max(1);
-    let n = out_shape.0.last().copied().unwrap_or(1);
+    let n = out_shape.0.last().copied().unwrap_or(1).max(1);
+    let m = (out_shape.n_elems() / n).max(1);
     let k = (flops / 2).checked_div(m * n).unwrap_or(1).max(1);
     let tile = if tc { 128 } else { 64 };
     // Algo-class descriptor: cudnn picks kernels by filter size, stride

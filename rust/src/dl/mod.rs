@@ -17,14 +17,19 @@
 //! * [`lower`] — framework personalities: TensorFlow-like and
 //!   PyTorch-like lowering of an op graph to kernel traces
 //!   ([`crate::sim::KernelInvocation`]), including each framework's
-//!   characteristic zero-AI kernel population (§IV-D, Table III).
+//!   characteristic zero-AI kernel population (§IV-D, Table III);
+//! * [`workloads`] — the named workload registry (DeepCAM plus
+//!   synthetic ResNet/Transformer contrast cases) that the scenario
+//!   matrix ([`crate::scenario`]) sweeps over.
 
 pub mod amp;
 pub mod autodiff;
 pub mod deepcam;
 pub mod graph;
 pub mod lower;
+pub mod workloads;
 
 pub use amp::Policy;
 pub use graph::{DType, Graph, Op, OpKind, TensorShape};
 pub use lower::{lower, Framework, FrameworkTrace, Phase};
+pub use workloads::{Scale, WorkloadSpec};

@@ -1,0 +1,347 @@
+//! Named workload registry — the profiling *subjects* the scenario
+//! matrix sweeps over.
+//!
+//! The paper profiles exactly one network (DeepCAM). The ROADMAP's
+//! north star is "as many scenarios as you can imagine", so this module
+//! turns the graph builders into a registry of named [`WorkloadSpec`]s
+//! that every sweep/CLI surface resolves by name:
+//!
+//! * `deepcam-paper` — the published DeepLabv3+ configuration (§III-B);
+//! * `deepcam-lite` — the AOT-twin scale used by the e2e example;
+//! * `resnet` — a ResNet-style residual conv stack (image
+//!   classification head), the canonical conv-heavy contrast case;
+//! * `transformer` — a Transformer encoder block stack (Q/K/V
+//!   projections, attention matmuls + softmax, FFN), the GEMM-heavy
+//!   contrast case with eager transpose/copy traffic.
+//!
+//! Every workload builds at two scales: [`Scale::Full`] for paper-style
+//! runs and [`Scale::Quick`] for CI smoke sweeps (same op census,
+//! reduced tensor extents). Unknown names resolve to a clean
+//! [`CliError`] with a did-you-mean hint.
+
+use crate::cli::{hint, CliError};
+use crate::dl::deepcam::{deepcam, DeepCamConfig};
+use crate::dl::graph::{DType, Graph, TensorId, TensorShape};
+
+/// Workload build scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper-style extents.
+    Full,
+    /// Reduced extents for smoke runs: identical op census, smaller
+    /// tensors — kernel *population* is preserved, cost is not.
+    Quick,
+}
+
+impl Scale {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Full => "full",
+            Scale::Quick => "quick",
+        }
+    }
+}
+
+/// One registry entry: a named forward-graph builder.
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+    builder: fn(Scale) -> Graph,
+}
+
+impl WorkloadSpec {
+    /// Build the forward graph at the requested scale.
+    pub fn build(&self, scale: Scale) -> Graph {
+        (self.builder)(scale)
+    }
+}
+
+impl std::fmt::Debug for WorkloadSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkloadSpec").field("name", &self.name).finish()
+    }
+}
+
+static REGISTRY: [WorkloadSpec; 4] = [
+    WorkloadSpec {
+        name: "deepcam-paper",
+        description: "DeepCAM (DeepLabv3+) at the published configuration (quick: 192x288 tiles)",
+        builder: build_deepcam_paper,
+    },
+    WorkloadSpec {
+        name: "deepcam-lite",
+        description: "DeepCAM at the AOT-compiled lite scale (python/compile twin)",
+        builder: build_deepcam_lite,
+    },
+    WorkloadSpec {
+        name: "resnet",
+        description: "ResNet-style residual conv stack with a classification head",
+        builder: build_resnet,
+    },
+    WorkloadSpec {
+        name: "transformer",
+        description: "Transformer encoder block stack (attention matmuls + FFN)",
+        builder: build_transformer,
+    },
+];
+
+/// All registered workloads, in registry (and matrix-enumeration) order.
+pub fn registry() -> &'static [WorkloadSpec] {
+    &REGISTRY
+}
+
+/// Registered workload names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|w| w.name).collect()
+}
+
+/// Resolve a workload by name; unknown names get a clean [`CliError`]
+/// with a did-you-mean hint and the available set.
+pub fn lookup(name: &str) -> Result<&'static WorkloadSpec, CliError> {
+    if let Some(w) = REGISTRY.iter().find(|w| w.name == name) {
+        return Ok(w);
+    }
+    let hint = hint(name, "", REGISTRY.iter().map(|w| w.name));
+    Err(CliError(format!(
+        "unknown workload '{name}'{hint}; available: {}",
+        names().join(", ")
+    )))
+}
+
+// ---------- builders ----------
+
+fn build_deepcam_paper(scale: Scale) -> Graph {
+    let mut cfg = DeepCamConfig::paper();
+    if scale == Scale::Quick {
+        // Same network structure and parameter census, 1/16th of the
+        // spatial extent — quick sweeps keep the kernel population.
+        cfg.height = 192;
+        cfg.width = 288;
+    }
+    deepcam(&cfg)
+}
+
+fn build_deepcam_lite(_scale: Scale) -> Graph {
+    // Already the smoke scale; identical at both scales by design (the
+    // lite config is pinned to the AOT artifact manifest).
+    deepcam(&DeepCamConfig::lite())
+}
+
+/// conv → BN → ReLU triple (shared by the ResNet builder).
+fn conv_bn_relu(
+    g: &mut Graph,
+    name: &str,
+    x: TensorId,
+    cin: u64,
+    cout: u64,
+    k: u64,
+    stride: u64,
+) -> TensorId {
+    let w = g.param(&format!("{name}_w"), TensorShape(vec![k, k, cin, cout]), DType::F32);
+    let y = g.conv2d(&format!("{name}_conv"), x, w, stride, 1);
+    let gamma = g.param(&format!("{name}_gamma"), TensorShape(vec![cout]), DType::F32);
+    let beta = g.param(&format!("{name}_beta"), TensorShape(vec![cout]), DType::F32);
+    let y = g.batch_norm(&format!("{name}_bn"), y, gamma, beta);
+    g.relu(&format!("{name}_relu"), y)
+}
+
+/// ResNet-style stack: stem + strided stages of residual blocks +
+/// global-average-pool classification head.
+fn build_resnet(scale: Scale) -> Graph {
+    let (batch, hw, stem_ch, stages, blocks, classes): (u64, u64, u64, &[u64], u64, u64) =
+        match scale {
+            Scale::Full => (8, 64, 64, &[64, 128, 256, 512], 2, 100),
+            Scale::Quick => (2, 32, 16, &[16, 32, 64], 1, 10),
+        };
+    let mut g = Graph::new();
+    let x = g.tensor("input", TensorShape::nhwc(batch, hw, hw, 3), DType::F32);
+    let labels = g.tensor("labels", TensorShape::nhwc(batch, 1, 1, 1), DType::I32);
+
+    let mut feats = conv_bn_relu(&mut g, "stem", x, 3, stem_ch, 3, 1);
+    let mut cin = stem_ch;
+    for (si, &ch) in stages.iter().enumerate() {
+        feats = conv_bn_relu(&mut g, &format!("s{si}_down"), feats, cin, ch, 3, 2);
+        for bi in 0..blocks {
+            let name = format!("s{si}_b{bi}");
+            let y = conv_bn_relu(&mut g, &format!("{name}_a"), feats, ch, ch, 3, 1);
+            let w2 = g.param(&format!("{name}_b_w"), TensorShape(vec![3, 3, ch, ch]), DType::F32);
+            let y2 = g.conv2d(&format!("{name}_b_conv"), y, w2, 1, 1);
+            let gamma = g.param(&format!("{name}_b_gamma"), TensorShape(vec![ch]), DType::F32);
+            let beta = g.param(&format!("{name}_b_beta"), TensorShape(vec![ch]), DType::F32);
+            let y2 = g.batch_norm(&format!("{name}_b_bn"), y2, gamma, beta);
+            let sum = g.add(&format!("{name}_add"), y2, feats);
+            feats = g.relu(&format!("{name}_relu"), sum);
+        }
+        cin = ch;
+    }
+
+    let pooled = g.global_avg_pool("head_pool", feats);
+    let wcls = g.param("head_w", TensorShape(vec![cin, classes]), DType::F32);
+    let logits = g.matmul("head_fc", pooled, wcls);
+    g.softmax_ce_loss("loss", logits, labels);
+    g
+}
+
+/// Transformer encoder block stack over `[batch, seq, 1, d_model]`
+/// activations: per layer Q/K/V projections, Q·Kᵀ scores, softmax,
+/// attention apply (with an eager transpose copy), output projection,
+/// residual + norm, then a two-matmul FFN with its own residual + norm.
+fn build_transformer(scale: Scale) -> Graph {
+    let (batch, seq, in_dim, d_model, d_ff, layers, classes): (u64, u64, u64, u64, u64, u64, u64) =
+        match scale {
+            Scale::Full => (8, 256, 64, 512, 2048, 2, 16),
+            Scale::Quick => (2, 64, 32, 128, 256, 1, 8),
+        };
+    let mut g = Graph::new();
+    let tokens = g.tensor("tokens", TensorShape::nhwc(batch, seq, 1, in_dim), DType::F32);
+    let labels = g.tensor("labels", TensorShape::nhwc(batch, 1, 1, 1), DType::I32);
+
+    let w_embed = g.param("embed_w", TensorShape(vec![in_dim, d_model]), DType::F32);
+    let mut x = g.matmul("embed", tokens, w_embed);
+
+    let norm = |g: &mut Graph, name: &str, x: TensorId, ch: u64| -> TensorId {
+        let gamma = g.param(&format!("{name}_gamma"), TensorShape(vec![ch]), DType::F32);
+        let beta = g.param(&format!("{name}_beta"), TensorShape(vec![ch]), DType::F32);
+        g.batch_norm(name, x, gamma, beta)
+    };
+
+    for li in 0..layers {
+        let p = format!("l{li}");
+        let wq = g.param(&format!("{p}_wq"), TensorShape(vec![d_model, d_model]), DType::F32);
+        let wk = g.param(&format!("{p}_wk"), TensorShape(vec![d_model, d_model]), DType::F32);
+        let wv = g.param(&format!("{p}_wv"), TensorShape(vec![d_model, d_model]), DType::F32);
+        let q = g.matmul(&format!("{p}_q"), x, wq);
+        let k = g.matmul(&format!("{p}_k"), x, wk);
+        let v = g.matmul(&format!("{p}_v"), x, wv);
+        let scores = g.batched_matmul(&format!("{p}_scores"), q, k);
+        let probs = g.softmax(&format!("{p}_attn_softmax"), scores);
+        let vt = g.transpose_inner(&format!("{p}_v_transpose"), v);
+        let ctx = g.batched_matmul(&format!("{p}_attn_apply"), probs, vt);
+        let wo = g.param(&format!("{p}_wo"), TensorShape(vec![d_model, d_model]), DType::F32);
+        let proj = g.matmul(&format!("{p}_out_proj"), ctx, wo);
+        let res1 = g.add(&format!("{p}_residual1"), x, proj);
+        let normed = norm(&mut g, &format!("{p}_norm1"), res1, d_model);
+
+        let w1 = g.param(&format!("{p}_ffn_w1"), TensorShape(vec![d_model, d_ff]), DType::F32);
+        let w2 = g.param(&format!("{p}_ffn_w2"), TensorShape(vec![d_ff, d_model]), DType::F32);
+        let h = g.matmul(&format!("{p}_ffn1"), normed, w1);
+        let h = g.relu(&format!("{p}_ffn_relu"), h);
+        let h = g.matmul(&format!("{p}_ffn2"), h, w2);
+        let res2 = g.add(&format!("{p}_residual2"), normed, h);
+        x = norm(&mut g, &format!("{p}_norm2"), res2, d_model);
+    }
+
+    let pooled = g.global_avg_pool("head_pool", x);
+    let wcls = g.param("head_w", TensorShape(vec![d_model, classes]), DType::F32);
+    let logits = g.matmul("head_fc", pooled, wcls);
+    g.softmax_ce_loss("loss", logits, labels);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dl::graph::OpKind;
+    use crate::dl::lower::{lower, Framework};
+    use crate::dl::Policy;
+
+    #[test]
+    fn registry_names_unique_and_stable() {
+        let mut ns = names();
+        assert_eq!(ns, vec!["deepcam-paper", "deepcam-lite", "resnet", "transformer"]);
+        ns.sort_unstable();
+        ns.dedup();
+        assert_eq!(ns.len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn lookup_finds_every_registered_name() {
+        for w in registry() {
+            assert_eq!(lookup(w.name).unwrap().name, w.name);
+        }
+    }
+
+    #[test]
+    fn unknown_workload_is_clean_cli_error_with_hint() {
+        let err = lookup("resnet50").unwrap_err();
+        assert!(err.0.contains("unknown workload 'resnet50'"), "{}", err.0);
+        assert!(err.0.contains("did you mean 'resnet'?"), "{}", err.0);
+        assert!(err.0.contains("available: deepcam-paper"), "{}", err.0);
+        // Nothing-like-anything: no hint, but the available set prints.
+        let err = lookup("qqqqq").unwrap_err();
+        assert!(!err.0.contains("did you mean"), "{}", err.0);
+        assert!(err.0.contains("available:"), "{}", err.0);
+    }
+
+    #[test]
+    fn every_workload_builds_at_both_scales() {
+        for w in registry() {
+            for scale in [Scale::Full, Scale::Quick] {
+                let g = w.build(scale);
+                assert!(!g.ops.is_empty(), "{} {:?}", w.name, scale);
+                assert!(g.total_flops() > 0, "{} {:?}", w.name, scale);
+                assert!(g.n_param_elems() > 0, "{} {:?}", w.name, scale);
+                // Every workload ends in the loss the autodiff seeds on.
+                assert_eq!(g.ops.last().unwrap().kind, OpKind::CrossEntropyLoss);
+            }
+        }
+    }
+
+    #[test]
+    fn quick_scale_is_cheaper_but_same_census() {
+        for w in registry() {
+            let full = w.build(Scale::Full);
+            let quick = w.build(Scale::Quick);
+            assert!(
+                quick.total_flops() <= full.total_flops(),
+                "{}: quick {} > full {}",
+                w.name,
+                quick.total_flops(),
+                full.total_flops()
+            );
+        }
+        // deepcam-paper quick preserves the exact op census.
+        let full = lookup("deepcam-paper").unwrap().build(Scale::Full);
+        let quick = lookup("deepcam-paper").unwrap().build(Scale::Quick);
+        assert_eq!(full.ops.len(), quick.ops.len());
+        assert_eq!(full.n_param_elems(), quick.n_param_elems());
+    }
+
+    #[test]
+    fn resnet_is_conv_dominated() {
+        let g = build_resnet(Scale::Quick);
+        let conv_flops: u64 = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .map(|o| o.flops)
+            .sum();
+        assert!(conv_flops as f64 > 0.8 * g.total_flops() as f64);
+    }
+
+    #[test]
+    fn transformer_is_matmul_dominated_with_zero_ai_transposes() {
+        let g = build_transformer(Scale::Quick);
+        let mm_flops: u64 = g
+            .ops
+            .iter()
+            .filter(|o| o.kind == OpKind::MatMul)
+            .map(|o| o.flops)
+            .sum();
+        assert!(mm_flops as f64 > 0.7 * g.total_flops() as f64);
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::Transpose));
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::Softmax));
+    }
+
+    #[test]
+    fn new_workloads_lower_under_both_frameworks() {
+        for name in ["resnet", "transformer"] {
+            let g = lookup(name).unwrap().build(Scale::Quick);
+            for fw in Framework::ALL {
+                let t = lower(&g, fw, Policy::O1);
+                assert!(!t.forward.is_empty(), "{name}/{}", fw.name());
+                assert!(!t.backward.is_empty(), "{name}/{}", fw.name());
+            }
+        }
+    }
+}

@@ -176,7 +176,8 @@ mod tests {
         // the most performance gain".
         let spec = GpuSpec::v100();
         let r = ladder();
-        let gains: Vec<f64> = r.windows(2).map(|w| w[1].tflops(&spec) - w[0].tflops(&spec)).collect();
+        let gains: Vec<f64> =
+            r.windows(2).map(|w| w[1].tflops(&spec) - w[0].tflops(&spec)).collect();
         let max_gain = gains.iter().cloned().fold(f64::MIN, f64::max);
         assert_eq!(gains[1], max_gain, "v2->v3 should be the largest gain: {gains:?}");
     }

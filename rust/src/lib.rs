@@ -23,6 +23,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them natively; used by
 //!   the end-to-end DeepCAM-lite training example.
 //! * [`report`] — one reproduction harness per paper table/figure.
+//! * [`scenario`] — the scenario matrix: the [`dl::workloads`] registry
+//!   crossed with framework × phase × AMP policy, profiled through a
+//!   shared simulation cache and compared on one overlay Roofline.
 //! * [`coordinator`] — job orchestration: sweeps, output layout, the
 //!   end-to-end train driver.
 //!
@@ -59,6 +62,7 @@ pub mod profiler;
 pub mod prop;
 pub mod report;
 pub mod roofline;
+pub mod scenario;
 pub mod runtime;
 pub mod sim;
 pub mod util;

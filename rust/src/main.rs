@@ -1,15 +1,18 @@
 //! `repro` — the hroofline command-line interface.
 //!
 //! Subcommands map onto the paper's workflow:
-//!   ert      machine characterization (§II-A): empirical host sweep
-//!            and/or modeled V100 sweep; writes Fig. 1 data + SVG
-//!   metrics  list/inspect the Nsight-analog metric registry (Table II)
-//!   profile  application characterization (§II-B): lower DeepCAM under
-//!            a framework personality + AMP policy, collect counters,
-//!            print the kernel table, write the hierarchical roofline
-//!   report   regenerate paper artifacts (figures/tables) into out/
-//!   train    end-to-end: run the AOT-compiled DeepCAM-lite training
-//!            loop through PJRT, logging the loss curve
+//!   ert         machine characterization (§II-A): empirical host sweep
+//!               and/or modeled V100 sweep; writes Fig. 1 data + SVG
+//!   metrics     list/inspect the Nsight-analog metric registry (Table II)
+//!   profile     application characterization (§II-B): lower DeepCAM under
+//!               a framework personality + AMP policy, collect counters,
+//!               print the kernel table, write the hierarchical roofline
+//!   matrix      scenario-matrix sweep: workload registry × framework ×
+//!               phase × AMP policy, per-scenario artifacts + comparison
+//!   report      regenerate paper artifacts (figures/tables) into out/
+//!   train       end-to-end: run the AOT-compiled DeepCAM-lite training
+//!               loop through PJRT, logging the loss curve
+//!   bench-diff  gate the bench trajectory against a committed baseline
 //!
 //! Run `repro <cmd> --help` for flags.
 
@@ -17,7 +20,7 @@ use hroofline::cli::{App, Cmd};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let app = App::new("repro", "Hierarchical Roofline analysis for deep learning (CS.DC 2020 reproduction)")
+    let app = App::new("repro", "Hierarchical Roofline analysis for deep learning (cs.DC 2020)")
         .command(
             Cmd::new("ert", "Machine characterization sweeps (Fig. 1, Tab. I, Fig. 2)")
                 .flag("mode", "modeled", "modeled | empirical | both")
@@ -34,8 +37,18 @@ fn main() {
                 .flag("out", "out/profile", "output directory"),
         )
         .command(
+            Cmd::new("matrix", "Scenario-matrix sweep: workloads x frameworks x phases x AMP")
+                .flag("workloads", "all", "comma-separated workload names, or 'all'")
+                .flag("out", "out/matrix", "output directory")
+                .switch("quick", "reduced matrix at smoke scale (the CI gate)"),
+        )
+        .command(
             Cmd::new("report", "Regenerate paper tables/figures into out/report")
-                .flag("only", "all", "all | fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9 | tab1 | tab3")
+                .flag(
+                    "only",
+                    "all",
+                    "all | fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9 | tab1 | tab3",
+                )
                 .flag("out", "out/report", "output directory"),
         )
         .command(
@@ -44,6 +57,12 @@ fn main() {
                 .flag("artifacts", "artifacts", "artifact directory")
                 .flag("out", "out/train", "output directory")
                 .flag("log-every", "10", "steps between loss log lines"),
+        )
+        .command(
+            Cmd::new("bench-diff", "Diff a fresh BENCH_<group>.json against a baseline")
+                .flag_required("baseline", "committed baseline BENCH_<group>.json")
+                .flag_required("fresh", "freshly generated BENCH_<group>.json")
+                .flag("max-regress", "0.25", "allowed fractional ns/iter slowdown"),
         );
 
     let (cmd, parsed) = match app.dispatch(&argv) {
@@ -58,8 +77,10 @@ fn main() {
         "ert" => hroofline::coordinator::cmd_ert(&parsed),
         "metrics" => hroofline::coordinator::cmd_metrics(&parsed),
         "profile" => hroofline::coordinator::cmd_profile(&parsed),
+        "matrix" => hroofline::coordinator::cmd_matrix(&parsed),
         "report" => hroofline::coordinator::cmd_report(&parsed),
         "train" => hroofline::coordinator::cmd_train(&parsed),
+        "bench-diff" => hroofline::coordinator::cmd_bench_diff(&parsed),
         other => {
             eprintln!("unhandled command {other}");
             std::process::exit(2);

@@ -126,7 +126,12 @@ mod tests {
         let spec = GpuSpec::v100();
         let trace = vec![
             KernelInvocation {
-                kernel: KernelDesc::streaming_elementwise("relu, \"fused\"", 1 << 16, Precision::Fp32, 1),
+                kernel: KernelDesc::streaming_elementwise(
+                    "relu, \"fused\"",
+                    1 << 16,
+                    Precision::Fp32,
+                    1,
+                ),
                 invocations: 3,
                 stream: 0,
             },

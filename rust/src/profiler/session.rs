@@ -155,6 +155,30 @@ impl<'a> Session<'a> {
     ///    the output bit-identical to the serial path (test-asserted,
     ///    like PR 1's ERT sweep).
     pub fn try_profile(&self, trace: &[KernelInvocation]) -> Result<Profile, SessionError> {
+        self.profile_with(trace, &|k| sim::simulate(self.spec, k))
+    }
+
+    /// Like [`Session::try_profile`], but baseline simulations go
+    /// through a cross-session [`sim::SharedSimCache`]: a scenario
+    /// sweep profiling many traces over one device simulates each
+    /// distinct descriptor once for the *whole sweep*. Bit-identical to
+    /// [`Session::try_profile`] (cached simulation is pure;
+    /// test-asserted).
+    pub fn try_profile_shared(
+        &self,
+        trace: &[KernelInvocation],
+        cache: &sim::SharedSimCache,
+    ) -> Result<Profile, SessionError> {
+        self.profile_with(trace, &|k| cache.get_or_simulate(self.spec, k))
+    }
+
+    /// Core profiling path, parameterized on how a kernel descriptor
+    /// becomes baseline counters (direct simulation or a shared cache).
+    fn profile_with(
+        &self,
+        trace: &[KernelInvocation],
+        simulate_kernel: &(dyn Fn(&KernelDesc) -> CounterSet + Sync),
+    ) -> Result<Profile, SessionError> {
         let metric_refs: Vec<&str> = self.config.metrics.iter().map(|s| s.as_str()).collect();
         let metrics = self.registry.resolve(&metric_refs)?;
         let passes: Vec<Vec<Metric>> = if self.config.one_metric_per_run {
@@ -192,7 +216,7 @@ impl<'a> Session<'a> {
         }
         let sim_workers = self.workers_for(unique.len());
         let baselines: Vec<CounterSet> =
-            crate::exec::parallel_map(unique, sim_workers, |k| sim::simulate(self.spec, k));
+            crate::exec::parallel_map(unique, sim_workers, simulate_kernel);
 
         // 2. Merge each entry's replay passes (pure per entry; with the
         // nondeterminism hook armed, `baseline = None` forces per-pass
@@ -357,8 +381,7 @@ mod tests {
     fn multi_pass_equals_single_pass_on_deterministic_app() {
         let spec = GpuSpec::v100();
         let packed = Session::standard(&spec).profile(&trace());
-        let mut cfg = SessionConfig::default();
-        cfg.one_metric_per_run = true;
+        let cfg = SessionConfig { one_metric_per_run: true, ..Default::default() };
         let separate = Session::new(&spec, cfg).profile(&trace());
         // "these metrics can be collected on separate runs as well, as
         // long as the execution ... is deterministic" (§II-B3).
@@ -373,8 +396,7 @@ mod tests {
     fn one_metric_per_run_uses_more_passes_and_overhead() {
         let spec = GpuSpec::v100();
         let packed = Session::standard(&spec).profile(&trace());
-        let mut cfg = SessionConfig::default();
-        cfg.one_metric_per_run = true;
+        let cfg = SessionConfig { one_metric_per_run: true, ..Default::default() };
         let separate = Session::new(&spec, cfg).profile(&trace());
         assert!(separate.passes > packed.passes);
         assert!(separate.profiling_overhead_s > packed.profiling_overhead_s);
@@ -407,11 +429,27 @@ mod tests {
         let spec = GpuSpec::v100();
         let t = trace_with_duplicates();
         let memoized = Session::standard(&spec).profile(&t);
-        let mut cfg = SessionConfig::default();
-        cfg.memoize = false;
-        cfg.threads = Some(1);
+        let cfg = SessionConfig { memoize: false, threads: Some(1), ..Default::default() };
         let unmemoized = Session::new(&spec, cfg).profile(&t);
         assert_eq!(memoized, unmemoized);
+    }
+
+    #[test]
+    fn shared_cache_profile_identical_to_plain_profile() {
+        // The cross-session memoizer must not change a single bit, and
+        // a second session over the same cache must re-simulate nothing.
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let plain = Session::standard(&spec).profile(&t);
+        let cache = sim::SharedSimCache::new();
+        let session = Session::standard(&spec);
+        let shared = session.try_profile_shared(&t, &cache).unwrap();
+        assert_eq!(shared, plain);
+        let first_sims = cache.stats().1;
+        assert_eq!(first_sims as usize, cache.len());
+        let again = session.try_profile_shared(&t, &cache).unwrap();
+        assert_eq!(again, plain);
+        assert_eq!(cache.stats().1, first_sims, "second run fully cached");
     }
 
     #[test]
@@ -420,12 +458,10 @@ mod tests {
         // order-preserving, so thread count cannot change the output.
         let spec = GpuSpec::v100();
         let t = trace_with_duplicates();
-        let mut serial_cfg = SessionConfig::default();
-        serial_cfg.threads = Some(1);
+        let serial_cfg = SessionConfig { threads: Some(1), ..Default::default() };
         let serial = Session::new(&spec, serial_cfg).profile(&t);
         for threads in [2, 4, 8] {
-            let mut cfg = SessionConfig::default();
-            cfg.threads = Some(threads);
+            let cfg = SessionConfig { threads: Some(threads), ..Default::default() };
             let parallel = Session::new(&spec, cfg).profile(&t);
             assert_eq!(parallel, serial, "threads={threads}");
         }
@@ -434,9 +470,11 @@ mod tests {
     #[test]
     fn nondeterminism_detected_under_parallel_fanout() {
         let spec = GpuSpec::v100();
-        let mut cfg = SessionConfig::default();
-        cfg.nondeterminism = Some(1234);
-        cfg.threads = Some(4);
+        let cfg = SessionConfig {
+            nondeterminism: Some(1234),
+            threads: Some(4),
+            ..Default::default()
+        };
         let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
         assert!(matches!(err, SessionError::NonDeterministic { .. }), "{err}");
     }
@@ -444,8 +482,7 @@ mod tests {
     #[test]
     fn nondeterminism_detected() {
         let spec = GpuSpec::v100();
-        let mut cfg = SessionConfig::default();
-        cfg.nondeterminism = Some(1234);
+        let cfg = SessionConfig { nondeterminism: Some(1234), ..Default::default() };
         let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
         assert!(matches!(err, SessionError::NonDeterministic { .. }), "{err}");
     }
@@ -453,8 +490,10 @@ mod tests {
     #[test]
     fn unknown_metric_rejected() {
         let spec = GpuSpec::v100();
-        let mut cfg = SessionConfig::default();
-        cfg.metrics = vec!["sm__no_such.sum".into()];
+        let cfg = SessionConfig {
+            metrics: vec!["sm__no_such.sum".into()],
+            ..Default::default()
+        };
         let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
         assert!(matches!(err, SessionError::Metric(_)));
     }

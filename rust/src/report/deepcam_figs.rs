@@ -36,13 +36,55 @@ pub struct FigSpec {
 }
 
 pub const FIGS: [FigSpec; 7] = [
-    FigSpec { id: "fig3", framework: Framework::TensorFlow, phase: Phase::Forward, policy: Policy::O1, title: "Fig. 3 — TensorFlow DeepCAM forward (AMP)" },
-    FigSpec { id: "fig4", framework: Framework::TensorFlow, phase: Phase::Backward, policy: Policy::O1, title: "Fig. 4 — TensorFlow DeepCAM backward+update (AMP)" },
-    FigSpec { id: "fig5", framework: Framework::PyTorch, phase: Phase::Forward, policy: Policy::O1, title: "Fig. 5 — PyTorch DeepCAM forward (AMP O1)" },
-    FigSpec { id: "fig6", framework: Framework::PyTorch, phase: Phase::Backward, policy: Policy::O1, title: "Fig. 6 — PyTorch DeepCAM backward (AMP O1)" },
-    FigSpec { id: "fig7", framework: Framework::PyTorch, phase: Phase::Optimizer, policy: Policy::O1, title: "Fig. 7 — PyTorch DeepCAM optimizer step" },
-    FigSpec { id: "fig8", framework: Framework::TensorFlow, phase: Phase::Backward, policy: Policy::ManualFp16, title: "Fig. 8 — manual-FP16 TensorFlow backward" },
-    FigSpec { id: "fig9", framework: Framework::PyTorch, phase: Phase::Backward, policy: Policy::O0, title: "Fig. 9 — PyTorch backward, AMP O0" },
+    FigSpec {
+        id: "fig3",
+        framework: Framework::TensorFlow,
+        phase: Phase::Forward,
+        policy: Policy::O1,
+        title: "Fig. 3 — TensorFlow DeepCAM forward (AMP)",
+    },
+    FigSpec {
+        id: "fig4",
+        framework: Framework::TensorFlow,
+        phase: Phase::Backward,
+        policy: Policy::O1,
+        title: "Fig. 4 — TensorFlow DeepCAM backward+update (AMP)",
+    },
+    FigSpec {
+        id: "fig5",
+        framework: Framework::PyTorch,
+        phase: Phase::Forward,
+        policy: Policy::O1,
+        title: "Fig. 5 — PyTorch DeepCAM forward (AMP O1)",
+    },
+    FigSpec {
+        id: "fig6",
+        framework: Framework::PyTorch,
+        phase: Phase::Backward,
+        policy: Policy::O1,
+        title: "Fig. 6 — PyTorch DeepCAM backward (AMP O1)",
+    },
+    FigSpec {
+        id: "fig7",
+        framework: Framework::PyTorch,
+        phase: Phase::Optimizer,
+        policy: Policy::O1,
+        title: "Fig. 7 — PyTorch DeepCAM optimizer step",
+    },
+    FigSpec {
+        id: "fig8",
+        framework: Framework::TensorFlow,
+        phase: Phase::Backward,
+        policy: Policy::ManualFp16,
+        title: "Fig. 8 — manual-FP16 TensorFlow backward",
+    },
+    FigSpec {
+        id: "fig9",
+        framework: Framework::PyTorch,
+        phase: Phase::Backward,
+        policy: Policy::O0,
+        title: "Fig. 9 — PyTorch backward, AMP O0",
+    },
 ];
 
 /// The paper-scale DeepCAM operator graph, built once per process: the
@@ -123,6 +165,7 @@ pub fn generate(id: &str) -> Result<Artifact> {
             ),
         ]),
         svg: Some(chart.to_svg()),
+        csv: None,
     })
 }
 

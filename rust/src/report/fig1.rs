@@ -82,6 +82,7 @@ pub fn generate() -> Result<Artifact> {
             ),
         ]),
         svg: Some(chart.to_svg()),
+        csv: None,
     })
 }
 

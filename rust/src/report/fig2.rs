@@ -38,6 +38,7 @@ pub fn generate() -> Result<Artifact> {
         ),
         json: Json::obj(vec![("rows", Json::arr(rows))]),
         svg: Some(svg),
+        csv: None,
     })
 }
 

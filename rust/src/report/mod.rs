@@ -27,10 +27,13 @@ pub struct Artifact {
     pub json: crate::util::Json,
     /// SVG chart, when the artifact is a figure.
     pub svg: Option<String>,
+    /// CSV payload (Nsight-style counter rows or summary tables), when
+    /// the artifact carries one — scenario-matrix artifacts do.
+    pub csv: Option<String>,
 }
 
 impl Artifact {
-    /// Write text/json/svg files into `dir`.
+    /// Write text/json[/svg][/csv] files into `dir`.
     pub fn write_to(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join(format!("{}.txt", self.id)), &self.text)?;
@@ -40,6 +43,9 @@ impl Artifact {
         )?;
         if let Some(svg) = &self.svg {
             std::fs::write(dir.join(format!("{}.svg", self.id)), svg)?;
+        }
+        if let Some(csv) = &self.csv {
+            std::fs::write(dir.join(format!("{}.csv", self.id)), csv)?;
         }
         Ok(())
     }

@@ -39,6 +39,7 @@ pub fn generate() -> Result<Artifact> {
         text: format!("Table I — FP16 CUDA-core tuning ladder (V100)\n\n{}", table.render()),
         json: Json::obj(vec![("rows", Json::arr(rows))]),
         svg: None,
+        csv: None,
     })
 }
 

@@ -121,6 +121,7 @@ pub fn generate() -> Result<Artifact> {
             ("pt_total_zero_ai", Json::num(pt_total as f64)),
         ]),
         svg: None,
+        csv: None,
     })
 }
 

@@ -27,6 +27,10 @@ pub struct ChartConfig {
     /// size to make all kernels visible", §IV).
     pub r_min: f64,
     pub r_max: f64,
+    /// Annotate each point's HBM circle with its name — used by the
+    /// scenario-matrix overlay chart, where a point is a whole scenario
+    /// rather than one of hundreds of kernels.
+    pub label_points: bool,
 }
 
 impl ChartConfig {
@@ -37,11 +41,17 @@ impl ChartConfig {
             title: title.to_string(),
             ai_min: 1e-2,
             ai_max: 1e4,
-            perf_min: 1e9,    // 1 GFLOP/s
-            perf_max: 2e14,   // above the TC ceiling
+            perf_min: 1e9,  // 1 GFLOP/s
+            perf_max: 2e14, // above the TC ceiling
             r_min: 4.0,
             r_max: 26.0,
+            label_points: false,
         }
+    }
+
+    /// Overlay style: paper axes plus per-point name labels.
+    pub fn overlay_style(title: &str) -> ChartConfig {
+        ChartConfig { label_points: true, ..ChartConfig::paper_style(title) }
     }
 }
 
@@ -67,6 +77,13 @@ impl<'a> RooflineChart<'a> {
     /// Paper-styled hierarchical chart for a profile-derived model.
     pub fn hierarchical(model: &'a RooflineModel, title: &str) -> RooflineChart<'a> {
         RooflineChart::new(model, ChartConfig::paper_style(title))
+    }
+
+    /// Overlay chart: one labelled triplet per model point (the
+    /// scenario-matrix cross-scenario view — each point aggregates a
+    /// whole scenario).
+    pub fn overlay(model: &'a RooflineModel, title: &str) -> RooflineChart<'a> {
+        RooflineChart::new(model, ChartConfig::overlay_style(title))
     }
 
     // --- coordinate transforms (log-log) ---
@@ -104,9 +121,10 @@ impl<'a> RooflineChart<'a> {
         let c = &self.config;
         let ceilings =
             self.model.ceilings.compute.len() + self.model.ceilings.bandwidth.len();
+        let labels = if self.config.label_points { 128 } else { 0 };
         let mut svg = String::with_capacity(
             8 * 1024
-                + self.model.points.len() * (MemLevel::ALL.len() * 256 + 64)
+                + self.model.points.len() * (MemLevel::ALL.len() * 256 + 64 + labels)
                 + ceilings * 256,
         );
         let _ = write!(
@@ -241,6 +259,19 @@ impl<'a> RooflineChart<'a> {
                     perf = p.flops_per_sec,
                     t = p.seconds,
                     inv = p.invocations,
+                );
+            }
+            if self.config.label_points {
+                // Anchor the label at the rightmost (highest-AI) circle
+                // of the triplet — with any cache reuse the fewest bytes
+                // (hence highest AI) are at HBM.
+                let ai_max = p.ai.iter().map(|&(_, a)| a).fold(0.0, f64::max);
+                let lx = self.x(ai_max) + r + 4.0;
+                let _ = write!(
+                    svg,
+                    r##"<text x="{lx:.1}" y="{ty:.1}" font-size="9" font-family="sans-serif" fill="#333333">{label}</text>"##,
+                    ty = y + 3.0,
+                    label = xml_escape(&truncate(&p.name, 34)),
                 );
             }
         }
@@ -393,6 +424,20 @@ mod tests {
             + model.points.len() * (MemLevel::ALL.len() * 256 + 64)
             + ceilings * 256;
         assert!(svg.len() <= cap, "svg {} > preallocated {}", svg.len(), cap);
+    }
+
+    #[test]
+    fn overlay_chart_labels_every_point() {
+        let (_, model) = example_model();
+        let chart = RooflineChart::overlay(&model, "Overlay");
+        let svg = chart.to_svg();
+        for p in &model.points {
+            // Name appears in both the <title> hover and the visible label.
+            assert!(svg.matches(p.name.as_str()).count() >= 2, "{}", p.name);
+        }
+        // Paper-style charts stay label-free.
+        let plain = RooflineChart::hierarchical(&model, "Plain").to_svg();
+        assert_eq!(plain.matches("font-size=\"9\"").count(), 0);
     }
 
     #[test]

@@ -30,12 +30,19 @@ impl Ceilings {
     /// Build ceilings from a device's achievable (ERT-calibrated) peaks.
     pub fn from_spec(spec: &GpuSpec) -> Ceilings {
         let mut compute = vec![ComputeCeiling {
-            label: format!("Tensor Core: {}", crate::util::fmt::si_flops(spec.achievable_tensor_flops())),
+            label: format!(
+                "Tensor Core: {}",
+                crate::util::fmt::si_flops(spec.achievable_tensor_flops())
+            ),
             flops_per_sec: spec.achievable_tensor_flops(),
         }];
         for p in Precision::ALL {
             compute.push(ComputeCeiling {
-                label: format!("{}: {}", p.name(), crate::util::fmt::si_flops(spec.achievable_flops(p))),
+                label: format!(
+                    "{}: {}",
+                    p.name(),
+                    crate::util::fmt::si_flops(spec.achievable_flops(p))
+                ),
                 flops_per_sec: spec.achievable_flops(p),
             });
         }

@@ -65,7 +65,9 @@ impl ArtifactStore {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {} (run `make artifacts` first)", manifest_path.display()))?;
+            .with_context(|| {
+                format!("reading {} (run `make artifacts` first)", manifest_path.display())
+            })?;
         let doc = Json::parse(&text).context("parsing manifest.json")?;
         let mut entries = BTreeMap::new();
         for (name, entry) in doc.get("modules")?.as_obj()? {
@@ -139,7 +141,8 @@ mod tests {
     }
 
     fn tmpdir(tag: &str) -> PathBuf {
-        let d = std::env::temp_dir().join(format!("hroofline-artifacts-{tag}-{}", std::process::id()));
+        let d =
+            std::env::temp_dir().join(format!("hroofline-artifacts-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&d);
         std::fs::create_dir_all(&d).unwrap();
         d

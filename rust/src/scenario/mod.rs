@@ -1,0 +1,679 @@
+//! Scenario-matrix subsystem: cross the workload registry with
+//! framework personalities, training phases and AMP policies, profile
+//! every cell, and compare the results on one hierarchical Roofline.
+//!
+//! The paper's figures are hand-picked cells of exactly this matrix
+//! (Figs 3–9 are DeepCAM × {TF, PyTorch} × {forward, backward,
+//! optimizer} × {O0, O1, manual-fp16}); this module makes the whole
+//! cross product a first-class sweep:
+//!
+//! * [`ScenarioMatrix`] enumerates a deterministic, duplicate-free
+//!   scenario list (workload-major order);
+//! * [`ScenarioMatrix::run`] builds each workload graph once, lowers
+//!   each (workload, framework, policy) combination once, then fans
+//!   per-scenario profiling through [`crate::exec::parallel_map`] with
+//!   one [`SharedSimCache`] — duplicate kernels *across* scenarios
+//!   simulate once for the whole sweep;
+//! * [`ScenarioResult`] exposes per-scenario hierarchical Roofline
+//!   data for every [`MemLevel`] and renders per-scenario artifacts
+//!   (kernel-table text, summary JSON, paper-style SVG, Nsight-style
+//!   counter CSV);
+//! * [`comparison_artifact`] renders the cross-scenario report: a
+//!   summary table plus one combined Roofline chart overlaying every
+//!   scenario as a labelled aggregate point
+//!   ([`RooflineChart::overlay`]).
+//!
+//! `repro matrix` is the CLI front-end; its `--quick` mode doubles as
+//! the CI smoke for the whole stack.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::cli::CliError;
+use crate::device::{GpuSpec, MemLevel};
+use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
+use crate::dl::workloads::{self, Scale, WorkloadSpec};
+use crate::dl::{Graph, Policy};
+use crate::profiler::{export, Profile, Session, SessionConfig};
+use crate::report::Artifact;
+use crate::roofline::chart::RooflineChart;
+use crate::roofline::model::{Ceilings, KernelPoint, RooflineModel};
+use crate::sim::SharedSimCache;
+use crate::util::table::Align;
+use crate::util::{fmt, Json, Table};
+
+/// One cell of the matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub workload: &'static WorkloadSpec,
+    pub framework: Framework,
+    pub phase: Phase,
+    pub policy: Policy,
+    pub scale: Scale,
+}
+
+impl Scenario {
+    /// Stable id, safe as a file stem: `resnet-pt-forward-O1`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}-{}-{}-{}",
+            self.workload.name,
+            self.framework.short(),
+            self.phase.name(),
+            self.policy.name()
+        )
+    }
+
+    /// Human title for charts and report headers.
+    pub fn title(&self) -> String {
+        format!(
+            "{} · {} {} (AMP {})",
+            self.workload.name,
+            self.framework.name(),
+            self.phase.name(),
+            self.policy.name()
+        )
+    }
+}
+
+/// The sweep specification: the axes to cross.
+#[derive(Debug)]
+pub struct ScenarioMatrix {
+    pub workloads: Vec<&'static WorkloadSpec>,
+    pub frameworks: Vec<Framework>,
+    pub phases: Vec<Phase>,
+    pub policies: Vec<Policy>,
+    pub scale: Scale,
+}
+
+impl ScenarioMatrix {
+    /// The full sweep: every workload × both frameworks × all three
+    /// phases × {O0, O1, O2}, at paper-style scale.
+    pub fn full() -> ScenarioMatrix {
+        ScenarioMatrix {
+            workloads: workloads::registry().iter().collect(),
+            frameworks: Framework::ALL.to_vec(),
+            phases: Phase::ALL.to_vec(),
+            policies: vec![Policy::O0, Policy::O1, Policy::O2],
+            scale: Scale::Full,
+        }
+    }
+
+    /// The CI smoke sweep: every workload at quick scale, forward +
+    /// backward, {O0, O1} — 32 scenarios covering the whole stack.
+    pub fn quick() -> ScenarioMatrix {
+        ScenarioMatrix {
+            workloads: workloads::registry().iter().collect(),
+            frameworks: Framework::ALL.to_vec(),
+            phases: vec![Phase::Forward, Phase::Backward],
+            policies: vec![Policy::O0, Policy::O1],
+            scale: Scale::Quick,
+        }
+    }
+
+    /// Restrict the workload axis to a comma-separated name list
+    /// (`"all"` keeps the registry order); unknown names are a clean
+    /// [`CliError`] with a did-you-mean hint.
+    pub fn with_workloads(mut self, list: &str) -> Result<ScenarioMatrix, CliError> {
+        if list == "all" {
+            return Ok(self);
+        }
+        let mut selected: Vec<&'static WorkloadSpec> = Vec::new();
+        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let w = workloads::lookup(name)?;
+            if !selected.iter().any(|s| s.name == w.name) {
+                selected.push(w);
+            }
+        }
+        if selected.is_empty() {
+            return Err(CliError("--workloads selected nothing (try --help)".into()));
+        }
+        self.workloads = selected;
+        Ok(self)
+    }
+
+    /// Flatten the axes into a scenario list: workload-major, then
+    /// framework, phase, policy. Deterministic (same spec → same order)
+    /// and duplicate-free (repeated axis values collapse).
+    pub fn enumerate(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        let mut seen = BTreeSet::new();
+        for &workload in &self.workloads {
+            for &framework in &self.frameworks {
+                for &phase in &self.phases {
+                    for &policy in &self.policies {
+                        let sc = Scenario { workload, framework, phase, policy, scale: self.scale };
+                        if seen.insert(sc.id()) {
+                            out.push(sc);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The scenario catalog as a text table (golden-tested; timing-free
+    /// so it is stable across cost-model changes).
+    pub fn catalog_table(&self) -> Table {
+        let mut t = Table::new(&["scenario", "workload", "framework", "phase", "amp", "scale"]);
+        for sc in self.enumerate() {
+            t.row(&[
+                sc.id(),
+                sc.workload.name.to_string(),
+                sc.framework.name().to_string(),
+                sc.phase.name().to_string(),
+                sc.policy.name().to_string(),
+                sc.scale.name().to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Run the sweep on one device:
+    ///
+    /// 1. build each workload graph once (parallel across workloads);
+    /// 2. lower each (workload, framework, policy) combination once —
+    ///    the three phases of a combination share one lowering;
+    /// 3. profile every scenario through [`Session::try_profile_shared`]
+    ///    over a single [`SharedSimCache`], fanned out with
+    ///    [`crate::exec::parallel_map`] (results in enumeration order).
+    pub fn run(&self, spec: &GpuSpec) -> MatrixRun {
+        let scenarios = self.enumerate();
+
+        let widx: HashMap<&str, usize> =
+            self.workloads.iter().enumerate().map(|(i, w)| (w.name, i)).collect();
+        let build_workers = crate::exec::default_workers(self.workloads.len());
+        let graphs: Vec<Graph> =
+            crate::exec::parallel_map(self.workloads.clone(), build_workers, |w| {
+                w.build(self.scale)
+            });
+
+        let mut combo_of: HashMap<(usize, Framework, Policy), usize> = HashMap::new();
+        let mut combos: Vec<(usize, Framework, Policy)> = Vec::new();
+        for sc in &scenarios {
+            let key = (widx[sc.workload.name], sc.framework, sc.policy);
+            if !combo_of.contains_key(&key) {
+                combo_of.insert(key, combos.len());
+                combos.push(key);
+            }
+        }
+        let lower_workers = crate::exec::default_workers(combos.len());
+        let traces: Vec<FrameworkTrace> =
+            crate::exec::parallel_map(combos, lower_workers, |(wi, fw, policy)| {
+                lower(&graphs[wi], fw, policy)
+            });
+
+        let cache = SharedSimCache::new();
+        let prof_workers = crate::exec::default_workers(scenarios.len());
+        // Split the worker budget between the two fan-out levels: the
+        // outer scenario map already uses up to `prof_workers` cores,
+        // so each session gets the remaining share (1 when the sweep
+        // alone saturates the machine) instead of spawning its own
+        // machine-sized pools per scenario. Thread count cannot change
+        // the profile (bit-identity is test-asserted by the session).
+        let inner_threads =
+            (crate::exec::default_workers(usize::MAX) / prof_workers.max(1)).max(1);
+        let session_cfg = SessionConfig { threads: Some(inner_threads), ..Default::default() };
+        let session = Session::new(spec, session_cfg);
+        let profiles: Vec<Profile> =
+            crate::exec::parallel_map(scenarios.clone(), prof_workers, |sc| {
+                let key = (widx[sc.workload.name], sc.framework, sc.policy);
+                let trace = traces[combo_of[&key]].phase(sc.phase);
+                session
+                    .try_profile_shared(trace, &cache)
+                    .expect("standard session on a lowered trace cannot fail")
+            });
+
+        let results = scenarios
+            .into_iter()
+            .zip(profiles)
+            .map(|(scenario, profile)| ScenarioResult { scenario, profile })
+            .collect();
+        MatrixRun { results, sim_stats: cache.stats() }
+    }
+}
+
+/// The sweep output: per-scenario results in enumeration order plus
+/// shared-cache statistics.
+pub struct MatrixRun {
+    pub results: Vec<ScenarioResult>,
+    /// (cache hits, distinct simulations) across the whole sweep.
+    pub sim_stats: (u64, u64),
+}
+
+/// One profiled scenario.
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub profile: Profile,
+}
+
+impl ScenarioResult {
+    pub fn id(&self) -> String {
+        self.scenario.id()
+    }
+
+    /// A phase with no kernels (TF folds the optimizer into backward).
+    pub fn is_empty(&self) -> bool {
+        self.profile.n_kernels() == 0
+    }
+
+    /// Aggregate FLOPs across all kernels.
+    pub fn total_flops(&self) -> f64 {
+        self.profile.kernels().map(|k| k.flops()).sum()
+    }
+
+    fn tensor_flops(&self) -> f64 {
+        self.profile.kernels().map(|k| k.tensor_flops()).sum()
+    }
+
+    /// Aggregate sustained performance.
+    pub fn flops_per_sec(&self) -> f64 {
+        let s = self.profile.total_seconds();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.total_flops() / s
+        }
+    }
+
+    /// Aggregate arithmetic intensity at one memory level (total FLOPs
+    /// over total bytes at that level).
+    pub fn ai(&self, level: MemLevel) -> Option<f64> {
+        let bytes: f64 = self.profile.kernels().map(|k| k.counters.bytes(level) as f64).sum();
+        if bytes > 0.0 {
+            Some(self.total_flops() / bytes)
+        } else {
+            None
+        }
+    }
+
+    /// Zero-AI invocation fraction (the Table III quantity).
+    pub fn zero_ai_fraction(&self) -> f64 {
+        let (zero, total) = self.profile.zero_ai_census();
+        if total == 0 {
+            0.0
+        } else {
+            zero as f64 / total as f64
+        }
+    }
+
+    /// Tensor-pipe share of aggregate FLOPs.
+    pub fn tc_fraction(&self) -> f64 {
+        let total = self.total_flops();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.tensor_flops() / total
+        }
+    }
+
+    /// Full per-kernel hierarchical Roofline dataset for this scenario.
+    pub fn roofline_model(&self, spec: &GpuSpec) -> RooflineModel {
+        RooflineModel::from_profile(spec, &self.profile)
+    }
+
+    /// The whole scenario as one chart point (triplet of per-level AI
+    /// at the aggregate performance) — the unit of the overlay chart.
+    pub fn aggregate_point(&self) -> Option<KernelPoint> {
+        let flops = self.total_flops();
+        if self.is_empty() || flops <= 0.0 {
+            return None;
+        }
+        let ai: Vec<(MemLevel, f64)> =
+            MemLevel::ALL.iter().filter_map(|&l| self.ai(l).map(|a| (l, a))).collect();
+        if ai.is_empty() {
+            return None;
+        }
+        Some(KernelPoint {
+            name: self.id(),
+            seconds: self.profile.total_seconds(),
+            flops_per_sec: self.flops_per_sec(),
+            ai,
+            tensor_dominated: self.tensor_flops() > 0.5 * flops,
+            invocations: self.profile.total_invocations(),
+        })
+    }
+
+    /// Per-scenario artifact: kernel-table text, summary JSON,
+    /// paper-style SVG chart, and the Nsight-style counter CSV.
+    pub fn to_artifact(&self, spec: &GpuSpec) -> Artifact {
+        let model = self.roofline_model(spec);
+        let bound_violation = model.validate_bounds().err();
+        let title = self.scenario.title();
+        let chart = RooflineChart::hierarchical(&model, &title);
+        let text = if self.is_empty() {
+            format!(
+                "{title}\n\n(no kernels in this phase — TF folds the optimizer into backward)\n"
+            )
+        } else {
+            format!(
+                "{title}\n\ntotal {} | kernels {} | invocations {} | \
+                 zero-AI {} | tensor-core FLOP share {}\n\n{}",
+                fmt::duration(self.profile.total_seconds()),
+                self.profile.n_kernels(),
+                self.profile.total_invocations(),
+                fmt::pct(self.zero_ai_fraction()),
+                fmt::pct(self.tc_fraction()),
+                chart.to_table().render()
+            )
+        };
+        let ai_json = Json::obj(
+            MemLevel::ALL
+                .iter()
+                .map(|&l| {
+                    (l.name(), self.ai(l).map(Json::num).unwrap_or(Json::Null))
+                })
+                .collect(),
+        );
+        Artifact {
+            id: self.id(),
+            title,
+            text,
+            json: Json::obj(vec![
+                ("workload", Json::str(self.scenario.workload.name)),
+                ("framework", Json::str(self.scenario.framework.name())),
+                ("phase", Json::str(self.scenario.phase.name())),
+                ("amp", Json::str(self.scenario.policy.name())),
+                ("scale", Json::str(self.scenario.scale.name())),
+                ("total_seconds", Json::num(self.profile.total_seconds())),
+                ("n_kernels", Json::num(self.profile.n_kernels() as f64)),
+                ("invocations", Json::num(self.profile.total_invocations() as f64)),
+                ("gflops_per_sec", Json::num(self.flops_per_sec() / 1e9)),
+                ("zero_ai_fraction", Json::num(self.zero_ai_fraction())),
+                ("tc_flop_fraction", Json::num(self.tc_fraction())),
+                ("ai", ai_json),
+                (
+                    "roofline_bound_violation",
+                    bound_violation.map(Json::str).unwrap_or(Json::Null),
+                ),
+            ]),
+            svg: if self.is_empty() { None } else { Some(chart.to_svg()) },
+            csv: if self.is_empty() { None } else { Some(export::to_csv(&self.profile)) },
+        }
+    }
+}
+
+/// The cross-scenario comparison table (one row per scenario, in
+/// enumeration order).
+pub fn comparison_table(results: &[ScenarioResult]) -> Table {
+    let mut t = Table::new(&[
+        "scenario", "time", "GFLOP/s", "AI(L1)", "AI(L2)", "AI(HBM)", "zero-AI", "TC", "kernels",
+        "inv",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in results {
+        if r.is_empty() {
+            t.row(&[
+                r.id(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "0".into(),
+                "0".into(),
+            ]);
+            continue;
+        }
+        let ai_of = |l: MemLevel| {
+            r.ai(l).map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into())
+        };
+        t.row(&[
+            r.id(),
+            fmt::duration(r.profile.total_seconds()),
+            format!("{:.1}", r.flops_per_sec() / 1e9),
+            ai_of(MemLevel::L1),
+            ai_of(MemLevel::L2),
+            ai_of(MemLevel::Hbm),
+            fmt::pct(r.zero_ai_fraction()),
+            fmt::pct(r.tc_fraction()),
+            r.profile.n_kernels().to_string(),
+            r.profile.total_invocations().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Comparison CSV: one summary row per scenario.
+pub fn comparison_csv(results: &[ScenarioResult]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(128 + results.len() * 160);
+    out.push_str(
+        "scenario,workload,framework,phase,amp,seconds,gflops_per_sec,\
+         ai_l1,ai_l2,ai_hbm,zero_ai_fraction,tc_flop_fraction,kernels,invocations\n",
+    );
+    for r in results {
+        let ai = |l: MemLevel| r.ai(l).unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{:.6e},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{},{}",
+            r.id(),
+            r.scenario.workload.name,
+            r.scenario.framework.name(),
+            r.scenario.phase.name(),
+            r.scenario.policy.name(),
+            r.profile.total_seconds(),
+            r.flops_per_sec() / 1e9,
+            ai(MemLevel::L1),
+            ai(MemLevel::L2),
+            ai(MemLevel::Hbm),
+            r.zero_ai_fraction(),
+            r.tc_fraction(),
+            r.profile.n_kernels(),
+            r.profile.total_invocations(),
+        );
+    }
+    out
+}
+
+/// The cross-scenario report: comparison table + combined overlay
+/// Roofline chart (every scenario as one labelled aggregate triplet)
+/// + machine-readable JSON/CSV.
+pub fn comparison_artifact(spec: &GpuSpec, run: &MatrixRun) -> Artifact {
+    let table = comparison_table(&run.results);
+    let mut points: Vec<KernelPoint> =
+        run.results.iter().filter_map(ScenarioResult::aggregate_point).collect();
+    points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
+    let model = RooflineModel {
+        ceilings: Ceilings::from_spec(spec),
+        points,
+        device_name: spec.name.clone(),
+    };
+    let chart =
+        RooflineChart::overlay(&model, "Scenario matrix — aggregate hierarchical Roofline");
+    let (hits, sims) = run.sim_stats;
+    let non_empty = run.results.iter().filter(|r| !r.is_empty()).count();
+    let text = format!(
+        "scenario matrix: {} scenarios ({} with kernels) | \
+         shared-cache simulations {} (cache hits {})\n\n{}",
+        run.results.len(),
+        non_empty,
+        sims,
+        hits,
+        table.render()
+    );
+    let json = Json::obj(vec![
+        ("n_scenarios", Json::num(run.results.len() as f64)),
+        ("n_non_empty", Json::num(non_empty as f64)),
+        ("shared_sim_count", Json::num(sims as f64)),
+        ("shared_sim_hits", Json::num(hits as f64)),
+        (
+            "scenarios",
+            Json::arr(run.results.iter().map(|r| {
+                Json::obj(vec![
+                    ("scenario", Json::str(r.id())),
+                    ("total_seconds", Json::num(r.profile.total_seconds())),
+                    ("gflops_per_sec", Json::num(r.flops_per_sec() / 1e9)),
+                    ("zero_ai_fraction", Json::num(r.zero_ai_fraction())),
+                    ("tc_flop_fraction", Json::num(r.tc_fraction())),
+                    ("n_kernels", Json::num(r.profile.n_kernels() as f64)),
+                ])
+            })),
+        ),
+    ]);
+    Artifact {
+        id: "matrix".into(),
+        title: "Cross-scenario comparison (hierarchical Roofline overlay)".into(),
+        text,
+        json,
+        svg: Some(chart.to_svg()),
+        csv: Some(comparison_csv(&run.results)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_matrix() -> ScenarioMatrix {
+        ScenarioMatrix {
+            workloads: vec![workloads::lookup("deepcam-lite").unwrap()],
+            frameworks: vec![Framework::PyTorch],
+            phases: vec![Phase::Forward, Phase::Optimizer],
+            policies: vec![Policy::O1],
+            scale: Scale::Quick,
+        }
+    }
+
+    #[test]
+    fn quick_matrix_enumerates_32_scenarios() {
+        let scenarios = ScenarioMatrix::quick().enumerate();
+        assert_eq!(scenarios.len(), 4 * 2 * 2 * 2);
+        // Deterministic and duplicate-free.
+        let ids: Vec<String> = scenarios.iter().map(Scenario::id).collect();
+        let again: Vec<String> =
+            ScenarioMatrix::quick().enumerate().iter().map(Scenario::id).collect();
+        assert_eq!(ids, again);
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len());
+    }
+
+    #[test]
+    fn full_matrix_covers_all_phases_and_policies() {
+        let scenarios = ScenarioMatrix::full().enumerate();
+        assert_eq!(scenarios.len(), 4 * 2 * 3 * 3);
+    }
+
+    #[test]
+    fn duplicate_axis_values_collapse() {
+        let mut m = tiny_matrix();
+        m.policies = vec![Policy::O1, Policy::O1];
+        m.frameworks = vec![Framework::PyTorch, Framework::PyTorch];
+        assert_eq!(m.enumerate().len(), 2, "phases only");
+    }
+
+    #[test]
+    fn with_workloads_filters_and_rejects_unknown() {
+        let m = ScenarioMatrix::quick().with_workloads("resnet, transformer").unwrap();
+        assert_eq!(m.workloads.len(), 2);
+        assert_eq!(m.workloads[0].name, "resnet");
+        let err = ScenarioMatrix::quick().with_workloads("resnet,bogus").unwrap_err();
+        assert!(err.0.contains("unknown workload 'bogus'"), "{}", err.0);
+        assert!(ScenarioMatrix::quick().with_workloads(" , ").is_err());
+    }
+
+    #[test]
+    fn matrix_profiles_identical_to_standalone_sessions() {
+        // The shared cache + fan-out must not change a single bit
+        // relative to profiling each scenario alone.
+        let spec = GpuSpec::v100();
+        let run = tiny_matrix().run(&spec);
+        assert_eq!(run.results.len(), 2);
+        for r in &run.results {
+            let g = r.scenario.workload.build(r.scenario.scale);
+            let t = lower(&g, r.scenario.framework, r.scenario.policy);
+            let direct = Session::standard(&spec).profile(t.phase(r.scenario.phase));
+            assert_eq!(r.profile, direct, "{}", r.id());
+        }
+    }
+
+    #[test]
+    fn shared_cache_dedupes_across_scenarios() {
+        // O0 vs O1 backward share many descriptors; two-policy sweep
+        // must hit the cache.
+        let spec = GpuSpec::v100();
+        let mut m = tiny_matrix();
+        m.phases = vec![Phase::Forward, Phase::Backward];
+        m.policies = vec![Policy::O0, Policy::O1];
+        let run = m.run(&spec);
+        let (hits, sims) = run.sim_stats;
+        assert!(sims > 0);
+        assert!(hits > 0, "expected cross-scenario kernel reuse, got {hits} hits / {sims} sims");
+    }
+
+    #[test]
+    fn aggregate_points_and_artifacts() {
+        let spec = GpuSpec::v100();
+        let run = tiny_matrix().run(&spec);
+        for r in &run.results {
+            assert!(!r.is_empty(), "{}", r.id());
+            let p = r.aggregate_point().unwrap();
+            assert!(p.flops_per_sec > 0.0);
+            assert_eq!(p.ai.len(), MemLevel::ALL.len());
+            let a = r.to_artifact(&spec);
+            assert_eq!(a.id, r.id());
+            assert!(a.svg.is_some() && a.csv.is_some());
+            assert!(a.text.contains("kernels"));
+            // Per-scenario JSON carries the per-level AI block.
+            assert!(a.json.get("ai").unwrap().opt("HBM").is_some());
+        }
+    }
+
+    #[test]
+    fn comparison_artifact_overlays_all_scenarios() {
+        let spec = GpuSpec::v100();
+        let run = tiny_matrix().run(&spec);
+        let a = comparison_artifact(&spec, &run);
+        assert_eq!(a.id, "matrix");
+        let svg = a.svg.as_ref().unwrap();
+        let csv = a.csv.as_ref().unwrap();
+        for r in &run.results {
+            assert!(a.text.contains(&r.id()), "table row for {}", r.id());
+            assert!(svg.contains(&r.id()), "chart label for {}", r.id());
+            assert!(csv.contains(&r.id()), "csv row for {}", r.id());
+        }
+        assert_eq!(
+            a.json.get("n_scenarios").unwrap().as_f64().unwrap() as usize,
+            run.results.len()
+        );
+    }
+
+    #[test]
+    fn empty_phase_scenarios_render_without_artifacts_payload() {
+        // TF optimizer phase is empty by construction.
+        let spec = GpuSpec::v100();
+        let m = ScenarioMatrix {
+            workloads: vec![workloads::lookup("deepcam-lite").unwrap()],
+            frameworks: vec![Framework::TensorFlow],
+            phases: vec![Phase::Optimizer],
+            policies: vec![Policy::O1],
+            scale: Scale::Quick,
+        };
+        let run = m.run(&spec);
+        assert_eq!(run.results.len(), 1);
+        let r = &run.results[0];
+        assert!(r.is_empty());
+        assert!(r.aggregate_point().is_none());
+        let a = r.to_artifact(&spec);
+        assert!(a.svg.is_none() && a.csv.is_none());
+        assert!(a.text.contains("no kernels"));
+        // The comparison table still carries the row.
+        let table = comparison_table(&run.results);
+        assert_eq!(table.n_rows(), 1);
+    }
+}

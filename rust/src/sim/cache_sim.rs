@@ -300,7 +300,14 @@ mod tests {
         let mut without = v100_scaled(64);
         // unique B per tile: emulate by bumping b_base per tile
         for t in 0..8u64 {
-            run_tiled_stream(&mut without, t * (1 << 20), (1 << 24) + t * (1 << 20), 8 * 1024, 1, 4);
+            run_tiled_stream(
+                &mut without,
+                t * (1 << 20),
+                (1 << 24) + t * (1 << 20),
+                8 * 1024,
+                1,
+                4,
+            );
         }
         assert!(with_reuse.mem_bytes < without.mem_bytes,
             "reuse {} vs none {}", with_reuse.mem_bytes, without.mem_bytes);

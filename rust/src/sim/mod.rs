@@ -31,6 +31,8 @@ pub use cycles::CycleModel;
 pub use kernel::{AccessPattern, InstMix, KernelDesc, KernelInvocation};
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::device::GpuSpec;
 
@@ -80,6 +82,62 @@ impl<'a> SimCache<'a> {
     }
 }
 
+/// Thread-safe memoizer shared *across* profiling sessions: the
+/// scenario matrix fans many scenarios through `exec::parallel_map`,
+/// and different scenarios of the same workload largely replay the
+/// same kernel descriptors — with a shared cache each distinct
+/// descriptor is simulated once for the whole sweep, not once per
+/// scenario.
+///
+/// Unlike [`SimCache`], the spec is passed per call (the cache is
+/// created before workers exist); callers must use one device spec per
+/// cache — entries are keyed by descriptor only. Lookups clone the
+/// cached [`CounterSet`] out of the lock; simulation of a miss runs
+/// *outside* the lock so concurrent distinct misses don't serialize
+/// (two racing identical misses both simulate, last insert wins —
+/// harmless, simulation is pure).
+#[derive(Default)]
+pub struct SharedSimCache {
+    cache: Mutex<HashMap<KernelDesc, CounterSet>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SharedSimCache {
+    pub fn new() -> SharedSimCache {
+        SharedSimCache::default()
+    }
+
+    /// Simulate `k` on `spec`, reusing the cached result for
+    /// descriptors already seen by *any* thread.
+    pub fn get_or_simulate(&self, spec: &GpuSpec, k: &KernelDesc) -> CounterSet {
+        if let Some(c) = self.cache.lock().unwrap().get(k) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return c.clone();
+        }
+        let counters = simulate(spec, k);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.cache.lock().unwrap();
+        guard.entry(k.clone()).or_insert_with(|| counters.clone());
+        counters
+    }
+
+    /// Number of distinct kernels simulated so far.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (cache hits, simulations) observed so far — the sweep-level
+    /// dedup ratio.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +154,28 @@ mod tests {
             assert_eq!(cache.simulate(k), &simulate(&spec, k));
         }
         assert_eq!(cache.len(), 2, "2 distinct kernels => 2 simulations");
+    }
+
+    #[test]
+    fn shared_cache_matches_direct_simulation_across_threads() {
+        let spec = GpuSpec::v100();
+        let kernels: Vec<KernelDesc> = (0..8u64)
+            .map(|i| {
+                let name = format!("k{}", i % 4);
+                KernelDesc::streaming_elementwise(&name, 1u64 << (12 + i % 4), Precision::Fp32, 1)
+            })
+            .collect();
+        let cache = SharedSimCache::new();
+        let out =
+            crate::exec::parallel_map(kernels.clone(), 4, |k| cache.get_or_simulate(&spec, &k));
+        for (k, c) in kernels.iter().zip(&out) {
+            assert_eq!(c, &simulate(&spec, k));
+        }
+        // 4 distinct descriptors (name and size both cycle mod 4).
+        assert_eq!(cache.len(), 4);
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits + misses, 8, "every lookup counted");
+        assert!(misses >= 4, "at least one simulation per distinct kernel");
     }
 
     #[test]

@@ -16,10 +16,7 @@ use hroofline::sim::kernel::{KernelDesc, KernelInvocation};
 fn legacy_config() -> SessionConfig {
     // The pre-optimization behaviour: one simulation per trace entry,
     // strictly serial.
-    let mut cfg = SessionConfig::default();
-    cfg.memoize = false;
-    cfg.threads = Some(1);
-    cfg
+    SessionConfig { memoize: false, threads: Some(1), ..Default::default() }
 }
 
 #[test]
@@ -41,9 +38,7 @@ fn full_step_profile_bit_identical_across_optimizations() {
     assert_eq!(to_csv(&standard), reference_csv, "serialized output");
 
     for (memoize, threads) in [(true, 1), (true, 8), (false, 8)] {
-        let mut cfg = SessionConfig::default();
-        cfg.memoize = memoize;
-        cfg.threads = Some(threads);
+        let cfg = SessionConfig { memoize, threads: Some(threads), ..Default::default() };
         let p = Session::new(&spec, cfg).profile(&all);
         assert_eq!(p, reference, "memoize={memoize} threads={threads}");
         assert_eq!(to_csv(&p), reference_csv, "memoize={memoize} threads={threads}");
@@ -86,8 +81,7 @@ fn random_traces_profile_identically_memoized_and_parallel() {
         let reference = Session::new(&spec, legacy_config()).profile(&trace);
         let standard = Session::standard(&spec).profile(&trace);
         assert_eq!(standard, reference);
-        let mut par = SessionConfig::default();
-        par.threads = Some(3);
+        let par = SessionConfig { threads: Some(3), ..Default::default() };
         let parallel = Session::new(&spec, par).profile(&trace);
         assert_eq!(parallel, reference);
         assert_eq!(to_csv(&parallel), to_csv(&reference));
@@ -107,9 +101,8 @@ fn one_metric_per_run_still_bit_identical_under_optimizations() {
     legacy.one_metric_per_run = true;
     let reference = Session::new(&spec, legacy).profile(&all);
 
-    let mut fast = SessionConfig::default();
-    fast.one_metric_per_run = true;
-    fast.threads = Some(4);
+    let fast =
+        SessionConfig { one_metric_per_run: true, threads: Some(4), ..Default::default() };
     let optimized = Session::new(&spec, fast).profile(&all);
     assert_eq!(optimized, reference);
     assert_eq!(to_csv(&optimized), to_csv(&reference));

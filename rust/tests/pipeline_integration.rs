@@ -123,8 +123,10 @@ fn profiler_overhead_scales_with_metric_passes() {
     let kernels = trace.phase(Phase::Forward);
 
     let packed = Session::standard(&spec).profile(kernels);
-    let mut cfg = hroofline::profiler::SessionConfig::default();
-    cfg.one_metric_per_run = true;
+    let cfg = hroofline::profiler::SessionConfig {
+        one_metric_per_run: true,
+        ..Default::default()
+    };
     let separate = Session::new(&spec, cfg).try_profile(kernels).unwrap();
     assert!(separate.profiling_overhead_s > 2.0 * packed.profiling_overhead_s);
     // Same derived results either way (determinism requirement, §II-B).

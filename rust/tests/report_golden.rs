@@ -47,5 +47,5 @@ fn headline_shape_summary() {
     let share5 = f5.get("top_kernel_time_share").unwrap().as_f64().unwrap();
     assert!(share3 > share5, "TF fwd more dominant than PT fwd");
     let top6 = &f6.get("kernels").unwrap().as_arr().unwrap()[0];
-    assert_eq!(top6.get("tensor").unwrap().as_bool().unwrap(), false);
+    assert!(!top6.get("tensor").unwrap().as_bool().unwrap());
 }

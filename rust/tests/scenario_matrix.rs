@@ -1,0 +1,138 @@
+//! Scenario-matrix integration: the quick-mode sweep (the CI gate)
+//! end to end — deterministic enumeration, golden catalog, artifact
+//! layout, and cross-run reproducibility.
+
+use hroofline::device::GpuSpec;
+use hroofline::dl::workloads;
+use hroofline::scenario::{comparison_csv, comparison_table, Scenario, ScenarioMatrix};
+
+/// The quick-mode catalog, pinned: workload-major, then framework,
+/// phase, policy. A change here is an intentional matrix redefinition
+/// and must update the CI artifact assertions too.
+const QUICK_IDS: [&str; 32] = [
+    "deepcam-paper-tf-forward-O0",
+    "deepcam-paper-tf-forward-O1",
+    "deepcam-paper-tf-backward-O0",
+    "deepcam-paper-tf-backward-O1",
+    "deepcam-paper-pt-forward-O0",
+    "deepcam-paper-pt-forward-O1",
+    "deepcam-paper-pt-backward-O0",
+    "deepcam-paper-pt-backward-O1",
+    "deepcam-lite-tf-forward-O0",
+    "deepcam-lite-tf-forward-O1",
+    "deepcam-lite-tf-backward-O0",
+    "deepcam-lite-tf-backward-O1",
+    "deepcam-lite-pt-forward-O0",
+    "deepcam-lite-pt-forward-O1",
+    "deepcam-lite-pt-backward-O0",
+    "deepcam-lite-pt-backward-O1",
+    "resnet-tf-forward-O0",
+    "resnet-tf-forward-O1",
+    "resnet-tf-backward-O0",
+    "resnet-tf-backward-O1",
+    "resnet-pt-forward-O0",
+    "resnet-pt-forward-O1",
+    "resnet-pt-backward-O0",
+    "resnet-pt-backward-O1",
+    "transformer-tf-forward-O0",
+    "transformer-tf-forward-O1",
+    "transformer-tf-backward-O0",
+    "transformer-tf-backward-O1",
+    "transformer-pt-forward-O0",
+    "transformer-pt-forward-O1",
+    "transformer-pt-backward-O0",
+    "transformer-pt-backward-O1",
+];
+
+#[test]
+fn quick_catalog_is_golden() {
+    let ids: Vec<String> = ScenarioMatrix::quick().enumerate().iter().map(Scenario::id).collect();
+    assert_eq!(ids, QUICK_IDS.to_vec());
+    // The catalog table carries exactly one row per scenario and the
+    // pinned header.
+    let catalog = ScenarioMatrix::quick().catalog_table();
+    assert_eq!(catalog.n_rows(), QUICK_IDS.len());
+    let rendered = catalog.render();
+    for col in ["scenario", "workload", "framework", "phase", "amp", "scale"] {
+        assert!(rendered.contains(col), "missing column '{col}'");
+    }
+}
+
+#[test]
+fn quick_sweep_meets_the_acceptance_floor() {
+    // ≥ 16 scenarios from ≥ 4 workloads × 2 frameworks × ≥ 2
+    // phase/policy combos.
+    let m = ScenarioMatrix::quick();
+    assert!(m.workloads.len() >= 4);
+    assert_eq!(m.frameworks.len(), 2);
+    assert!(m.phases.len() * m.policies.len() >= 2);
+    assert!(m.enumerate().len() >= 16);
+    assert_eq!(workloads::registry().len(), m.workloads.len());
+}
+
+#[test]
+fn quick_sweep_runs_and_compares_all_scenarios() {
+    let spec = GpuSpec::v100();
+    let run = ScenarioMatrix::quick().run(&spec);
+    assert_eq!(run.results.len(), QUICK_IDS.len());
+
+    // Results arrive in enumeration order, every scenario non-empty
+    // (quick mode has no TF-optimizer cells), and every scenario
+    // carries hierarchical Roofline data at all three levels.
+    for (r, want) in run.results.iter().zip(QUICK_IDS) {
+        assert_eq!(r.id(), want);
+        assert!(!r.is_empty(), "{want}");
+        let point = r.aggregate_point().unwrap_or_else(|| panic!("{want}: no point"));
+        assert_eq!(point.ai.len(), 3, "{want}: L1/L2/HBM triplet");
+        assert!(point.flops_per_sec > 0.0, "{want}");
+    }
+
+    // The shared cache deduped across scenarios.
+    let (hits, sims) = run.sim_stats;
+    assert!(sims > 0);
+    assert!(hits > 0, "no cross-scenario kernel reuse ({hits} hits / {sims} sims)");
+
+    // Cross-scenario comparison covers every row; the golden table is
+    // structurally pinned (one row per scenario, stable id column).
+    let table = comparison_table(&run.results);
+    assert_eq!(table.n_rows(), run.results.len());
+    let text = table.render();
+    for id in QUICK_IDS {
+        assert!(text.contains(id), "missing comparison row {id}");
+    }
+
+    // Framework contrast survives aggregation: the PyTorch forward
+    // trace carries more distinct kernels than the TF one (Fig. 3 vs
+    // Fig. 5 shape) for the conv workloads.
+    let kernels_of = |id: &str| {
+        run.results.iter().find(|r| r.id() == id).unwrap().profile.n_kernels()
+    };
+    assert!(
+        kernels_of("deepcam-paper-pt-forward-O1") > kernels_of("deepcam-paper-tf-forward-O1")
+    );
+}
+
+#[test]
+fn sweep_is_reproducible_byte_for_byte() {
+    // Same matrix, two runs (each internally parallel): identical
+    // comparison CSV. This is the cross-run determinism the golden CI
+    // artifact diffing relies on.
+    let spec = GpuSpec::v100();
+    let m1 = ScenarioMatrix::quick().with_workloads("resnet,transformer").unwrap();
+    let m2 = ScenarioMatrix::quick().with_workloads("resnet,transformer").unwrap();
+    let a = comparison_csv(&m1.run(&spec).results);
+    let b = comparison_csv(&m2.run(&spec).results);
+    assert_eq!(a, b);
+    assert!(a.lines().count() == 1 + 16, "header + 16 rows: {}", a.lines().count());
+}
+
+#[test]
+fn full_matrix_enumeration_is_superset_of_quick() {
+    let full: Vec<String> = ScenarioMatrix::full().enumerate().iter().map(Scenario::id).collect();
+    assert_eq!(full.len(), 72);
+    // Quick uses quick scale, so ids coincide but builds differ; the id
+    // space of quick is contained in full's.
+    for id in QUICK_IDS {
+        assert!(full.contains(&id.to_string()), "{id} missing from full matrix");
+    }
+}
