@@ -28,7 +28,7 @@ use hroofline::sim::{self, cache_sim, KernelDesc, SimCache};
 fn main() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
-    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
     let all = trace.all();
     let n_inv: u64 = all.iter().map(|i| i.invocations).sum();
 
@@ -47,7 +47,8 @@ fn main() {
     {
         let graph = graph.clone();
         b.case("lower_pytorch_paper", move || {
-            let t = lower(&graph, Framework::PyTorch, Policy::O1);
+            let spec = GpuSpec::v100();
+            let t = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
             black_box(t.all().len() as u64)
         });
     }
@@ -94,14 +95,33 @@ fn main() {
     // the scenario-matrix sweep in CI smoke configuration (restricted
     // workload set): graph builds + lowerings + shared-cache profiling
     b.case("matrix_quick_sweep", || {
-        let spec = GpuSpec::v100();
         let matrix = hroofline::scenario::ScenarioMatrix::quick()
             .with_workloads("deepcam-lite,transformer")
             .expect("registered workloads");
-        let run = matrix.run(&spec);
+        let run = matrix.run();
         black_box(run.sim_stats.1);
         run.results.len() as u64
     });
+
+    // one DeepCAM training step per registered device (quick scale so
+    // the bench stays CI-sized): BENCH_hotpath.json tracks the
+    // simulator's per-device cost as the registry grows
+    {
+        let quick_graph = hroofline::dl::workloads::lookup("deepcam-paper")
+            .expect("registered workload")
+            .build(hroofline::dl::Scale::Quick);
+        for entry in hroofline::device::registry::entries() {
+            let graph = quick_graph.clone();
+            b.case(&format!("profile_step_quick_{}", entry.short), move || {
+                let spec = entry.spec();
+                let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
+                let all = trace.all();
+                let p = Session::standard(&spec).profile(&all);
+                black_box(p.n_kernels() as u64);
+                all.iter().map(|i| i.invocations).sum()
+            });
+        }
+    }
 
     // roofline + SVG emission
     {

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         ]);
         let mut t_o0 = None;
         for policy in [Policy::O0, Policy::O1, Policy::O2, Policy::ManualFp16] {
-            let trace = lower(&graph, fw, policy);
+            let trace = lower(&graph, fw, policy, &spec);
             let profile = Session::standard(&spec).profile(trace.phase(Phase::Backward));
             let total = profile.total_seconds();
             if policy == Policy::O0 {
@@ -59,11 +59,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     // The Fig. 8 equivalence, quantified.
+    let amp_trace = lower(&graph, Framework::TensorFlow, Policy::O1, &spec);
     let tf_amp = Session::standard(&spec)
-        .profile(lower(&graph, Framework::TensorFlow, Policy::O1).phase(Phase::Backward))
+        .profile(amp_trace.phase(Phase::Backward))
         .total_seconds();
+    let manual_trace = lower(&graph, Framework::TensorFlow, Policy::ManualFp16, &spec);
     let tf_manual = Session::standard(&spec)
-        .profile(lower(&graph, Framework::TensorFlow, Policy::ManualFp16).phase(Phase::Backward))
+        .profile(manual_trace.phase(Phase::Backward))
         .total_seconds();
     println!(
         "Fig. 8 check: TF manual-FP16 backward {} vs AMP backward {} ({:+.2}%)",

@@ -110,7 +110,7 @@ fn main() -> anyhow::Result<()> {
         (Framework::PyTorch, Phase::Backward, "pt_backward"),
         (Framework::PyTorch, Phase::Optimizer, "pt_optimizer"),
     ] {
-        let trace = lower(&graph, fw, Policy::O1);
+        let trace = lower(&graph, fw, Policy::O1, &spec);
         let profile = Session::standard(&spec).profile(trace.phase(phase));
         let model = RooflineModel::from_profile(&spec, &profile);
         model.validate_bounds().expect("roofline bounds");

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["framework", "phase", "zero-AI", "total", "fraction"]);
     let mut summaries = Vec::new();
     for fw in [Framework::TensorFlow, Framework::PyTorch] {
-        let trace = lower(&graph, fw, Policy::O1);
+        let trace = lower(&graph, fw, Policy::O1, &spec);
         for (phase, label) in [
             (Phase::Forward, "forward"),
             (Phase::Backward, "backward"),

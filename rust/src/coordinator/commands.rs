@@ -4,16 +4,24 @@ use std::path::Path;
 
 use crate::cli::Parsed;
 use crate::util::error::{self as anyhow, Context, Result};
+use crate::device::registry as devices;
 use crate::device::{GpuSpec, MemLevel};
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, Phase};
 use crate::dl::Policy;
 use crate::ert::sweep::SweepConfig;
 use crate::ert::{empirical, modeled};
-use crate::profiler::{MetricRegistry, Session};
+use crate::profiler::{export, MetricRegistry, Session};
+use crate::report::Artifact;
 use crate::roofline::chart::RooflineChart;
 use crate::roofline::model::RooflineModel;
 use crate::util::{fmt, Json, Table};
+
+/// Resolve the `--device` flag through the registry (clean [`CliError`]
+/// with a did-you-mean hint on unknown names).
+fn resolve_device(p: &Parsed) -> Result<GpuSpec> {
+    devices::DeviceRegistry::get(p.get("device")).map_err(Into::into)
+}
 
 /// `repro ert` — machine characterization.
 pub fn cmd_ert(p: &Parsed) -> Result<()> {
@@ -25,9 +33,12 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
         SweepConfig::standard()
     };
     let mode = p.get("mode");
+    // Validate --device up front so a typo fails with the registry's
+    // did-you-mean even in empirical mode (which characterizes the host
+    // CPU and does not use the GPU spec).
+    let spec = resolve_device(p)?;
 
     if mode == "modeled" || mode == "both" {
-        let spec = GpuSpec::v100();
         // The modeled sweep fans its working-set × intensity grid across
         // the machine's cores via `exec::parallel_map` (see
         // `ert::modeled::run_sweep_threads`); output is identical to the
@@ -40,8 +51,8 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
         for (level, gb) in &ceilings.bandwidth_gbs {
             t.row(&[format!("{} bandwidth", level.name()), fmt::si(gb * 1e9, "B/s")]);
         }
-        println!("== modeled V100 (Fig. 1) ==\n{}", t.render());
-        let artifact = crate::report::fig1::generate()?;
+        println!("== modeled {} (Fig. 1) ==\n{}", spec.name, t.render());
+        let artifact = crate::report::fig1::generate_for(&spec)?;
         artifact.write_to(Path::new(&out_dir))?;
         println!("wrote {out_dir}/fig1.{{txt,json,svg}}");
     }
@@ -112,9 +123,9 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     let out_dir = p.get("out").to_string();
     std::fs::create_dir_all(&out_dir)?;
 
-    let spec = GpuSpec::v100();
+    let spec = resolve_device(p)?;
     let graph = deepcam(&cfg);
-    let trace = lower(&graph, fw, policy);
+    let trace = lower(&graph, fw, policy, &spec);
     let phases: Vec<(Phase, &str)> = match p.get("phase") {
         "forward" => vec![(Phase::Forward, "forward")],
         "backward" => vec![(Phase::Backward, "backward")],
@@ -131,8 +142,9 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     // independent, deterministic simulation pass; within each phase the
     // session additionally dedupes kernel descriptors and fans the
     // trace out — see `Session::try_profile`). Rendering is captured
-    // into strings inside the workers and printed in input order below,
-    // so stdout and the written SVGs are byte-identical to a serial run.
+    // into Artifacts inside the workers and written in input order
+    // below, so stdout and the written files are byte-identical to a
+    // serial run.
     let session = Session::standard(&spec);
     let workers = crate::exec::default_workers(phases.len());
     let rendered = crate::exec::parallel_map(phases, workers, |(phase, label)| {
@@ -142,9 +154,10 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
         }
         let profile = session.profile(kernel_trace);
         let model = RooflineModel::from_profile(&spec, &profile);
-        let title = format!("{} DeepCAM {label} ({})", fw.name(), policy.name());
+        let title =
+            format!("{} DeepCAM {label} ({}) on {}", fw.name(), policy.name(), spec.name);
         let chart = RooflineChart::hierarchical(&model, &title);
-        let report = format!(
+        let text = format!(
             "== {title} ==\ntotal {} | kernels {} | invocations {} | profiler overhead {}\n{}",
             fmt::duration(profile.total_seconds()),
             profile.n_kernels(),
@@ -152,17 +165,33 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
             fmt::duration(profile.profiling_overhead_s),
             chart.to_table().render()
         );
-        (label, Some((report, chart.to_svg())))
+        let artifact = Artifact {
+            id: format!("{}_{label}", fw.name()),
+            title: title.clone(),
+            json: Json::obj(vec![
+                ("device", Json::str(&spec.name)),
+                ("framework", Json::str(fw.name())),
+                ("phase", Json::str(label)),
+                ("amp", Json::str(policy.name())),
+                ("total_seconds", Json::num(profile.total_seconds())),
+                ("n_kernels", Json::num(profile.n_kernels() as f64)),
+                ("invocations", Json::num(profile.total_invocations() as f64)),
+                ("profiling_overhead_s", Json::num(profile.profiling_overhead_s)),
+            ]),
+            svg: Some(chart.to_svg()),
+            csv: Some(export::to_csv(&profile)),
+            text,
+        };
+        (label, Some(artifact))
     });
     for (label, result) in rendered {
-        let Some((report, svg)) = result else {
+        let Some(artifact) = result else {
             println!("[{label}] no kernels (TF folds the optimizer into backward)");
             continue;
         };
-        println!("{report}");
-        let svg_path = Path::new(&out_dir).join(format!("{}_{label}.svg", fw.name()));
-        std::fs::write(&svg_path, svg)?;
-        println!("wrote {}", svg_path.display());
+        println!("{}", artifact.text);
+        artifact.write_to(Path::new(&out_dir))?;
+        println!("wrote {out_dir}/{}.{{txt,json,svg,csv}}", artifact.id);
     }
     Ok(())
 }
@@ -177,21 +206,45 @@ pub fn cmd_matrix(p: &Parsed) -> Result<()> {
     } else {
         crate::scenario::ScenarioMatrix::full()
     };
-    let matrix = matrix.with_workloads(p.get("workloads"))?;
+    let mut matrix = matrix.with_workloads(p.get("workloads"))?;
+    // Device axis: `default` keeps the mode's own axis (quick = the
+    // registry default V100 so the CI gate's cost stays flat; full =
+    // every registered device); an explicit name/alias list (or `all`)
+    // overrides it, with registry did-you-mean on typos.
+    let device_flag = p.get("device");
+    if device_flag != "default" {
+        matrix = matrix.with_devices(device_flag)?;
+    }
     let out_dir = p.get("out").to_string();
     let scenario_dir = Path::new(&out_dir).join("scenarios");
     std::fs::create_dir_all(&scenario_dir)?;
 
-    let spec = GpuSpec::v100();
-    let run = matrix.run(&spec);
+    let run = matrix.run();
 
     let mut written = 0usize;
     for result in &run.results {
-        result.to_artifact(&spec).write_to(&scenario_dir)?;
+        result.to_artifact().write_to(&scenario_dir)?;
         written += 1;
     }
-    let comparison = crate::scenario::comparison_artifact(&spec, &run);
+    let comparison = crate::scenario::comparison_artifact(&run);
     comparison.write_to(Path::new(&out_dir))?;
+    // Multi-device sweeps additionally get one overlay per device
+    // (each against its own full ceiling set).
+    let run_devices = run.device_entries();
+    if run_devices.len() > 1 {
+        for entry in &run_devices {
+            crate::scenario::device_comparison_artifact(&run, entry)
+                .write_to(Path::new(&out_dir))?;
+        }
+        println!(
+            "wrote per-device overlays: {}",
+            run_devices
+                .iter()
+                .map(|d| format!("matrix@{}", d.short))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
 
     println!("== {} ==\n{}", comparison.title, comparison.text);
     println!(
@@ -322,38 +375,71 @@ mod tests {
         cmd_metrics(&parsed(cmd, &[])).unwrap();
     }
 
-    #[test]
-    fn profile_command_lite_scale() {
-        let dir = std::env::temp_dir().join(format!("hroofline-profcmd-{}", std::process::id()));
-        let cmd = Cmd::new("profile", "t")
+    fn profile_cmd(out: &str) -> Cmd {
+        Cmd::new("profile", "t")
             .flag("framework", "pytorch", "h")
             .flag("phase", "forward", "h")
             .flag("amp", "O1", "h")
             .flag("scale", "lite", "h")
-            .flag("out", dir.to_str().unwrap(), "h");
-        cmd_profile(&parsed(cmd, &[])).unwrap();
-        assert!(dir.join("pytorch_forward.svg").exists());
+            .flag("device", "v100-sxm2-16gb", "h")
+            .flag("out", out, "h")
+    }
+
+    #[test]
+    fn profile_command_lite_scale() {
+        let dir = std::env::temp_dir().join(format!("hroofline-profcmd-{}", std::process::id()));
+        cmd_profile(&parsed(profile_cmd(dir.to_str().unwrap()), &[])).unwrap();
+        for ext in ["txt", "json", "svg", "csv"] {
+            assert!(dir.join(format!("pytorch_forward.{ext}")).exists(), "{ext}");
+        }
+        // The default device is stamped into the artifacts.
+        let txt = std::fs::read_to_string(dir.join("pytorch_forward.txt")).unwrap();
+        assert!(txt.contains("V100-SXM2-16GB"), "{txt}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn profile_command_alternate_device() {
+        // The CI device-axis smoke in miniature: --device a100 puts the
+        // A100's name into the txt and json artifacts.
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-profcmd-a100-{}", std::process::id()));
+        let cmd = profile_cmd(dir.to_str().unwrap());
+        cmd_profile(&parsed(cmd, &["--device", "a100-sxm4-40gb"])).unwrap();
+        let txt = std::fs::read_to_string(dir.join("pytorch_forward.txt")).unwrap();
+        assert!(txt.contains("A100-SXM4-40GB"), "{txt}");
+        let json = std::fs::read_to_string(dir.join("pytorch_forward.json")).unwrap();
+        assert!(json.contains("A100-SXM4-40GB"), "{json}");
         let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]
     fn profile_rejects_bad_framework() {
-        let cmd = Cmd::new("profile", "t")
-            .flag("framework", "caffe", "h")
-            .flag("phase", "forward", "h")
-            .flag("amp", "O1", "h")
-            .flag("scale", "lite", "h")
-            .flag("out", "/tmp/x", "h");
-        assert!(cmd_profile(&parsed(cmd, &[])).is_err());
+        let cmd = profile_cmd("/tmp/x");
+        assert!(cmd_profile(&parsed(cmd, &["--framework", "caffe"])).is_err());
+    }
+
+    #[test]
+    fn profile_rejects_unknown_device_with_hint() {
+        let cmd = profile_cmd("/tmp/x");
+        let err = cmd_profile(&parsed(cmd, &["--device", "a100-sxm-40gb"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown device"), "{msg}");
+        assert!(msg.contains("did you mean 'a100-sxm4-40gb'?"), "{msg}");
+    }
+
+    fn matrix_cmd(out: &str) -> Cmd {
+        Cmd::new("matrix", "t")
+            .flag("workloads", "all", "h")
+            .flag("device", "default", "h")
+            .flag("out", out, "h")
+            .switch("quick", "h")
     }
 
     #[test]
     fn matrix_quick_restricted_writes_artifacts() {
         let dir = std::env::temp_dir().join(format!("hroofline-matrixcmd-{}", std::process::id()));
-        let cmd = Cmd::new("matrix", "t")
-            .flag("workloads", "all", "h")
-            .flag("out", dir.to_str().unwrap(), "h")
-            .switch("quick", "h");
+        let cmd = matrix_cmd(dir.to_str().unwrap());
         cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "deepcam-lite,transformer"])).unwrap();
         for name in ["matrix.txt", "matrix.json", "matrix.svg", "matrix.csv"] {
             assert!(dir.join(name).exists(), "{name}");
@@ -372,15 +458,45 @@ mod tests {
     }
 
     #[test]
+    fn matrix_multi_device_writes_per_device_and_cross_artifacts() {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-matrixdev-{}", std::process::id()));
+        let cmd = matrix_cmd(dir.to_str().unwrap());
+        cmd_matrix(&parsed(
+            cmd,
+            &["--quick", "--workloads", "transformer", "--device", "v100,a100"],
+        ))
+        .unwrap();
+        // Per-device overlays plus the combined report.
+        assert!(dir.join("matrix.txt").exists());
+        assert!(dir.join("matrix@v100.svg").exists());
+        assert!(dir.join("matrix@a100.svg").exists());
+        // The combined report carries the cross-device pivot table.
+        let txt = std::fs::read_to_string(dir.join("matrix.txt")).unwrap();
+        assert!(txt.contains("cross-device comparison"), "{txt}");
+        // Device-tagged scenario artifacts exist alongside default ones.
+        assert!(dir.join("scenarios/transformer-pt-forward-O1.json").exists());
+        assert!(dir.join("scenarios/transformer-pt-forward-O1@a100.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
     fn matrix_rejects_unknown_workload_cleanly() {
-        let cmd = Cmd::new("matrix", "t")
-            .flag("workloads", "all", "h")
-            .flag("out", "/tmp/x", "h")
-            .switch("quick", "h");
+        let cmd = matrix_cmd("/tmp/x");
         let err = cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "resnet50"])).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("unknown workload 'resnet50'"), "{msg}");
         assert!(msg.contains("did you mean 'resnet'?"), "{msg}");
+    }
+
+    #[test]
+    fn matrix_rejects_unknown_device_cleanly() {
+        let cmd = matrix_cmd("/tmp/x");
+        let err =
+            cmd_matrix(&parsed(cmd, &["--quick", "--device", "a100-sxm4-40g"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown device 'a100-sxm4-40g'"), "{msg}");
+        assert!(msg.contains("did you mean 'a100-sxm4-40gb'?"), "{msg}");
     }
 
     #[test]
@@ -418,10 +534,42 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("hroofline-ertcmd-{}", std::process::id()));
         let cmd = Cmd::new("ert", "t")
             .flag("mode", "modeled", "h")
+            .flag("device", "v100-sxm2-16gb", "h")
             .flag("out", dir.to_str().unwrap(), "h")
             .switch("quick", "h");
         cmd_ert(&parsed(cmd, &["--quick"])).unwrap();
         assert!(dir.join("fig1.svg").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ert_rejects_unknown_device_even_in_empirical_mode() {
+        // The empirical sweep doesn't use the GPU spec, but a typo'd
+        // --device must still fail fast with the registry hint instead
+        // of silently running.
+        let cmd = Cmd::new("ert", "t")
+            .flag("mode", "modeled", "h")
+            .flag("device", "v100-sxm2-16gb", "h")
+            .flag("out", "/tmp/x", "h")
+            .switch("quick", "h");
+        let err = cmd_ert(&parsed(cmd, &["--mode", "empirical", "--device", "t44"]))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown device 't44'"), "{msg}");
+        assert!(msg.contains("did you mean 't4'?"), "{msg}");
+    }
+
+    #[test]
+    fn ert_quick_modeled_runs_on_t4() {
+        let dir = std::env::temp_dir().join(format!("hroofline-ertcmd-t4-{}", std::process::id()));
+        let cmd = Cmd::new("ert", "t")
+            .flag("mode", "modeled", "h")
+            .flag("device", "v100-sxm2-16gb", "h")
+            .flag("out", dir.to_str().unwrap(), "h")
+            .switch("quick", "h");
+        cmd_ert(&parsed(cmd, &["--quick", "--device", "t4"])).unwrap();
+        let txt = std::fs::read_to_string(dir.join("fig1.txt")).unwrap();
+        assert!(txt.contains("T4-PCIE-16GB"), "{txt}");
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -1,13 +1,16 @@
 //! Device models: the parameterized GPU specification used by the ERT
-//! modeled mode and the counter simulator, plus an "empirical" device
-//! built from measured ERT results (the host CPU path).
+//! modeled mode and the counter simulator, plus the named registry
+//! ([`registry`]) that every pipeline surface resolves devices through.
 //!
 //! The V100 constants are the ones the paper itself quotes (§II-A, Eq. 3,
 //! Fig. 1): 80 SMs at 1.312 GHz boost, 8 tensor cores/SM, 128 KiB
-//! combined L1/shared per SM, 6 MiB L2, 900 GB/s HBM2.
+//! combined L1/shared per SM, 6 MiB L2, 900 GB/s HBM2. The A100 and T4
+//! entries carry datasheet-derived geometry pinned by unit tests.
 
 pub mod pipeline;
+pub mod registry;
 pub mod spec;
 
 pub use pipeline::{Pipeline, PipelineKind};
+pub use registry::{DeviceEntry, DeviceRegistry};
 pub use spec::{CacheLevel, GpuSpec, MemLevel, Precision};

@@ -1,0 +1,216 @@
+//! Named device registry — the *machines* the pipeline characterizes.
+//!
+//! The paper's methodology is machine-independent (ERT-style machine
+//! characterization + Nsight-style application characterization), so the
+//! device is a first-class axis of the whole pipeline rather than a
+//! constant: every CLI surface (`repro ert|profile|matrix --device`),
+//! the scenario matrix and the report generators resolve a [`GpuSpec`]
+//! by name through this registry. Unknown names get a clean
+//! [`CliError`] with the same did-you-mean hints as unknown workloads
+//! and commands ([`crate::cli::suggest`]).
+//!
+//! Built-in devices (canonical name → alias):
+//!
+//! * `v100-sxm2-16gb` (`v100`) — the paper's testbed (§III-A); the
+//!   registry default, so every legacy output stays bit-identical;
+//! * `a100-sxm4-40gb` (`a100`) — the §V "future work" Ampere part;
+//! * `t4-pcie-16gb` (`t4`) — the inference-class Turing contrast
+//!   device (small L1 carve, GDDR6).
+//!
+//! Adding a device is three steps: a `GpuSpec` constructor in
+//! [`crate::device::spec`] with datasheet-derived clocks/SM counts/cache
+//! geometry (pin the Eq.-3-style peak math in a test), a
+//! [`DeviceEntry`] row in [`REGISTRY`], and a README table row.
+
+use crate::cli::{hint, CliError};
+use crate::device::spec::GpuSpec;
+
+/// One registry entry: a named device-spec builder.
+pub struct DeviceEntry {
+    /// Canonical CLI name, e.g. `v100-sxm2-16gb`.
+    pub name: &'static str,
+    /// Short alias, also the scenario-id tag, e.g. `v100`.
+    pub short: &'static str,
+    /// The spec's display name, e.g. `V100-SXM2-16GB` — duplicated here
+    /// so captions/titles don't have to build a whole [`GpuSpec`] to
+    /// read one string (pinned equal to `spec().name` by a test).
+    pub display: &'static str,
+    pub description: &'static str,
+    builder: fn() -> GpuSpec,
+}
+
+impl DeviceEntry {
+    /// Build the full specification for this device.
+    pub fn spec(&self) -> GpuSpec {
+        (self.builder)()
+    }
+}
+
+impl std::fmt::Debug for DeviceEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceEntry").field("name", &self.name).finish()
+    }
+}
+
+static REGISTRY: [DeviceEntry; 3] = [
+    DeviceEntry {
+        name: "v100-sxm2-16gb",
+        short: "v100",
+        display: "V100-SXM2-16GB",
+        description: "NVIDIA V100-SXM2-16GB — the paper's testbed (80 SMs, 900 GB/s HBM2)",
+        builder: GpuSpec::v100,
+    },
+    DeviceEntry {
+        name: "a100-sxm4-40gb",
+        short: "a100",
+        display: "A100-SXM4-40GB",
+        description: "NVIDIA A100-SXM4-40GB — Ampere (108 SMs, 1555 GB/s HBM2e)",
+        builder: GpuSpec::a100,
+    },
+    DeviceEntry {
+        name: "t4-pcie-16gb",
+        short: "t4",
+        display: "T4-PCIE-16GB",
+        description: "NVIDIA T4 — Turing inference part (40 SMs, 320 GB/s GDDR6, 70 W)",
+        builder: GpuSpec::t4,
+    },
+];
+
+/// All registered devices, in registry (and matrix-enumeration) order.
+pub fn entries() -> &'static [DeviceEntry] {
+    &REGISTRY
+}
+
+/// Registered canonical device names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// The default device — the paper's V100 testbed. Every surface that
+/// does not take an explicit `--device` resolves to this entry, which
+/// keeps the single-testbed outputs bit-identical to the pre-registry
+/// pipeline.
+pub fn default_entry() -> &'static DeviceEntry {
+    &REGISTRY[0]
+}
+
+/// Convenience: the default entry's spec.
+pub fn default_spec() -> GpuSpec {
+    default_entry().spec()
+}
+
+/// Resolve a device by canonical name or short alias; unknown names get
+/// a clean [`CliError`] with a did-you-mean hint and the available set.
+pub fn lookup(name: &str) -> Result<&'static DeviceEntry, CliError> {
+    if let Some(e) = REGISTRY.iter().find(|e| e.name == name || e.short == name) {
+        return Ok(e);
+    }
+    let hint = hint(name, "", REGISTRY.iter().flat_map(|e| [e.name, e.short]));
+    Err(CliError(format!(
+        "unknown device '{name}'{hint}; available: {}",
+        names().join(", ")
+    )))
+}
+
+/// Facade over the registry for spec-by-name resolution:
+/// `DeviceRegistry::get("a100-sxm4-40gb")`.
+pub struct DeviceRegistry;
+
+impl DeviceRegistry {
+    /// Resolve a name (or alias) straight to a built [`GpuSpec`].
+    pub fn get(name: &str) -> Result<GpuSpec, CliError> {
+        lookup(name).map(DeviceEntry::spec)
+    }
+
+    /// All registered devices, in registry order.
+    pub fn entries() -> &'static [DeviceEntry] {
+        entries()
+    }
+
+    /// Registered canonical names, in registry order.
+    pub fn names() -> Vec<&'static str> {
+        names()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::MemLevel;
+    use crate::roofline::model::Ceilings;
+
+    #[test]
+    fn enumeration_is_deterministic_and_duplicate_free() {
+        let a = names();
+        let b = names();
+        assert_eq!(a, b);
+        let mut dedup: Vec<&str> =
+            REGISTRY.iter().flat_map(|e| [e.name, e.short]).collect();
+        dedup.sort_unstable();
+        let before = dedup.len();
+        dedup.dedup();
+        assert_eq!(dedup.len(), before, "names and aliases collide");
+        assert_eq!(a[0], "v100-sxm2-16gb", "default device leads the registry");
+    }
+
+    #[test]
+    fn lookup_resolves_canonical_names_and_aliases() {
+        for e in entries() {
+            assert_eq!(lookup(e.name).unwrap().name, e.name);
+            assert_eq!(lookup(e.short).unwrap().name, e.name);
+            assert_eq!(DeviceRegistry::get(e.name).unwrap().name, e.spec().name);
+            // The static display name is a cache of the spec's name —
+            // the two must never diverge.
+            assert_eq!(e.display, e.spec().name, "{}", e.name);
+        }
+        assert_eq!(default_entry().spec().name, "V100-SXM2-16GB");
+    }
+
+    #[test]
+    fn unknown_device_gets_did_you_mean() {
+        let err = DeviceRegistry::get("a100-sxm4-40g").unwrap_err();
+        assert!(err.0.contains("unknown device 'a100-sxm4-40g'"), "{}", err.0);
+        assert!(err.0.contains("did you mean 'a100-sxm4-40gb'?"), "{}", err.0);
+        assert!(err.0.contains("available:"), "{}", err.0);
+        // A close alias typo also resolves to a suggestion.
+        let err = DeviceRegistry::get("t44").unwrap_err();
+        assert!(err.0.contains("did you mean 't4'?"), "{}", err.0);
+        // Nothing-alike input gets the available list but no suggestion.
+        let err = DeviceRegistry::get("strawberry").unwrap_err();
+        assert!(!err.0.contains("did you mean"), "{}", err.0);
+    }
+
+    #[test]
+    fn v100_entry_preserves_eq3_bit_identically() {
+        // The registry must hand out exactly the paper's V100 — same
+        // Eq. 3 peak to the last bit.
+        let from_registry = DeviceRegistry::get("v100-sxm2-16gb").unwrap();
+        let direct = GpuSpec::v100();
+        assert_eq!(
+            from_registry.theoretical_tensor_flops().to_bits(),
+            direct.theoretical_tensor_flops().to_bits()
+        );
+        assert_eq!(from_registry.sms, direct.sms);
+        assert_eq!(from_registry.l1.capacity_bytes, direct.l1.capacity_bytes);
+    }
+
+    #[test]
+    fn ceilings_monotone_with_bandwidth_for_every_device() {
+        // At any fixed AI the Roofline bound must decrease from L1 to
+        // L2 to HBM, for every registered device — the hierarchical
+        // chart's reading depends on it.
+        for e in entries() {
+            let spec = e.spec();
+            let c = Ceilings::from_spec(&spec);
+            for ai in [0.01, 1.0, 100.0] {
+                let b1 = c.bound(MemLevel::L1, ai);
+                let b2 = c.bound(MemLevel::L2, ai);
+                let bh = c.bound(MemLevel::Hbm, ai);
+                assert!(b1 >= b2 && b2 >= bh, "{} at AI {ai}: {b1} {b2} {bh}", e.name);
+            }
+            // And the compute ceilings order FP64 < FP32 < tensor.
+            let max = c.max_flops();
+            assert!(max >= spec.achievable_tensor_flops());
+        }
+    }
+}

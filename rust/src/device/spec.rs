@@ -168,8 +168,14 @@ impl GpuSpec {
         }
     }
 
-    /// A100-SXM4-40GB variant — used by the "alternate architecture"
-    /// extension tests (paper §V future work).
+    /// NVIDIA A100-SXM4-40GB (GA100, Ampere) — the paper's §V "future
+    /// work" target, registered as `a100-sxm4-40gb`.
+    ///
+    /// Datasheet cross-check (dense, no sparsity):
+    /// * FP64: 108 × 32 × 1.410e9 × 2 = 9.75 TFLOP/s (datasheet 9.7)
+    /// * FP32: 108 × 64 × 1.410e9 × 2 = 19.49 TFLOP/s (datasheet 19.5)
+    /// * TC:   108 × 4 × 1.410e9 × 512 = 311.9 TFLOP/s (datasheet 312)
+    /// * HBM2e: 1555 GB/s, 40 GB
     pub fn a100() -> GpuSpec {
         GpuSpec {
             name: "A100-SXM4-40GB".into(),
@@ -180,7 +186,9 @@ impl GpuSpec {
             fp64_lanes_per_sm: 32,
             tensor_cores_per_sm: 4,
             flops_per_tensor_inst: 2048,
-            flops_per_tc_per_cycle: 8 * 4 * 8 * 2 * 2, // 3rd-gen TC, 256 FMA/cycle
+            // 3rd-gen TC: 256 dense FP16 MACs per cycle → 512 FLOPs
+            // (Eq. 3 on Ampere: 108 x 4 x 1.41e9 x 512 = 311.9 TFLOP/s).
+            flops_per_tc_per_cycle: 8 * 4 * 8 * 2,
             l1: CacheLevel {
                 capacity_bytes: 192 * 1024,
                 line_bytes: 128,
@@ -201,6 +209,59 @@ impl GpuSpec {
                 fp32: 0.97,
                 fp16: 0.93,
                 tensor: 0.95,
+            },
+            warp_size: 32,
+        }
+    }
+
+    /// NVIDIA T4 (TU104, Turing, 70 W PCIe) — the inference-class
+    /// contrast device, registered as `t4-pcie-16gb`.
+    ///
+    /// Datasheet cross-check:
+    /// * FP32: 40 × 64 × 1.590e9 × 2 = 8.14 TFLOP/s (datasheet 8.1)
+    /// * FP16 (half2 on the CUDA core): 2 × FP32 = 16.28 (datasheet 16.2)
+    /// * FP64: 40 × 2 × 1.590e9 × 2 = 254 GFLOP/s (1/32 rate, ~0.25 TFLOP/s)
+    /// * TC:   40 × 8 × 1.590e9 × 128 = 65.1 TFLOP/s (datasheet 65)
+    /// * GDDR6: 320 GB/s, 16 GB
+    ///
+    /// The achievable fractions are modelled (no published ERT run for
+    /// the T4 in the paper's series): the 70 W power cap keeps sustained
+    /// rates a notch below the Volta calibration points.
+    pub fn t4() -> GpuSpec {
+        GpuSpec {
+            name: "T4-PCIE-16GB".into(),
+            sms: 40,
+            clock_hz: 1.590e9,
+            tc_clock_hz: 1.590e9,
+            fp32_lanes_per_sm: 64,
+            fp64_lanes_per_sm: 2, // 1/32 FP32 rate on Turing
+            tensor_cores_per_sm: 8,
+            flops_per_tensor_inst: 512,
+            flops_per_tc_per_cycle: 4 * 4 * 4 * 2, // 2nd-gen TC, Volta-width MMA
+            l1: CacheLevel {
+                // Unified L1/shared with the 64 KiB shared carve — half
+                // the V100's staging capacity (drives smaller GEMM tiles
+                // in `dl::lower`).
+                capacity_bytes: 64 * 1024,
+                line_bytes: 128,
+                ways: 4,
+                // ~114 B/cycle/SM as on Volta: 40 × 1.59e9 × 114 ≈ 7.3 TB/s.
+                peak_bytes_per_sec: 7.3e12,
+            },
+            l2: CacheLevel {
+                capacity_bytes: 4 * 1024 * 1024,
+                line_bytes: 128,
+                ways: 16,
+                peak_bytes_per_sec: 1.3e12,
+            },
+            hbm_bytes_per_sec: 320.0e9, // GDDR6, not HBM — same model slot
+            hbm_capacity_bytes: 16 * 1024 * 1024 * 1024,
+            launch_latency_s: 4.5e-6, // PCIe submission path
+            achievable: AchievableFrac {
+                fp64: 0.90,
+                fp32: 0.92,
+                fp16: 0.90,
+                tensor: 0.85,
             },
             warp_size: 32,
         }
@@ -336,5 +397,32 @@ mod tests {
         let a = GpuSpec::a100();
         assert!(a.theoretical_tensor_flops() > v.theoretical_tensor_flops());
         assert!(a.hbm_bytes_per_sec > v.hbm_bytes_per_sec);
+    }
+
+    #[test]
+    fn a100_matches_datasheet_peaks() {
+        // Dense (no-sparsity) datasheet numbers, cross-checked in the
+        // constructor comment.
+        let a = GpuSpec::a100();
+        assert!((a.theoretical_tensor_flops() / 1e12 - 311.9).abs() < 0.5);
+        assert!((a.theoretical_flops(Precision::Fp32) / 1e12 - 19.49).abs() < 0.1);
+        assert!((a.theoretical_flops(Precision::Fp64) / 1e12 - 9.75).abs() < 0.1);
+    }
+
+    #[test]
+    fn t4_matches_datasheet_peaks() {
+        let t = GpuSpec::t4();
+        assert!((t.theoretical_tensor_flops() / 1e12 - 65.1).abs() < 0.2);
+        assert!((t.theoretical_flops(Precision::Fp32) / 1e12 - 8.14).abs() < 0.05);
+        assert!((t.theoretical_flops(Precision::Fp16) / 1e12 - 16.28).abs() < 0.1);
+        assert!((t.theoretical_flops(Precision::Fp64) / 1e9 - 254.4).abs() < 2.0);
+    }
+
+    #[test]
+    fn every_builtin_orders_bandwidth_nearest_to_farthest() {
+        for spec in [GpuSpec::v100(), GpuSpec::a100(), GpuSpec::t4()] {
+            assert!(spec.bandwidth(MemLevel::L1) > spec.bandwidth(MemLevel::L2), "{}", spec.name);
+            assert!(spec.bandwidth(MemLevel::L2) > spec.bandwidth(MemLevel::Hbm), "{}", spec.name);
+        }
     }
 }

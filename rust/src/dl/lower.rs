@@ -138,25 +138,33 @@ impl FrameworkTrace {
 }
 
 /// Lower DeepCAM (or any forward graph) under TensorFlow semantics.
-pub fn tensorflow(forward_graph: &Graph, policy: Policy) -> FrameworkTrace {
-    lower(forward_graph, Framework::TensorFlow, policy)
+pub fn tensorflow(forward_graph: &Graph, policy: Policy, spec: &GpuSpec) -> FrameworkTrace {
+    lower(forward_graph, Framework::TensorFlow, policy, spec)
 }
 
 /// Lower under PyTorch semantics.
-pub fn pytorch(forward_graph: &Graph, policy: Policy) -> FrameworkTrace {
-    lower(forward_graph, Framework::PyTorch, policy)
+pub fn pytorch(forward_graph: &Graph, policy: Policy, spec: &GpuSpec) -> FrameworkTrace {
+    lower(forward_graph, Framework::PyTorch, policy, spec)
 }
 
-/// Full lowering: autodiff + AMP + framework personality.
-pub fn lower(forward_graph: &Graph, fw: Framework, policy: Policy) -> FrameworkTrace {
-    let spec = GpuSpec::v100();
+/// Full lowering: autodiff + AMP + framework personality, targeting one
+/// device. Lowering never constructs its own spec — the caller decides
+/// which registry device the trace is for (kernel tile selection and
+/// tensor-instruction width are device properties, so the same graph
+/// lowers differently on different GPUs).
+pub fn lower(
+    forward_graph: &Graph,
+    fw: Framework,
+    policy: Policy,
+    spec: &GpuSpec,
+) -> FrameworkTrace {
     let mut train = differentiate(forward_graph.clone());
     amp::apply(&mut train, policy);
     let mut out = FrameworkTrace::default();
 
-    lower_phase(&train, fw, policy, Phase::Forward, &spec, &mut out);
-    lower_phase(&train, fw, policy, Phase::Backward, &spec, &mut out);
-    lower_phase(&train, fw, policy, Phase::Optimizer, &spec, &mut out);
+    lower_phase(&train, fw, policy, Phase::Forward, spec, &mut out);
+    lower_phase(&train, fw, policy, Phase::Backward, spec, &mut out);
+    lower_phase(&train, fw, policy, Phase::Optimizer, spec, &mut out);
     out
 }
 
@@ -506,7 +514,16 @@ fn conv_kernel(
     let n = out_shape.0.last().copied().unwrap_or(1).max(1);
     let m = (out_shape.n_elems() / n).max(1);
     let k = (flops / 2).checked_div(m * n).unwrap_or(1).max(1);
-    let tile = if tc { 128 } else { 64 };
+    // Library tile selection tracks the device's combined L1/shared
+    // capacity: a ≥128 KiB carve (V100/A100-class) stages 128×128 TC
+    // tiles, a smaller one (T4: 64 KiB) halves the tile edge — which is
+    // why the same graph launches a different grid on each device.
+    let big_l1 = spec.l1.capacity_bytes >= 128 * 1024;
+    let tile = match (tc, big_l1) {
+        (true, true) => 128,
+        (true, false) | (false, true) => 64,
+        (false, false) => 32,
+    };
     // Algo-class descriptor: cudnn picks kernels by filter size, stride
     // and channel band — all layers sharing a class share a kernel name
     // (and therefore aggregate on the chart).
@@ -636,7 +653,8 @@ mod tests {
 
     #[test]
     fn tf_optimizer_folds_into_backward() {
-        let t = tensorflow(&paper_graph(), Policy::O1);
+        let spec = GpuSpec::v100();
+        let t = tensorflow(&paper_graph(), Policy::O1, &spec);
         assert!(t.optimizer.is_empty());
         assert!(!t.backward.is_empty());
         // TF backward contains the update kernels.
@@ -649,7 +667,7 @@ mod tests {
     #[test]
     fn pytorch_optimizer_is_separate_and_non_zero_ai() {
         let spec = GpuSpec::v100();
-        let t = pytorch(&paper_graph(), Policy::O1);
+        let t = pytorch(&paper_graph(), Policy::O1, &spec);
         assert!(!t.optimizer.is_empty());
         let (zero, total) = t.zero_ai_census(Phase::Optimizer, &spec);
         assert_eq!(zero, 0, "Table III: PyTorch optimizer has 0 zero-AI");
@@ -660,8 +678,8 @@ mod tests {
     fn zero_ai_fractions_match_table3_shape() {
         let spec = GpuSpec::v100();
         // Paper defaults: AMP enabled for both frameworks (§III-B).
-        let tf = tensorflow(&paper_graph(), Policy::O1);
-        let pt = pytorch(&paper_graph(), Policy::O1);
+        let tf = tensorflow(&paper_graph(), Policy::O1, &spec);
+        let pt = pytorch(&paper_graph(), Policy::O1, &spec);
         let frac = |t: &FrameworkTrace, p: Phase| {
             let (z, n) = t.zero_ai_census(p, &spec);
             z as f64 / n as f64
@@ -681,7 +699,8 @@ mod tests {
     fn tf_forward_has_dominant_aggregated_kernel() {
         // Fig. 3: TF's algo-class naming makes the big encoder convs
         // aggregate under one kernel name.
-        let t = tensorflow(&paper_graph(), Policy::O1);
+        let spec = GpuSpec::v100();
+        let t = tensorflow(&paper_graph(), Policy::O1, &spec);
         let launches: u64 = t
             .forward
             .iter()
@@ -694,8 +713,9 @@ mod tests {
     #[test]
     fn pytorch_forward_kernel_names_are_diverse() {
         // Fig. 5: no dominant kernel — shape-bucketed names.
-        let tf = tensorflow(&paper_graph(), Policy::O1);
-        let pt = pytorch(&paper_graph(), Policy::O1);
+        let spec = GpuSpec::v100();
+        let tf = tensorflow(&paper_graph(), Policy::O1, &spec);
+        let pt = pytorch(&paper_graph(), Policy::O1, &spec);
         let distinct = |t: &FrameworkTrace| {
             let mut names: Vec<&str> =
                 t.forward.iter().map(|i| i.kernel.name.as_str()).collect();
@@ -714,7 +734,8 @@ mod tests {
     #[test]
     fn pytorch_bwd_filter_fallback_exists_under_amp() {
         // Fig. 6: the top backward kernel runs FP32 without TC.
-        let pt = pytorch(&paper_graph(), Policy::O1);
+        let spec = GpuSpec::v100();
+        let pt = pytorch(&paper_graph(), Policy::O1, &spec);
         let fallback = pt
             .backward
             .iter()
@@ -727,7 +748,7 @@ mod tests {
     #[test]
     fn amp_o0_has_no_tensor_core_kernels() {
         let spec = GpuSpec::v100();
-        let pt = pytorch(&paper_graph(), Policy::O0);
+        let pt = pytorch(&paper_graph(), Policy::O0, &spec);
         for inv in pt.all() {
             assert_eq!(
                 inv.kernel.mix.tensor_insts, 0,
@@ -735,13 +756,13 @@ mod tests {
                 inv.kernel.name
             );
         }
-        let _ = spec;
     }
 
     #[test]
     fn amp_o1_moves_convs_to_tensor_core() {
-        let pt_o0 = pytorch(&paper_graph(), Policy::O0);
-        let pt_o1 = pytorch(&paper_graph(), Policy::O1);
+        let spec = GpuSpec::v100();
+        let pt_o0 = pytorch(&paper_graph(), Policy::O0, &spec);
+        let pt_o1 = pytorch(&paper_graph(), Policy::O1, &spec);
         let tc_insts = |t: &FrameworkTrace| -> u64 {
             t.all().iter().map(|i| i.kernel.mix.tensor_insts * i.invocations).sum()
         };
@@ -754,8 +775,8 @@ mod tests {
         // Both lowerings must account the same model FLOPs (within the
         // fusion/fallback bookkeeping): within 15%.
         let spec = GpuSpec::v100();
-        let tf = tensorflow(&paper_graph(), Policy::O1);
-        let pt = pytorch(&paper_graph(), Policy::O1);
+        let tf = tensorflow(&paper_graph(), Policy::O1, &spec);
+        let pt = pytorch(&paper_graph(), Policy::O1, &spec);
         let flops = |t: &FrameworkTrace| -> f64 {
             t.all()
                 .iter()
@@ -765,5 +786,43 @@ mod tests {
         let (f_tf, f_pt) = (flops(&tf), flops(&pt));
         let ratio = f_tf / f_pt;
         assert!((0.85..1.15).contains(&ratio), "tf {f_tf:.3e} pt {f_pt:.3e}");
+    }
+
+    #[test]
+    fn lowering_is_device_aware() {
+        // The device-registry refactor's guard: lowering takes the spec
+        // from the caller, and the same graph lowers to *different*
+        // kernel launch geometries on different devices (tile selection
+        // follows L1 capacity; HMMA width follows the tensor-core
+        // generation). A hidden `GpuSpec::v100()` inside `lower` would
+        // make these asserts fail.
+        let v100 = GpuSpec::v100();
+        let t4 = GpuSpec::t4();
+        let a100 = GpuSpec::a100();
+        let on_v100 = pytorch(&paper_graph(), Policy::O1, &v100);
+        let on_t4 = pytorch(&paper_graph(), Policy::O1, &t4);
+        let on_a100 = pytorch(&paper_graph(), Policy::O1, &a100);
+
+        // Same kernel census either way — the network didn't change.
+        assert_eq!(on_v100.forward.len(), on_t4.forward.len());
+        assert_eq!(on_v100.backward.len(), on_a100.backward.len());
+
+        // T4's 64 KiB L1 halves the GEMM tile → more, smaller blocks.
+        let grids = |t: &FrameworkTrace| -> Vec<u32> {
+            t.forward.iter().map(|i| i.kernel.grid).collect()
+        };
+        assert_ne!(grids(&on_v100), grids(&on_t4), "tile selection must follow the device");
+
+        // A100's wider HMMA (2048 FLOPs/inst vs 512) issues fewer
+        // tensor instructions for the same FLOPs.
+        let tc_insts = |t: &FrameworkTrace| -> u64 {
+            t.all().iter().map(|i| i.kernel.mix.tensor_insts).sum()
+        };
+        assert!(
+            tc_insts(&on_a100) < tc_insts(&on_v100),
+            "a100 {} vs v100 {}",
+            tc_insts(&on_a100),
+            tc_insts(&on_v100)
+        );
     }
 }

@@ -335,10 +335,11 @@ mod tests {
 
     #[test]
     fn new_workloads_lower_under_both_frameworks() {
+        let spec = crate::device::GpuSpec::v100();
         for name in ["resnet", "transformer"] {
             let g = lookup(name).unwrap().build(Scale::Quick);
             for fw in Framework::ALL {
-                let t = lower(&g, fw, Policy::O1);
+                let t = lower(&g, fw, Policy::O1, &spec);
                 assert!(!t.forward.is_empty(), "{name}/{}", fw.name());
                 assert!(!t.backward.is_empty(), "{name}/{}", fw.name());
             }

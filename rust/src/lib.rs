@@ -9,10 +9,12 @@
 //!   (paper §II-A, Fig. 1, Table I, Fig. 2).
 //! * [`profiler`] — an Nsight-Compute-analog metric collection layer using
 //!   the paper's exact PerfWorks metric names (paper §II-B, Table II).
-//! * [`sim`] — a V100-class kernel-granularity performance simulator that
+//! * [`sim`] — a kernel-granularity GPU performance simulator that
 //!   produces those counters (pipelines, hierarchical caches, launch
-//!   overhead) — the hardware substrate this repo substitutes for a real
-//!   GPU + Nsight (see DESIGN.md §1).
+//!   overhead), fully parameterized by a [`device::GpuSpec`] from the
+//!   [`device::registry`] (V100/A100/T4 built in) — the hardware
+//!   substrate this repo substitutes for a real GPU + Nsight
+//!   (see DESIGN.md §1).
 //! * [`dl`] — the profiling subject: an operator-graph deep-learning
 //!   framework model with a DeepCAM (DeepLabv3+) network builder,
 //!   autodiff, AMP (O0/O1/O2) and two framework lowering personalities
@@ -24,8 +26,9 @@
 //!   the end-to-end DeepCAM-lite training example.
 //! * [`report`] — one reproduction harness per paper table/figure.
 //! * [`scenario`] — the scenario matrix: the [`dl::workloads`] registry
-//!   crossed with framework × phase × AMP policy, profiled through a
-//!   shared simulation cache and compared on one overlay Roofline.
+//!   crossed with the [`device::registry`] × framework × phase × AMP
+//!   policy, profiled through per-device shared simulation caches and
+//!   compared on one overlay Roofline (plus a cross-device pivot).
 //! * [`coordinator`] — job orchestration: sweeps, output layout, the
 //!   end-to-end train driver.
 //!
@@ -37,16 +40,19 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! use hroofline::device::GpuSpec;
+//! use hroofline::device::DeviceRegistry;
 //! use hroofline::dl::{deepcam, lower, amp};
 //! use hroofline::profiler::Session;
 //! use hroofline::roofline::RooflineChart;
 //!
-//! let v100 = GpuSpec::v100();
+//! // The device is a first-class axis: resolve it by registry name
+//! // (`v100-sxm2-16gb`, `a100-sxm4-40gb`, `t4-pcie-16gb`, or a short
+//! // alias) — unknown names get a did-you-mean CliError.
+//! let gpu = DeviceRegistry::get("v100").unwrap();
 //! let net = deepcam::deepcam(&deepcam::DeepCamConfig::paper());
-//! let trace = lower::tensorflow(&net, amp::Policy::O1).forward;
-//! let profile = Session::standard(&v100).profile(&trace);
-//! let model = hroofline::roofline::RooflineModel::from_profile(&v100, &profile);
+//! let trace = lower::tensorflow(&net, amp::Policy::O1, &gpu).forward;
+//! let profile = Session::standard(&gpu).profile(&trace);
+//! let model = hroofline::roofline::RooflineModel::from_profile(&gpu, &profile);
 //! let chart = RooflineChart::hierarchical(&model, "TF DeepCAM forward");
 //! std::fs::write("roofline.svg", chart.to_svg()).unwrap();
 //! ```

@@ -7,8 +7,9 @@
 //!   profile     application characterization (§II-B): lower DeepCAM under
 //!               a framework personality + AMP policy, collect counters,
 //!               print the kernel table, write the hierarchical roofline
-//!   matrix      scenario-matrix sweep: workload registry × framework ×
-//!               phase × AMP policy, per-scenario artifacts + comparison
+//!   matrix      scenario-matrix sweep: workload registry × device
+//!               registry × framework × phase × AMP policy,
+//!               per-scenario artifacts + comparison (+ cross-device)
 //!   report      regenerate paper artifacts (figures/tables) into out/
 //!   train       end-to-end: run the AOT-compiled DeepCAM-lite training
 //!               loop through PJRT, logging the loss curve
@@ -24,6 +25,7 @@ fn main() {
         .command(
             Cmd::new("ert", "Machine characterization sweeps (Fig. 1, Tab. I, Fig. 2)")
                 .flag("mode", "modeled", "modeled | empirical | both")
+                .flag("device", "v100-sxm2-16gb", "registry device for the modeled sweep")
                 .flag("out", "out/ert", "output directory")
                 .switch("quick", "reduced sweep grid"),
         )
@@ -34,13 +36,23 @@ fn main() {
                 .flag("phase", "forward", "forward | backward | optimizer | all")
                 .flag("amp", "O1", "O0 | O1 | O2 | off | manual-fp16")
                 .flag("scale", "paper", "paper | lite")
+                .flag("device", "v100-sxm2-16gb", "registry device to profile on")
                 .flag("out", "out/profile", "output directory"),
         )
         .command(
-            Cmd::new("matrix", "Scenario-matrix sweep: workloads x frameworks x phases x AMP")
-                .flag("workloads", "all", "comma-separated workload names, or 'all'")
-                .flag("out", "out/matrix", "output directory")
-                .switch("quick", "reduced matrix at smoke scale (the CI gate)"),
+            Cmd::new(
+                "matrix",
+                "Scenario-matrix sweep: workloads x devices x frameworks x phases x AMP",
+            )
+            .flag("workloads", "all", "comma-separated workload names, or 'all'")
+            .flag(
+                "device",
+                "default",
+                "comma-separated registry devices, 'all', or 'default' \
+                 (quick: v100 only; full: all registered)",
+            )
+            .flag("out", "out/matrix", "output directory")
+            .switch("quick", "reduced matrix at smoke scale (the CI gate)"),
         )
         .command(
             Cmd::new("report", "Regenerate paper tables/figures into out/report")

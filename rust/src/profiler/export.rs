@@ -17,11 +17,20 @@ use crate::util::error::{bail, Context, Result};
 use crate::profiler::profile::Profile;
 use crate::sim::counters::CounterSet;
 
-/// Serialize a profile to CSV.
+/// Comment prefix carrying the device the profile was collected on —
+/// skipped (and restored) by [`from_csv`], ignored by plain CSV readers.
+const DEVICE_PREFIX: &str = "# device=";
+
+/// Serialize a profile to CSV. Profiles stamped with a device (every
+/// session-produced profile) lead with a `# device=<name>` comment so
+/// the collection device travels with the counters.
 pub fn to_csv(profile: &Profile) -> String {
     use std::fmt::Write as _;
     // One row per (kernel, metric): ~16 metrics/kernel at < 96 bytes/row.
-    let mut out = String::with_capacity(64 + profile.n_kernels() * 16 * 96);
+    let mut out = String::with_capacity(96 + profile.n_kernels() * 16 * 96);
+    if !profile.device.is_empty() {
+        let _ = writeln!(out, "{DEVICE_PREFIX}{}", profile.device);
+    }
     out.push_str("\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n");
     for k in profile.kernels() {
         for (metric, value) in k.counters.metrics() {
@@ -42,7 +51,14 @@ pub fn to_csv(profile: &Profile) -> String {
 pub fn from_csv(text: &str, spec: &GpuSpec) -> Result<Profile> {
     let mut per_kernel: BTreeMap<String, (u64, CounterSet)> = BTreeMap::new();
     let mut lines = text.lines();
-    let header = lines.next().context("empty csv")?;
+    let mut header = lines.next().context("empty csv")?;
+    // Optional device stamp ahead of the column header; external Nsight
+    // exports without one fall back to the caller's spec.
+    let mut device = spec.name.clone();
+    if let Some(name) = header.strip_prefix(DEVICE_PREFIX) {
+        device = name.trim().to_string();
+        header = lines.next().context("csv has a device line but no header")?;
+    }
     if !header.contains("Kernel Name") || !header.contains("Metric Name") {
         bail!("unrecognized csv header: {header}");
     }
@@ -68,6 +84,7 @@ pub fn from_csv(text: &str, spec: &GpuSpec) -> Result<Profile> {
         entry.1.set(&fields[1], value);
     }
     let mut profile = Profile::new();
+    profile.device = device;
     for (name, (invocations, counters)) in per_kernel {
         profile.record(&name, invocations, &counters, spec);
     }
@@ -218,6 +235,24 @@ mod tests {
             p2.kernel("k").unwrap().counters.get("smsp__warps_active.avg"),
             47.5
         );
+    }
+
+    #[test]
+    fn device_stamp_roundtrips_and_defaults() {
+        // A session profile carries its device through export → import.
+        let (spec, p) = sample_profile();
+        let csv = to_csv(&p);
+        assert!(csv.starts_with("# device=V100-SXM2-16GB\n"), "{csv}");
+        let back = from_csv(&csv, &spec).unwrap();
+        assert_eq!(back.device, "V100-SXM2-16GB");
+        // A device-less external export (real Nsight) falls back to the
+        // ingesting spec — and re-exports stamped.
+        let external = "\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n\
+            \"k\",\"sm__cycles_elapsed.avg\",1000,1\n";
+        let a100 = GpuSpec::a100();
+        let ingested = from_csv(external, &a100).unwrap();
+        assert_eq!(ingested.device, "A100-SXM4-40GB");
+        assert!(to_csv(&ingested).starts_with("# device=A100-SXM4-40GB\n"));
     }
 
     #[test]

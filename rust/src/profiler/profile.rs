@@ -79,11 +79,23 @@ pub struct Profile {
     pub passes: u64,
     /// Wall overhead the profiler itself added (replays + serialization).
     pub profiling_overhead_s: f64,
+    /// Name of the device the profile was collected on (empty for
+    /// hand-assembled profiles). Sessions stamp it from their spec;
+    /// CSV export/import round-trips it.
+    pub device: String,
 }
 
 impl Profile {
     pub fn new() -> Profile {
         Profile::default()
+    }
+
+    /// An empty profile stamped with a device name.
+    pub fn for_device(spec: &GpuSpec) -> Profile {
+        Profile {
+            device: spec.name.clone(),
+            ..Profile::default()
+        }
     }
 
     /// The aggregate slot for one kernel name, created empty on first use.

@@ -187,7 +187,7 @@ impl<'a> Session<'a> {
             self.registry.plan_passes(&metrics)
         };
 
-        let mut profile = Profile::new();
+        let mut profile = Profile::for_device(self.spec);
         profile.passes = passes.len() as u64;
         if trace.is_empty() {
             return Ok(profile);
@@ -504,5 +504,13 @@ mod tests {
         let p = Session::standard(&spec).profile(&[]);
         assert_eq!(p.n_kernels(), 0);
         assert_eq!(p.profiling_overhead_s, 0.0);
+    }
+
+    #[test]
+    fn profiles_are_stamped_with_the_session_device() {
+        let v100 = GpuSpec::v100();
+        assert_eq!(Session::standard(&v100).profile(&trace()).device, "V100-SXM2-16GB");
+        let a100 = GpuSpec::a100();
+        assert_eq!(Session::standard(&a100).profile(&trace()).device, "A100-SXM4-40GB");
     }
 }

@@ -95,25 +95,32 @@ pub(crate) fn paper_graph() -> &'static Graph {
     GRAPH.get_or_init(|| deepcam(&DeepCamConfig::paper()))
 }
 
-/// Profile one figure's (framework, phase, policy) at paper scale.
+/// Profile one figure's (framework, phase, policy) at paper scale on a
+/// device (lowering and collection both target the same spec).
 pub fn profile_for(spec: &GpuSpec, fig: &FigSpec) -> (FrameworkTrace, Profile) {
-    let trace = lower(paper_graph(), fig.framework, fig.policy);
+    let trace = lower(paper_graph(), fig.framework, fig.policy, spec);
     let profile = Session::standard(spec).profile(trace.phase(fig.phase));
     (trace, profile)
 }
 
 pub fn generate(id: &str) -> Result<Artifact> {
+    generate_for(&crate::device::registry::default_spec(), id)
+}
+
+/// Generate one DeepCAM figure on an explicit device; the caption and
+/// chart title carry the device name.
+pub fn generate_for(spec: &GpuSpec, id: &str) -> Result<Artifact> {
     let fig = FIGS
         .iter()
         .find(|f| f.id == id)
         .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}'"))?;
-    let spec = GpuSpec::v100();
-    let (_trace, profile) = profile_for(&spec, fig);
-    let model = RooflineModel::from_profile(&spec, &profile);
+    let (_trace, profile) = profile_for(spec, fig);
+    let model = RooflineModel::from_profile(spec, &profile);
     model
         .validate_bounds()
         .map_err(|e| anyhow::anyhow!("roofline bound violated: {e}"))?;
-    let chart = RooflineChart::hierarchical(&model, fig.title);
+    let title = format!("{} [{}]", fig.title, spec.name);
+    let chart = RooflineChart::hierarchical(&model, &title);
 
     let top = profile.by_time();
     let top_share = profile.top_kernel_time_share();
@@ -127,7 +134,7 @@ pub fn generate(id: &str) -> Result<Artifact> {
     let mut text = format!(
         "{}\n\ntotal GPU time {} | kernels {} | invocations {} | \
          top-kernel share {:.1}% | tensor-core time share {:.1}%\n\n{}",
-        fig.title,
+        title,
         crate::util::fmt::duration(total),
         profile.n_kernels(),
         profile.total_invocations(),
@@ -139,9 +146,10 @@ pub fn generate(id: &str) -> Result<Artifact> {
 
     Ok(Artifact {
         id: fig.id.into(),
-        title: fig.title.into(),
+        title,
         text,
         json: Json::obj(vec![
+            ("device", Json::str(&spec.name)),
             ("framework", Json::str(fig.framework.name())),
             ("policy", Json::str(fig.policy.name())),
             ("total_seconds", Json::num(total)),

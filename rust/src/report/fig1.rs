@@ -21,26 +21,50 @@ pub const PAPER: [(&str, f64); 4] = [
 ];
 
 pub fn generate() -> Result<Artifact> {
-    let spec = GpuSpec::v100();
-    let ceilings = modeled::characterize(&spec, &SweepConfig::standard());
+    generate_for(&crate::device::registry::default_spec())
+}
 
-    let mut table = Table::new(&["ceiling", "paper (TFLOP/s)", "ours (TFLOP/s)", "err"]);
+/// Fig. 1 for an explicit device. The paper-reference comparison
+/// columns only exist on the V100 testbed; other devices get their
+/// swept ceilings without a paper column (there is nothing to validate
+/// against), with the device named in every caption.
+pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
+    let ceilings = modeled::characterize(spec, &SweepConfig::standard());
+    // The paper columns belong to the registry's default entry (the
+    // paper's testbed) — compared by name so the check tracks the
+    // registry instead of duplicating the literal.
+    let is_testbed = spec.name == crate::device::registry::default_spec().name;
+
     let mut json_rows = Vec::new();
-    for (label, paper_tf) in PAPER {
-        let ours = ceilings.compute(label).unwrap_or(0.0) / 1000.0;
-        let err = crate::util::stats::rel_diff(ours, paper_tf);
-        table.row(&[
-            label.to_string(),
-            format!("{paper_tf:.1}"),
-            format!("{ours:.1}"),
-            fmt::pct(err),
-        ]);
-        json_rows.push(Json::obj(vec![
-            ("label", Json::str(label)),
-            ("paper_tflops", Json::num(paper_tf)),
-            ("ours_tflops", Json::num(ours)),
-        ]));
-    }
+    let table = if is_testbed {
+        let mut table = Table::new(&["ceiling", "paper (TFLOP/s)", "ours (TFLOP/s)", "err"]);
+        for (label, paper_tf) in PAPER {
+            let ours = ceilings.compute(label).unwrap_or(0.0) / 1000.0;
+            let err = crate::util::stats::rel_diff(ours, paper_tf);
+            table.row(&[
+                label.to_string(),
+                format!("{paper_tf:.1}"),
+                format!("{ours:.1}"),
+                fmt::pct(err),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("label", Json::str(label)),
+                ("paper_tflops", Json::num(paper_tf)),
+                ("ours_tflops", Json::num(ours)),
+            ]));
+        }
+        table
+    } else {
+        let mut table = Table::new(&["ceiling", "swept (TFLOP/s)"]);
+        for (label, gf) in &ceilings.compute_gflops {
+            table.row(&[label.clone(), format!("{:.1}", gf / 1000.0)]);
+            json_rows.push(Json::obj(vec![
+                ("label", Json::str(label)),
+                ("ours_tflops", Json::num(gf / 1000.0)),
+            ]));
+        }
+        table
+    };
     let mut bw_table = Table::new(&["level", "GB/s (swept)"]);
     for level in MemLevel::ALL {
         bw_table.row(&[
@@ -51,23 +75,27 @@ pub fn generate() -> Result<Artifact> {
 
     // Chart: device ceilings only (empty profile).
     let model = RooflineModel {
-        ceilings: Ceilings::from_spec(&spec),
+        ceilings: Ceilings::from_spec(spec),
         points: Vec::new(),
         device_name: spec.name.clone(),
     };
     let chart = RooflineChart::new(
         &model,
-        ChartConfig::paper_style("Fig. 1 — V100 Roofline ceilings (ERT, modeled)"),
+        ChartConfig::paper_style(&format!(
+            "Fig. 1 — {} Roofline ceilings (ERT, modeled)",
+            spec.name
+        )),
     );
 
     let text = format!(
-        "Fig. 1 — ERT machine characterization (V100)\n\n{}\n{}",
+        "Fig. 1 — ERT machine characterization ({})\n\n{}\n{}",
+        spec.name,
         table.render(),
         bw_table.render()
     );
     Ok(Artifact {
         id: "fig1".into(),
-        title: "ERT roofline ceilings (V100)".into(),
+        title: format!("ERT roofline ceilings ({})", spec.name),
         text,
         json: Json::obj(vec![
             ("ceilings", Json::arr(json_rows)),
@@ -103,5 +131,16 @@ mod tests {
         }
         assert!(a.svg.is_some());
         assert!(a.text.contains("TensorCore"));
+    }
+
+    #[test]
+    fn fig1_generates_for_alternate_devices() {
+        // Non-testbed devices: swept ceilings, no paper column, device
+        // named in caption and chart.
+        let spec = GpuSpec::a100();
+        let a = generate_for(&spec).unwrap();
+        assert!(a.text.contains("A100-SXM4-40GB"), "{}", a.text);
+        assert!(!a.text.contains("paper (TFLOP/s)"), "{}", a.text);
+        assert!(a.svg.unwrap().contains("A100-SXM4-40GB"));
     }
 }

@@ -9,8 +9,13 @@ use crate::util::{Json, Table};
 use super::Artifact;
 
 pub fn generate() -> Result<Artifact> {
-    let spec = GpuSpec::v100();
-    let sweep = gemm_sweep(&spec);
+    generate_for(&crate::device::registry::default_spec())
+}
+
+/// Fig. 2 on an explicit device (the paper asymptote note only applies
+/// on the V100 testbed; the sweep itself is device-parametric).
+pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
+    let sweep = gemm_sweep(spec);
 
     let mut table = Table::new(&["M=N=K", "cuBLAS (TFLOP/s)", "wmma (TFLOP/s)", "cuBLAS %peak"]);
     let mut rows = Vec::new();
@@ -28,12 +33,14 @@ pub fn generate() -> Result<Artifact> {
             ("wmma_tflops", Json::num(wmma.tflops)),
         ]));
     }
-    let svg = line_chart(&spec, &sweep);
+    let svg = line_chart(spec, &sweep);
     Ok(Artifact {
         id: "fig2".into(),
-        title: "Tensor-core GEMM vs matrix size (Fig. 2)".into(),
+        title: format!("Tensor-core GEMM vs matrix size (Fig. 2, {})", spec.name),
         text: format!(
-            "Fig. 2 — TC GEMM sweep (paper asymptotes: cuBLAS 103.7 TFLOP/s @96.5%, wmma 58 @54%)\n\n{}",
+            "Fig. 2 — TC GEMM sweep on {} (paper asymptotes on the V100 testbed: \
+             cuBLAS 103.7 TFLOP/s @96.5%, wmma 58 @54%)\n\n{}",
+            spec.name,
             table.render()
         ),
         json: Json::obj(vec![("rows", Json::arr(rows))]),

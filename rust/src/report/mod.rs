@@ -56,16 +56,24 @@ pub const ALL_IDS: [&str; 11] = [
     "fig1", "tab1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "tab3",
 ];
 
-/// Generate one artifact by id.
+/// Generate one artifact by id on the default (paper-testbed) device.
 pub fn generate(id: &str) -> Result<Artifact> {
+    generate_for(&crate::device::registry::default_spec(), id)
+}
+
+/// Generate one artifact by id on an explicit device. The paper
+/// reference columns only apply on the V100 testbed; the other
+/// generators carry the device name in their captions so cross-device
+/// artifact sets stay tellable apart.
+pub fn generate_for(spec: &crate::device::GpuSpec, id: &str) -> Result<Artifact> {
     match id {
-        "fig1" => fig1::generate(),
-        "tab1" => tab1::generate(),
-        "fig2" => fig2::generate(),
+        "fig1" => fig1::generate_for(spec),
+        "tab1" => tab1::generate_for(spec),
+        "fig2" => fig2::generate_for(spec),
         "fig3" | "fig4" | "fig5" | "fig6" | "fig7" | "fig8" | "fig9" => {
-            deepcam_figs::generate(id)
+            deepcam_figs::generate_for(spec, id)
         }
-        "tab3" => tab3::generate(),
+        "tab3" => tab3::generate_for(spec),
         other => anyhow::bail!("unknown artifact id '{other}' (have {ALL_IDS:?})"),
     }
 }

@@ -8,7 +8,12 @@ use crate::util::{fmt, Json, Table};
 use super::Artifact;
 
 pub fn generate() -> Result<Artifact> {
-    let spec = GpuSpec::v100();
+    generate_for(&crate::device::registry::default_spec())
+}
+
+/// Table I on an explicit device: the ladder *model* evaluates on any
+/// spec; the paper column is the published V100 measurement.
+pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
     let mut table = Table::new(&[
         "Version",
         "Implementation",
@@ -18,13 +23,13 @@ pub fn generate() -> Result<Artifact> {
     ]);
     let mut rows = Vec::new();
     for v in ladder() {
-        let model = v.tflops(&spec);
+        let model = v.tflops(spec);
         table.row(&[
             v.name.to_string(),
             v.description.to_string(),
             format!("{:.3}", v.paper_tflops),
             format!("{model:.3}"),
-            fmt::pct(v.error_vs_paper(&spec)),
+            fmt::pct(v.error_vs_paper(spec)),
         ]);
         rows.push(Json::obj(vec![
             ("version", Json::str(v.name)),
@@ -36,7 +41,11 @@ pub fn generate() -> Result<Artifact> {
     Ok(Artifact {
         id: "tab1".into(),
         title: "FP16 performance ladder on the CUDA core (Table I)".into(),
-        text: format!("Table I — FP16 CUDA-core tuning ladder (V100)\n\n{}", table.render()),
+        text: format!(
+            "Table I — FP16 CUDA-core tuning ladder ({})\n\n{}",
+            spec.name,
+            table.render()
+        ),
         json: Json::obj(vec![("rows", Json::arr(rows))]),
         svg: None,
         csv: None,

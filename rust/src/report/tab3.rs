@@ -29,13 +29,19 @@ pub struct Census {
 }
 
 pub fn census() -> Census {
+    census_for(&crate::device::registry::default_spec())
+}
+
+/// Census on an explicit device (the zero-AI classification itself is
+/// device-independent, but lowering needs the device's spec).
+pub fn census_for(spec: &GpuSpec) -> Census {
     // Shares the process-wide paper-scale graph with the figure
     // generators (see `deepcam_figs::paper_graph`).
     let graph = super::deepcam_figs::paper_graph();
     Census {
-        tf: lower(graph, Framework::TensorFlow, Policy::O1),
-        pt: lower(graph, Framework::PyTorch, Policy::O1),
-        spec: GpuSpec::v100(),
+        tf: lower(graph, Framework::TensorFlow, Policy::O1, spec),
+        pt: lower(graph, Framework::PyTorch, Policy::O1, spec),
+        spec: spec.clone(),
     }
 }
 
@@ -81,7 +87,12 @@ impl Census {
 }
 
 pub fn generate() -> Result<Artifact> {
-    let c = census();
+    generate_for(&crate::device::registry::default_spec())
+}
+
+/// Table III on an explicit device, named in the caption.
+pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
+    let c = census_for(spec);
     let mut table = Table::new(&["segment", "zero-AI", "total", "frac (ours)", "frac (paper)"]);
     let mut rows = Vec::new();
     for (key, paper_frac) in PAPER_FRACTIONS {
@@ -105,9 +116,10 @@ pub fn generate() -> Result<Artifact> {
     let tf_total = c.total_zero_ai(Framework::TensorFlow);
     let pt_total = c.total_zero_ai(Framework::PyTorch);
     let text = format!(
-        "Table III — zero-AI kernel invocations (one training step)\n\n{}\n\
+        "Table III — zero-AI kernel invocations (one training step, {})\n\n{}\n\
          TF total zero-AI: {tf_total}  |  PyTorch total zero-AI: {pt_total}  \
          (paper ratio 2137/1046 = 2.04; ours {:.2})\n",
+        c.spec.name,
         table.render(),
         tf_total as f64 / pt_total.max(1) as f64
     );

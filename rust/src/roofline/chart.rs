@@ -219,9 +219,18 @@ impl<'a> RooflineChart<'a> {
 
     fn push_bandwidth_ceilings(&self, svg: &mut String) {
         let c = &self.config;
+        // Cross-device overlays carry several ceilings per level (one
+        // per device, same color); repeats render dashed so the devices
+        // stay tellable apart. Single-device charts are unaffected.
+        let mut seen_levels: Vec<MemLevel> = Vec::new();
         for bw in &self.model.ceilings.bandwidth {
-            // perf = AI * BW ; clip at the max compute ceiling.
-            let max_perf = self.model.ceilings.max_flops();
+            let repeat = seen_levels.contains(&bw.level);
+            seen_levels.push(bw.level);
+            // perf = AI * BW ; clip at this ceiling's own compute roof
+            // (its device's, for merged cross-device sets), else the
+            // set's global maximum.
+            let max_perf =
+                bw.clip_flops_per_sec.unwrap_or_else(|| self.model.ceilings.max_flops());
             let ai_start = c.ai_min;
             let perf_start = ai_start * bw.bytes_per_sec;
             let ai_end = (max_perf / bw.bytes_per_sec).min(c.ai_max);
@@ -229,8 +238,9 @@ impl<'a> RooflineChart<'a> {
             let (x1, y1) = (self.x(ai_end), self.y(ai_end * bw.bytes_per_sec));
             let _ = write!(
                 svg,
-                r##"<line x1="{x0:.1}" y1="{y0:.1}" x2="{x1:.1}" y2="{y1:.1}" stroke="{color}" stroke-width="1.2"/><text x="{tx:.1}" y="{ty:.1}" font-size="10" font-family="sans-serif" fill="{color}">{label}</text>"##,
+                r##"<line x1="{x0:.1}" y1="{y0:.1}" x2="{x1:.1}" y2="{y1:.1}" stroke="{color}" stroke-width="1.2"{dash}/><text x="{tx:.1}" y="{ty:.1}" font-size="10" font-family="sans-serif" fill="{color}">{label}</text>"##,
                 color = level_color(bw.level),
+                dash = if repeat { r#" stroke-dasharray="5,4""# } else { "" },
                 tx = x0 + 8.0,
                 ty = y0 - 6.0,
                 label = xml_escape(&bw.label),

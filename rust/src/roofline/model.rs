@@ -17,6 +17,12 @@ pub struct BandwidthCeiling {
     pub label: String,
     pub level: MemLevel,
     pub bytes_per_sec: f64,
+    /// Compute roof this diagonal clips at on the chart. `None` = the
+    /// ceiling set's global [`Ceilings::max_flops`] (the single-device
+    /// case); merged cross-device sets pin each diagonal to its own
+    /// device's roof so a slower device's bandwidth lines never extend
+    /// past that device's peak.
+    pub clip_flops_per_sec: Option<f64>,
 }
 
 /// The full ceiling set for a device (Fig. 1).
@@ -56,8 +62,45 @@ impl Ceilings {
                 ),
                 level,
                 bytes_per_sec: spec.bandwidth(level),
+                clip_flops_per_sec: None,
             })
             .collect();
+        Ceilings { compute, bandwidth }
+    }
+
+    /// Union of several devices' headline ceilings, device-tagged — the
+    /// cross-device overlay chart. To keep the chart readable each
+    /// device contributes its *top* compute ceiling (the tensor roof)
+    /// plus all bandwidth diagonals; the full per-device ceiling set
+    /// lives in that device's own artifact.
+    pub fn merged<'a, I>(specs: I) -> Ceilings
+    where
+        I: IntoIterator<Item = &'a GpuSpec>,
+    {
+        let mut compute = Vec::new();
+        let mut bandwidth = Vec::new();
+        for spec in specs {
+            let own = Ceilings::from_spec(spec);
+            let roof = own.max_flops();
+            if let Some(top) = own
+                .compute
+                .iter()
+                .max_by(|a, b| a.flops_per_sec.partial_cmp(&b.flops_per_sec).unwrap())
+            {
+                compute.push(ComputeCeiling {
+                    label: format!("{} {}", spec.name, top.label),
+                    flops_per_sec: top.flops_per_sec,
+                });
+            }
+            bandwidth.extend(own.bandwidth.into_iter().map(|b| BandwidthCeiling {
+                label: format!("{} {}", spec.name, b.label),
+                level: b.level,
+                bytes_per_sec: b.bytes_per_sec,
+                // Clip at this device's own roof, not the overlay's
+                // global maximum — see the field docs.
+                clip_flops_per_sec: Some(roof),
+            }));
+        }
         Ceilings { compute, bandwidth }
     }
 
@@ -240,6 +283,37 @@ mod tests {
         let profile = Session::standard(&spec).profile(&[KernelInvocation::once(g)]);
         let model = RooflineModel::from_profile(&spec, &profile);
         assert!(!model.points[0].is_streaming());
+    }
+
+    #[test]
+    fn merged_ceilings_tag_labels_with_device_names() {
+        let v100 = GpuSpec::v100();
+        let a100 = GpuSpec::a100();
+        let m = Ceilings::merged([&v100, &a100]);
+        // One top compute ceiling per device, all bandwidths per device.
+        assert_eq!(m.compute.len(), 2);
+        assert_eq!(m.bandwidth.len(), 6);
+        assert!(m.compute.iter().any(|c| c.label.starts_with("V100-SXM2-16GB")));
+        assert!(m.compute.iter().any(|c| c.label.starts_with("A100-SXM4-40GB")));
+        assert!((m.max_flops() - a100.achievable_tensor_flops()).abs() < 1.0);
+        // Each device's diagonals clip at that device's own roof, not
+        // the overlay's global (A100) maximum.
+        for b in &m.bandwidth {
+            let roof = b.clip_flops_per_sec.unwrap();
+            if b.label.starts_with("V100") {
+                assert!((roof - v100.achievable_tensor_flops()).abs() < 1.0, "{}", b.label);
+            } else {
+                assert!((roof - a100.achievable_tensor_flops()).abs() < 1.0, "{}", b.label);
+            }
+        }
+        // Single-device ceilings stay unclipped (global max = own roof).
+        assert!(Ceilings::from_spec(&v100)
+            .bandwidth
+            .iter()
+            .all(|b| b.clip_flops_per_sec.is_none()));
+        // `bound` keeps working (first matching level wins — the
+        // first-listed device, which is the comparison baseline).
+        assert!(m.bound(MemLevel::Hbm, 0.1) > 0.0);
     }
 
     #[test]

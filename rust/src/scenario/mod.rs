@@ -8,12 +8,16 @@
 //! cross product a first-class sweep:
 //!
 //! * [`ScenarioMatrix`] enumerates a deterministic, duplicate-free
-//!   scenario list (workload-major order);
+//!   scenario list (workload-major order) across a **device axis**
+//!   ([`crate::device::registry`]) as well as the workload, framework,
+//!   phase and AMP axes — the quick matrix stays single-device (the
+//!   registry default V100) so the CI gate's cost is flat, while the
+//!   full matrix crosses every registered device;
 //! * [`ScenarioMatrix::run`] builds each workload graph once, lowers
-//!   each (workload, framework, policy) combination once, then fans
-//!   per-scenario profiling through [`crate::exec::parallel_map`] with
-//!   one [`SharedSimCache`] — duplicate kernels *across* scenarios
-//!   simulate once for the whole sweep;
+//!   each (workload, device, framework, policy) combination once, then
+//!   fans per-scenario profiling through [`crate::exec::parallel_map`]
+//!   with one [`SharedSimCache`] *per device* — duplicate kernels
+//!   *across* scenarios simulate once for the whole sweep;
 //! * [`ScenarioResult`] exposes per-scenario hierarchical Roofline
 //!   data for every [`MemLevel`] and renders per-scenario artifacts
 //!   (kernel-table text, summary JSON, paper-style SVG, Nsight-style
@@ -21,7 +25,9 @@
 //! * [`comparison_artifact`] renders the cross-scenario report: a
 //!   summary table plus one combined Roofline chart overlaying every
 //!   scenario as a labelled aggregate point
-//!   ([`RooflineChart::overlay`]).
+//!   ([`RooflineChart::overlay`]); multi-device runs additionally get
+//!   the cross-device pivot table and merged per-device ceilings, and
+//!   [`device_comparison_artifact`] renders one overlay per device.
 //!
 //! `repro matrix` is the CLI front-end; its `--quick` mode doubles as
 //! the CI smoke for the whole stack.
@@ -29,6 +35,7 @@
 use std::collections::{BTreeSet, HashMap};
 
 use crate::cli::CliError;
+use crate::device::registry::{self as devices, DeviceEntry};
 use crate::device::{GpuSpec, MemLevel};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
 use crate::dl::workloads::{self, Scale, WorkloadSpec};
@@ -45,6 +52,7 @@ use crate::util::{fmt, Json, Table};
 #[derive(Clone, Copy, Debug)]
 pub struct Scenario {
     pub workload: &'static WorkloadSpec,
+    pub device: &'static DeviceEntry,
     pub framework: Framework,
     pub phase: Phase,
     pub policy: Policy,
@@ -52,8 +60,9 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// Stable id, safe as a file stem: `resnet-pt-forward-O1`.
-    pub fn id(&self) -> String {
+    /// The device-less id stem shared by the same cell on every device:
+    /// `resnet-pt-forward-O1` (the cross-device pivot key).
+    pub fn base_id(&self) -> String {
         format!(
             "{}-{}-{}-{}",
             self.workload.name,
@@ -63,14 +72,27 @@ impl Scenario {
         )
     }
 
+    /// Stable id, safe as a file stem. On the default device this is
+    /// the historical `resnet-pt-forward-O1` form (golden catalogs and
+    /// CI artifact layouts are pinned to it); other devices append
+    /// their short tag: `resnet-pt-forward-O1@a100`.
+    pub fn id(&self) -> String {
+        if self.device.name == devices::default_entry().name {
+            self.base_id()
+        } else {
+            format!("{}@{}", self.base_id(), self.device.short)
+        }
+    }
+
     /// Human title for charts and report headers.
     pub fn title(&self) -> String {
         format!(
-            "{} · {} {} (AMP {})",
+            "{} · {} {} (AMP {}) on {}",
             self.workload.name,
             self.framework.name(),
             self.phase.name(),
-            self.policy.name()
+            self.policy.name(),
+            self.device.display,
         )
     }
 }
@@ -79,6 +101,7 @@ impl Scenario {
 #[derive(Debug)]
 pub struct ScenarioMatrix {
     pub workloads: Vec<&'static WorkloadSpec>,
+    pub devices: Vec<&'static DeviceEntry>,
     pub frameworks: Vec<Framework>,
     pub phases: Vec<Phase>,
     pub policies: Vec<Policy>,
@@ -86,11 +109,13 @@ pub struct ScenarioMatrix {
 }
 
 impl ScenarioMatrix {
-    /// The full sweep: every workload × both frameworks × all three
-    /// phases × {O0, O1, O2}, at paper-style scale.
+    /// The full sweep: every workload × **every registered device** ×
+    /// both frameworks × all three phases × {O0, O1, O2}, at
+    /// paper-style scale.
     pub fn full() -> ScenarioMatrix {
         ScenarioMatrix {
             workloads: workloads::registry().iter().collect(),
+            devices: devices::entries().iter().collect(),
             frameworks: Framework::ALL.to_vec(),
             phases: Phase::ALL.to_vec(),
             policies: vec![Policy::O0, Policy::O1, Policy::O2],
@@ -100,9 +125,12 @@ impl ScenarioMatrix {
 
     /// The CI smoke sweep: every workload at quick scale, forward +
     /// backward, {O0, O1} — 32 scenarios covering the whole stack.
+    /// Deliberately single-device (the registry default V100) so the
+    /// required CI gate's cost stays flat as devices are added.
     pub fn quick() -> ScenarioMatrix {
         ScenarioMatrix {
             workloads: workloads::registry().iter().collect(),
+            devices: vec![devices::default_entry()],
             frameworks: Framework::ALL.to_vec(),
             phases: vec![Phase::Forward, Phase::Backward],
             policies: vec![Policy::O0, Policy::O1],
@@ -131,19 +159,50 @@ impl ScenarioMatrix {
         Ok(self)
     }
 
+    /// Restrict the device axis to a comma-separated name/alias list
+    /// (`"all"` selects every registered device); unknown names are a
+    /// clean [`CliError`] with the registry's did-you-mean hint.
+    pub fn with_devices(mut self, list: &str) -> Result<ScenarioMatrix, CliError> {
+        if list == "all" {
+            self.devices = devices::entries().iter().collect();
+            return Ok(self);
+        }
+        let mut selected: Vec<&'static DeviceEntry> = Vec::new();
+        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let d = devices::lookup(name)?;
+            if !selected.iter().any(|s| s.name == d.name) {
+                selected.push(d);
+            }
+        }
+        if selected.is_empty() {
+            return Err(CliError("--device selected nothing (try --help)".into()));
+        }
+        self.devices = selected;
+        Ok(self)
+    }
+
     /// Flatten the axes into a scenario list: workload-major, then
-    /// framework, phase, policy. Deterministic (same spec → same order)
-    /// and duplicate-free (repeated axis values collapse).
+    /// device, framework, phase, policy. Deterministic (same spec →
+    /// same order) and duplicate-free (repeated axis values collapse).
     pub fn enumerate(&self) -> Vec<Scenario> {
         let mut out = Vec::new();
         let mut seen = BTreeSet::new();
         for &workload in &self.workloads {
-            for &framework in &self.frameworks {
-                for &phase in &self.phases {
-                    for &policy in &self.policies {
-                        let sc = Scenario { workload, framework, phase, policy, scale: self.scale };
-                        if seen.insert(sc.id()) {
-                            out.push(sc);
+            for &device in &self.devices {
+                for &framework in &self.frameworks {
+                    for &phase in &self.phases {
+                        for &policy in &self.policies {
+                            let sc = Scenario {
+                                workload,
+                                device,
+                                framework,
+                                phase,
+                                policy,
+                                scale: self.scale,
+                            };
+                            if seen.insert(sc.id()) {
+                                out.push(sc);
+                            }
                         }
                     }
                 }
@@ -155,11 +214,14 @@ impl ScenarioMatrix {
     /// The scenario catalog as a text table (golden-tested; timing-free
     /// so it is stable across cost-model changes).
     pub fn catalog_table(&self) -> Table {
-        let mut t = Table::new(&["scenario", "workload", "framework", "phase", "amp", "scale"]);
+        let mut t = Table::new(&[
+            "scenario", "workload", "device", "framework", "phase", "amp", "scale",
+        ]);
         for sc in self.enumerate() {
             t.row(&[
                 sc.id(),
                 sc.workload.name.to_string(),
+                sc.device.name.to_string(),
                 sc.framework.name().to_string(),
                 sc.phase.name().to_string(),
                 sc.policy.name().to_string(),
@@ -169,29 +231,35 @@ impl ScenarioMatrix {
         t
     }
 
-    /// Run the sweep on one device:
+    /// Run the sweep:
     ///
-    /// 1. build each workload graph once (parallel across workloads);
-    /// 2. lower each (workload, framework, policy) combination once —
-    ///    the three phases of a combination share one lowering;
+    /// 1. build each workload graph once (parallel across workloads;
+    ///    graphs are device-independent);
+    /// 2. lower each (workload, device, framework, policy) combination
+    ///    once — the three phases of a combination share one lowering,
+    ///    and lowering is device-aware (tile selection, HMMA width);
     /// 3. profile every scenario through [`Session::try_profile_shared`]
-    ///    over a single [`SharedSimCache`], fanned out with
+    ///    over one [`SharedSimCache`] *per device* (the cache is keyed
+    ///    by descriptor, so each device needs its own), fanned out with
     ///    [`crate::exec::parallel_map`] (results in enumeration order).
-    pub fn run(&self, spec: &GpuSpec) -> MatrixRun {
+    pub fn run(&self) -> MatrixRun {
         let scenarios = self.enumerate();
 
         let widx: HashMap<&str, usize> =
             self.workloads.iter().enumerate().map(|(i, w)| (w.name, i)).collect();
+        let didx: HashMap<&str, usize> =
+            self.devices.iter().enumerate().map(|(i, d)| (d.name, i)).collect();
         let build_workers = crate::exec::default_workers(self.workloads.len());
         let graphs: Vec<Graph> =
             crate::exec::parallel_map(self.workloads.clone(), build_workers, |w| {
                 w.build(self.scale)
             });
+        let specs: Vec<GpuSpec> = self.devices.iter().map(|d| d.spec()).collect();
 
-        let mut combo_of: HashMap<(usize, Framework, Policy), usize> = HashMap::new();
-        let mut combos: Vec<(usize, Framework, Policy)> = Vec::new();
+        let mut combo_of: HashMap<(usize, usize, Framework, Policy), usize> = HashMap::new();
+        let mut combos: Vec<(usize, usize, Framework, Policy)> = Vec::new();
         for sc in &scenarios {
-            let key = (widx[sc.workload.name], sc.framework, sc.policy);
+            let key = (widx[sc.workload.name], didx[sc.device.name], sc.framework, sc.policy);
             if !combo_of.contains_key(&key) {
                 combo_of.insert(key, combos.len());
                 combos.push(key);
@@ -199,11 +267,12 @@ impl ScenarioMatrix {
         }
         let lower_workers = crate::exec::default_workers(combos.len());
         let traces: Vec<FrameworkTrace> =
-            crate::exec::parallel_map(combos, lower_workers, |(wi, fw, policy)| {
-                lower(&graphs[wi], fw, policy)
+            crate::exec::parallel_map(combos, lower_workers, |(wi, di, fw, policy)| {
+                lower(&graphs[wi], fw, policy, &specs[di])
             });
 
-        let cache = SharedSimCache::new();
+        let caches: Vec<SharedSimCache> =
+            self.devices.iter().map(|_| SharedSimCache::new()).collect();
         let prof_workers = crate::exec::default_workers(scenarios.len());
         // Split the worker budget between the two fan-out levels: the
         // outer scenario map already uses up to `prof_workers` cores,
@@ -214,13 +283,15 @@ impl ScenarioMatrix {
         let inner_threads =
             (crate::exec::default_workers(usize::MAX) / prof_workers.max(1)).max(1);
         let session_cfg = SessionConfig { threads: Some(inner_threads), ..Default::default() };
-        let session = Session::new(spec, session_cfg);
+        let sessions: Vec<Session> =
+            specs.iter().map(|spec| Session::new(spec, session_cfg.clone())).collect();
         let profiles: Vec<Profile> =
             crate::exec::parallel_map(scenarios.clone(), prof_workers, |sc| {
-                let key = (widx[sc.workload.name], sc.framework, sc.policy);
+                let di = didx[sc.device.name];
+                let key = (widx[sc.workload.name], di, sc.framework, sc.policy);
                 let trace = traces[combo_of[&key]].phase(sc.phase);
-                session
-                    .try_profile_shared(trace, &cache)
+                sessions[di]
+                    .try_profile_shared(trace, &caches[di])
                     .expect("standard session on a lowered trace cannot fail")
             });
 
@@ -229,7 +300,11 @@ impl ScenarioMatrix {
             .zip(profiles)
             .map(|(scenario, profile)| ScenarioResult { scenario, profile })
             .collect();
-        MatrixRun { results, sim_stats: cache.stats() }
+        let sim_stats = caches.iter().fold((0, 0), |(h, s), c| {
+            let (hits, sims) = c.stats();
+            (h + hits, s + sims)
+        });
+        MatrixRun { results, sim_stats }
     }
 }
 
@@ -237,8 +312,27 @@ impl ScenarioMatrix {
 /// shared-cache statistics.
 pub struct MatrixRun {
     pub results: Vec<ScenarioResult>,
-    /// (cache hits, distinct simulations) across the whole sweep.
+    /// (cache hits, distinct simulations) across the whole sweep,
+    /// summed over the per-device caches.
     pub sim_stats: (u64, u64),
+}
+
+impl MatrixRun {
+    /// The distinct devices this run covered, in first-seen order.
+    pub fn device_entries(&self) -> Vec<&'static DeviceEntry> {
+        let mut out: Vec<&'static DeviceEntry> = Vec::new();
+        for r in &self.results {
+            if !out.iter().any(|d| d.name == r.scenario.device.name) {
+                out.push(r.scenario.device);
+            }
+        }
+        out
+    }
+
+    /// Results restricted to one device, in enumeration order.
+    pub fn results_for(&self, device: &DeviceEntry) -> Vec<&ScenarioResult> {
+        self.results.iter().filter(|r| r.scenario.device.name == device.name).collect()
+    }
 }
 
 /// One profiled scenario.
@@ -307,9 +401,10 @@ impl ScenarioResult {
         }
     }
 
-    /// Full per-kernel hierarchical Roofline dataset for this scenario.
-    pub fn roofline_model(&self, spec: &GpuSpec) -> RooflineModel {
-        RooflineModel::from_profile(spec, &self.profile)
+    /// Full per-kernel hierarchical Roofline dataset for this scenario,
+    /// with ceilings from the scenario's own device.
+    pub fn roofline_model(&self) -> RooflineModel {
+        RooflineModel::from_profile(&self.scenario.device.spec(), &self.profile)
     }
 
     /// The whole scenario as one chart point (triplet of per-level AI
@@ -335,9 +430,11 @@ impl ScenarioResult {
     }
 
     /// Per-scenario artifact: kernel-table text, summary JSON,
-    /// paper-style SVG chart, and the Nsight-style counter CSV.
-    pub fn to_artifact(&self, spec: &GpuSpec) -> Artifact {
-        let model = self.roofline_model(spec);
+    /// paper-style SVG chart, and the Nsight-style counter CSV. The
+    /// scenario's device supplies the ceilings and is recorded in the
+    /// JSON payload (and the CSV's `# device=` stamp).
+    pub fn to_artifact(&self) -> Artifact {
+        let model = self.roofline_model();
         let bound_violation = model.validate_bounds().err();
         let title = self.scenario.title();
         let chart = RooflineChart::hierarchical(&model, &title);
@@ -371,6 +468,8 @@ impl ScenarioResult {
             text,
             json: Json::obj(vec![
                 ("workload", Json::str(self.scenario.workload.name)),
+                ("device", Json::str(self.scenario.device.name)),
+                ("device_spec", Json::str(self.scenario.device.display)),
                 ("framework", Json::str(self.scenario.framework.name())),
                 ("phase", Json::str(self.scenario.phase.name())),
                 ("amp", Json::str(self.scenario.policy.name())),
@@ -447,21 +546,23 @@ pub fn comparison_table(results: &[ScenarioResult]) -> Table {
     t
 }
 
-/// Comparison CSV: one summary row per scenario.
+/// Comparison CSV: one summary row per scenario (the `device` column is
+/// the registry name, so cross-device sweeps pivot cleanly).
 pub fn comparison_csv(results: &[ScenarioResult]) -> String {
     use std::fmt::Write as _;
-    let mut out = String::with_capacity(128 + results.len() * 160);
+    let mut out = String::with_capacity(128 + results.len() * 176);
     out.push_str(
-        "scenario,workload,framework,phase,amp,seconds,gflops_per_sec,\
+        "scenario,workload,device,framework,phase,amp,seconds,gflops_per_sec,\
          ai_l1,ai_l2,ai_hbm,zero_ai_fraction,tc_flop_fraction,kernels,invocations\n",
     );
     for r in results {
         let ai = |l: MemLevel| r.ai(l).unwrap_or(0.0);
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{:.6e},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{},{}",
+            "{},{},{},{},{},{},{:.6e},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{},{}",
             r.id(),
             r.scenario.workload.name,
+            r.scenario.device.name,
             r.scenario.framework.name(),
             r.scenario.phase.name(),
             r.scenario.policy.name(),
@@ -479,24 +580,83 @@ pub fn comparison_csv(results: &[ScenarioResult]) -> String {
     out
 }
 
+/// Cross-device pivot: one row per device-less scenario stem, one
+/// (time, GFLOP/s) column pair per device — the "how does the picture
+/// shift from V100 to A100" table. Only meaningful for multi-device
+/// runs; rows keep enumeration order of the first device.
+pub fn cross_device_table(run: &MatrixRun) -> Table {
+    let entries = run.device_entries();
+    let mut headers: Vec<String> = vec!["scenario".into()];
+    for d in &entries {
+        headers.push(format!("time({})", d.short));
+        headers.push(format!("GFLOP/s({})", d.short));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut aligns = vec![Align::Left];
+    aligns.resize(headers.len(), Align::Right);
+    let mut t = Table::new(&header_refs).aligns(&aligns);
+
+    let mut stems: Vec<String> = Vec::new();
+    let mut by_cell: HashMap<(String, &str), &ScenarioResult> = HashMap::new();
+    for r in &run.results {
+        let stem = r.scenario.base_id();
+        if !stems.contains(&stem) {
+            stems.push(stem.clone());
+        }
+        by_cell.insert((stem, r.scenario.device.name), r);
+    }
+    for stem in stems {
+        let mut row = vec![stem.clone()];
+        for d in &entries {
+            match by_cell.get(&(stem.clone(), d.name)) {
+                Some(r) if !r.is_empty() => {
+                    row.push(fmt::duration(r.profile.total_seconds()));
+                    row.push(format!("{:.1}", r.flops_per_sec() / 1e9));
+                }
+                _ => {
+                    row.push("-".into());
+                    row.push("-".into());
+                }
+            }
+        }
+        t.row(&row);
+    }
+    t
+}
+
 /// The cross-scenario report: comparison table + combined overlay
 /// Roofline chart (every scenario as one labelled aggregate triplet)
 /// + machine-readable JSON/CSV.
-pub fn comparison_artifact(spec: &GpuSpec, run: &MatrixRun) -> Artifact {
+///
+/// Single-device runs get that device's full ceiling set (the
+/// historical `matrix` artifact, byte-compatible with the pre-registry
+/// pipeline). Multi-device runs overlay every device's headline
+/// ceilings ([`Ceilings::merged`], repeats dashed) and append the
+/// cross-device pivot table.
+pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
+    let entries = run.device_entries();
+    let specs: Vec<GpuSpec> = if entries.is_empty() {
+        vec![devices::default_spec()]
+    } else {
+        entries.iter().map(|d| d.spec()).collect()
+    };
+    let multi_device = specs.len() > 1;
     let table = comparison_table(&run.results);
     let mut points: Vec<KernelPoint> =
         run.results.iter().filter_map(ScenarioResult::aggregate_point).collect();
     points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
-    let model = RooflineModel {
-        ceilings: Ceilings::from_spec(spec),
-        points,
-        device_name: spec.name.clone(),
+    let (ceilings, device_name) = if multi_device {
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        (Ceilings::merged(specs.iter()), names.join(" vs "))
+    } else {
+        (Ceilings::from_spec(&specs[0]), specs[0].name.clone())
     };
+    let model = RooflineModel { ceilings, points, device_name };
     let chart =
         RooflineChart::overlay(&model, "Scenario matrix — aggregate hierarchical Roofline");
     let (hits, sims) = run.sim_stats;
     let non_empty = run.results.iter().filter(|r| !r.is_empty()).count();
-    let text = format!(
+    let mut text = format!(
         "scenario matrix: {} scenarios ({} with kernels) | \
          shared-cache simulations {} (cache hits {})\n\n{}",
         run.results.len(),
@@ -505,16 +665,28 @@ pub fn comparison_artifact(spec: &GpuSpec, run: &MatrixRun) -> Artifact {
         hits,
         table.render()
     );
+    if multi_device {
+        text.push_str(&format!(
+            "\ncross-device comparison ({}):\n{}",
+            model.device_name,
+            cross_device_table(run).render()
+        ));
+    }
     let json = Json::obj(vec![
         ("n_scenarios", Json::num(run.results.len() as f64)),
         ("n_non_empty", Json::num(non_empty as f64)),
         ("shared_sim_count", Json::num(sims as f64)),
         ("shared_sim_hits", Json::num(hits as f64)),
         (
+            "devices",
+            Json::arr(entries.iter().map(|d| Json::str(d.name))),
+        ),
+        (
             "scenarios",
             Json::arr(run.results.iter().map(|r| {
                 Json::obj(vec![
                     ("scenario", Json::str(r.id())),
+                    ("device", Json::str(r.scenario.device.name)),
                     ("total_seconds", Json::num(r.profile.total_seconds())),
                     ("gflops_per_sec", Json::num(r.flops_per_sec() / 1e9)),
                     ("zero_ai_fraction", Json::num(r.zero_ai_fraction())),
@@ -534,6 +706,56 @@ pub fn comparison_artifact(spec: &GpuSpec, run: &MatrixRun) -> Artifact {
     }
 }
 
+/// One device's slice of a multi-device run as its own overlay
+/// artifact (`matrix@<short>`): that device's scenarios against its
+/// own full ceiling set.
+pub fn device_comparison_artifact(run: &MatrixRun, device: &DeviceEntry) -> Artifact {
+    let spec = device.spec();
+    let results = run.results_for(device);
+    let mut points: Vec<KernelPoint> =
+        results.iter().filter_map(|r| r.aggregate_point()).collect();
+    points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
+    let model = RooflineModel {
+        ceilings: Ceilings::from_spec(&spec),
+        points,
+        device_name: spec.name.clone(),
+    };
+    let title = format!("Scenario matrix on {} — hierarchical Roofline", spec.name);
+    let chart = RooflineChart::overlay(&model, &title);
+    let mut t = Table::new(&["scenario", "time", "GFLOP/s", "zero-AI", "TC"]).aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in &results {
+        if r.is_empty() {
+            t.row(&[r.id(), "-".into(), "-".into(), "-".into(), "-".into()]);
+        } else {
+            t.row(&[
+                r.id(),
+                fmt::duration(r.profile.total_seconds()),
+                format!("{:.1}", r.flops_per_sec() / 1e9),
+                fmt::pct(r.zero_ai_fraction()),
+                fmt::pct(r.tc_fraction()),
+            ]);
+        }
+    }
+    Artifact {
+        id: format!("matrix@{}", device.short),
+        title: title.clone(),
+        text: format!("{title}\n\n{}", t.render()),
+        json: Json::obj(vec![
+            ("device", Json::str(device.name)),
+            ("device_spec", Json::str(&spec.name)),
+            ("n_scenarios", Json::num(results.len() as f64)),
+        ]),
+        svg: Some(chart.to_svg()),
+        csv: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -541,6 +763,7 @@ mod tests {
     fn tiny_matrix() -> ScenarioMatrix {
         ScenarioMatrix {
             workloads: vec![workloads::lookup("deepcam-lite").unwrap()],
+            devices: vec![devices::default_entry()],
             frameworks: vec![Framework::PyTorch],
             phases: vec![Phase::Forward, Phase::Optimizer],
             policies: vec![Policy::O1],
@@ -561,12 +784,19 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(dedup.len(), ids.len());
+        // Quick mode is single-device on the registry default, so ids
+        // stay in the historical device-less form.
+        assert!(ids.iter().all(|id| !id.contains('@')), "{ids:?}");
     }
 
     #[test]
-    fn full_matrix_covers_all_phases_and_policies() {
+    fn full_matrix_covers_all_devices_phases_and_policies() {
+        let n_devices = devices::entries().len();
         let scenarios = ScenarioMatrix::full().enumerate();
-        assert_eq!(scenarios.len(), 4 * 2 * 3 * 3);
+        assert_eq!(scenarios.len(), 4 * n_devices * 2 * 3 * 3);
+        // Default-device cells keep legacy ids; others carry the tag.
+        assert!(scenarios.iter().any(|s| s.id() == "resnet-pt-forward-O1"));
+        assert!(scenarios.iter().any(|s| s.id() == "resnet-pt-forward-O1@a100"));
     }
 
     #[test]
@@ -574,6 +804,7 @@ mod tests {
         let mut m = tiny_matrix();
         m.policies = vec![Policy::O1, Policy::O1];
         m.frameworks = vec![Framework::PyTorch, Framework::PyTorch];
+        m.devices = vec![devices::default_entry(), devices::default_entry()];
         assert_eq!(m.enumerate().len(), 2, "phases only");
     }
 
@@ -588,15 +819,27 @@ mod tests {
     }
 
     #[test]
+    fn with_devices_filters_and_rejects_unknown() {
+        let m = ScenarioMatrix::quick().with_devices("a100, t4").unwrap();
+        assert_eq!(m.devices.len(), 2);
+        assert_eq!(m.devices[0].name, "a100-sxm4-40gb");
+        let m = ScenarioMatrix::quick().with_devices("all").unwrap();
+        assert_eq!(m.devices.len(), devices::entries().len());
+        let err = ScenarioMatrix::quick().with_devices("a100,h100").unwrap_err();
+        assert!(err.0.contains("unknown device 'h100'"), "{}", err.0);
+        assert!(ScenarioMatrix::quick().with_devices(" , ").is_err());
+    }
+
+    #[test]
     fn matrix_profiles_identical_to_standalone_sessions() {
         // The shared cache + fan-out must not change a single bit
         // relative to profiling each scenario alone.
-        let spec = GpuSpec::v100();
-        let run = tiny_matrix().run(&spec);
+        let run = tiny_matrix().run();
         assert_eq!(run.results.len(), 2);
         for r in &run.results {
+            let spec = r.scenario.device.spec();
             let g = r.scenario.workload.build(r.scenario.scale);
-            let t = lower(&g, r.scenario.framework, r.scenario.policy);
+            let t = lower(&g, r.scenario.framework, r.scenario.policy, &spec);
             let direct = Session::standard(&spec).profile(t.phase(r.scenario.phase));
             assert_eq!(r.profile, direct, "{}", r.id());
         }
@@ -606,11 +849,10 @@ mod tests {
     fn shared_cache_dedupes_across_scenarios() {
         // O0 vs O1 backward share many descriptors; two-policy sweep
         // must hit the cache.
-        let spec = GpuSpec::v100();
         let mut m = tiny_matrix();
         m.phases = vec![Phase::Forward, Phase::Backward];
         m.policies = vec![Policy::O0, Policy::O1];
-        let run = m.run(&spec);
+        let run = m.run();
         let (hits, sims) = run.sim_stats;
         assert!(sims > 0);
         assert!(hits > 0, "expected cross-scenario kernel reuse, got {hits} hits / {sims} sims");
@@ -618,27 +860,32 @@ mod tests {
 
     #[test]
     fn aggregate_points_and_artifacts() {
-        let spec = GpuSpec::v100();
-        let run = tiny_matrix().run(&spec);
+        let run = tiny_matrix().run();
         for r in &run.results {
             assert!(!r.is_empty(), "{}", r.id());
             let p = r.aggregate_point().unwrap();
             assert!(p.flops_per_sec > 0.0);
             assert_eq!(p.ai.len(), MemLevel::ALL.len());
-            let a = r.to_artifact(&spec);
+            let a = r.to_artifact();
             assert_eq!(a.id, r.id());
             assert!(a.svg.is_some() && a.csv.is_some());
             assert!(a.text.contains("kernels"));
-            // Per-scenario JSON carries the per-level AI block.
+            // Per-scenario JSON carries the per-level AI block and the
+            // device the scenario ran on.
             assert!(a.json.get("ai").unwrap().opt("HBM").is_some());
+            assert_eq!(
+                a.json.get("device").unwrap().as_str().unwrap(),
+                "v100-sxm2-16gb"
+            );
+            // The counter CSV travels with its device stamp.
+            assert!(a.csv.as_ref().unwrap().starts_with("# device=V100-SXM2-16GB"));
         }
     }
 
     #[test]
     fn comparison_artifact_overlays_all_scenarios() {
-        let spec = GpuSpec::v100();
-        let run = tiny_matrix().run(&spec);
-        let a = comparison_artifact(&spec, &run);
+        let run = tiny_matrix().run();
+        let a = comparison_artifact(&run);
         assert_eq!(a.id, "matrix");
         let svg = a.svg.as_ref().unwrap();
         let csv = a.csv.as_ref().unwrap();
@@ -651,25 +898,59 @@ mod tests {
             a.json.get("n_scenarios").unwrap().as_f64().unwrap() as usize,
             run.results.len()
         );
+        // Single-device run: no cross-device section.
+        assert!(!a.text.contains("cross-device comparison"), "{}", a.text);
+    }
+
+    #[test]
+    fn multi_device_run_compares_across_devices() {
+        // The device axis end to end: same cell on two devices → two
+        // distinct profiles, a cross-device pivot table, and a merged
+        // overlay naming both devices.
+        let mut m = tiny_matrix();
+        m.devices = vec![devices::lookup("v100").unwrap(), devices::lookup("a100").unwrap()];
+        m.phases = vec![Phase::Forward];
+        let run = m.run();
+        assert_eq!(run.results.len(), 2);
+        assert_eq!(run.results[0].id(), "deepcam-lite-pt-forward-O1");
+        assert_eq!(run.results[1].id(), "deepcam-lite-pt-forward-O1@a100");
+        assert_eq!(run.device_entries().len(), 2);
+        // The same trace is faster on the A100 model.
+        let v = run.results[0].profile.total_seconds();
+        let a = run.results[1].profile.total_seconds();
+        assert!(a < v, "a100 {a} vs v100 {v}");
+        // Per-device slices and artifacts.
+        let a100 = devices::lookup("a100").unwrap();
+        assert_eq!(run.results_for(a100).len(), 1);
+        let da = device_comparison_artifact(&run, a100);
+        assert_eq!(da.id, "matrix@a100");
+        assert!(da.svg.as_ref().unwrap().contains("A100-SXM4-40GB"));
+        // The combined artifact carries the pivot and both ceilings.
+        let c = comparison_artifact(&run);
+        assert!(c.text.contains("cross-device comparison"), "{}", c.text);
+        assert!(c.text.contains("GFLOP/s(a100)"), "{}", c.text);
+        let svg = c.svg.as_ref().unwrap();
+        assert!(svg.contains("V100-SXM2-16GB") && svg.contains("A100-SXM4-40GB"));
+        assert_eq!(c.json.get("devices").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]
     fn empty_phase_scenarios_render_without_artifacts_payload() {
         // TF optimizer phase is empty by construction.
-        let spec = GpuSpec::v100();
         let m = ScenarioMatrix {
             workloads: vec![workloads::lookup("deepcam-lite").unwrap()],
+            devices: vec![devices::default_entry()],
             frameworks: vec![Framework::TensorFlow],
             phases: vec![Phase::Optimizer],
             policies: vec![Policy::O1],
             scale: Scale::Quick,
         };
-        let run = m.run(&spec);
+        let run = m.run();
         assert_eq!(run.results.len(), 1);
         let r = &run.results[0];
         assert!(r.is_empty());
         assert!(r.aggregate_point().is_none());
-        let a = r.to_artifact(&spec);
+        let a = r.to_artifact();
         assert!(a.svg.is_none() && a.csv.is_none());
         assert!(a.text.contains("no kernels"));
         // The comparison table still carries the row.

@@ -139,12 +139,25 @@ impl Hierarchy {
     }
 }
 
-/// Build a V100-shaped hierarchy at reduced scale (keeps tests fast while
-/// preserving set/way geometry ratios).
-pub fn v100_scaled(scale_down: u64) -> Hierarchy {
-    let l1 = SetAssocCache::new(128 * 1024 / scale_down, 128, 4);
-    let l2 = SetAssocCache::new(6 * 1024 * 1024 / scale_down, 128, 16);
+/// Build a hierarchy with one device's cache geometry at reduced scale
+/// (keeps tests fast while preserving set/way geometry ratios).
+pub fn scaled(spec: &crate::device::GpuSpec, scale_down: u64) -> Hierarchy {
+    let l1 = SetAssocCache::new(
+        (spec.l1.capacity_bytes / scale_down).max(spec.l1.line_bytes * spec.l1.ways as u64),
+        spec.l1.line_bytes,
+        spec.l1.ways,
+    );
+    let l2 = SetAssocCache::new(
+        (spec.l2.capacity_bytes / scale_down).max(spec.l2.line_bytes * spec.l2.ways as u64),
+        spec.l2.line_bytes,
+        spec.l2.ways,
+    );
     Hierarchy::new(l1, l2, 4)
+}
+
+/// Back-compat shorthand: the default (V100) geometry at reduced scale.
+pub fn v100_scaled(scale_down: u64) -> Hierarchy {
+    scaled(&crate::device::registry::default_spec(), scale_down)
 }
 
 /// Drive a tiled-GEMM-like access stream: for each (i-tile, j-tile),

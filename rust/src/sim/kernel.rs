@@ -311,7 +311,7 @@ impl KernelDesc {
         // wave's panel slices device-wide.
         let bk = 32u64.min(k.max(1));
         let l1_resident = (tile * bk + bk * tile + tile * tile) * elem;
-        let l2_resident = 80 * (2 * tile) * bk * elem;
+        let l2_resident = spec.sms as u64 * (2 * tile) * bk * elem;
         // Launch geometry: output tiles, with split-K when the output is
         // too skinny to fill the device (how library wgrad kernels keep
         // SMs busy; small *square* GEMMs still suffer wave quantization

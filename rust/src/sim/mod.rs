@@ -1,5 +1,8 @@
 //! Kernel-granularity GPU performance simulator — the substrate that
-//! stands in for "a V100 + Nsight Compute" (DESIGN.md §1).
+//! stands in for "a GPU + Nsight Compute" (DESIGN.md §1). Every model
+//! is parameterized by the [`GpuSpec`] passed in (cache geometry,
+//! pipeline widths, clocks); resolve one from
+//! [`crate::device::registry`] to simulate a specific device.
 //!
 //! The simulator consumes [`KernelDesc`]s — SASS-level instruction mixes
 //! plus memory-access descriptors, as produced by the `dl` framework

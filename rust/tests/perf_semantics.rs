@@ -26,7 +26,7 @@ fn full_step_profile_bit_identical_across_optimizations() {
     // matter which of memoization / parallel fan-out is active.
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
-    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
     let all = trace.all();
     assert!(all.len() > 10, "paper-scale step should have many entries");
 
@@ -94,7 +94,7 @@ fn one_metric_per_run_still_bit_identical_under_optimizations() {
     // many-passes merge path; it must also be invariant.
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::lite());
-    let trace = lower(&graph, Framework::TensorFlow, Policy::O1);
+    let trace = lower(&graph, Framework::TensorFlow, Policy::O1, &spec);
     let all = trace.all();
 
     let mut legacy = legacy_config();

@@ -15,7 +15,7 @@ use hroofline::roofline::model::RooflineModel;
 fn full_pipeline_tf_forward() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
-    let trace = lower(&graph, Framework::TensorFlow, Policy::O1);
+    let trace = lower(&graph, Framework::TensorFlow, Policy::O1, &spec);
     let profile = Session::standard(&spec).profile(trace.phase(Phase::Forward));
     assert!(profile.n_kernels() > 5);
     assert!(profile.total_seconds() > 0.0);
@@ -39,7 +39,7 @@ fn backward_pass_dominates_forward_in_time() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
     for fw in [Framework::TensorFlow, Framework::PyTorch] {
-        let trace = lower(&graph, fw, Policy::O1);
+        let trace = lower(&graph, fw, Policy::O1, &spec);
         let fwd = Session::standard(&spec)
             .profile(trace.phase(Phase::Forward))
             .total_seconds();
@@ -56,8 +56,8 @@ fn amp_o1_speeds_up_both_frameworks() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
     for fw in [Framework::TensorFlow, Framework::PyTorch] {
-        let o0 = lower(&graph, fw, Policy::O0);
-        let o1 = lower(&graph, fw, Policy::O1);
+        let o0 = lower(&graph, fw, Policy::O0, &spec);
+        let o1 = lower(&graph, fw, Policy::O1, &spec);
         let time = |t: &hroofline::dl::lower::FrameworkTrace| {
             Session::standard(&spec).profile(&t.all()).total_seconds()
         };
@@ -73,7 +73,7 @@ fn optimizer_kernels_sit_near_bandwidth_ceiling() {
     // reading of Fig. 7.
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
-    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
     let profile = Session::standard(&spec).profile(trace.phase(Phase::Optimizer));
     let model = RooflineModel::from_profile(&spec, &profile);
     assert!(!model.points.is_empty());
@@ -119,7 +119,7 @@ fn lite_graph_flops_match_aot_manifest_when_present() {
 fn profiler_overhead_scales_with_metric_passes() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::lite());
-    let trace = lower(&graph, Framework::PyTorch, Policy::O1);
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
     let kernels = trace.phase(Phase::Forward);
 
     let packed = Session::standard(&spec).profile(kernels);
@@ -134,17 +134,22 @@ fn profiler_overhead_scales_with_metric_passes() {
 }
 
 #[test]
-fn a100_variant_profiles_consistently() {
-    // Alternate-architecture extension (paper §V future work): the same
-    // trace on an A100 model is strictly faster and keeps bounds.
+fn alternate_devices_profile_consistently() {
+    // The device axis end to end: the same graph, lowered and profiled
+    // per registry device, is strictly faster on the A100, slower on
+    // the T4, and keeps Roofline bounds everywhere.
     let v100 = GpuSpec::v100();
     let a100 = GpuSpec::a100();
+    let t4 = GpuSpec::t4();
     let graph = deepcam(&DeepCamConfig::paper());
-    let trace = lower(&graph, Framework::TensorFlow, Policy::O1);
-    let t_v = Session::standard(&v100).profile(trace.phase(Phase::Forward));
-    let t_a = Session::standard(&a100).profile(trace.phase(Phase::Forward));
-    assert!(t_a.total_seconds() < t_v.total_seconds());
-    RooflineModel::from_profile(&a100, &t_a)
-        .validate_bounds()
-        .unwrap();
+    let seconds = |spec: &GpuSpec| {
+        let trace = lower(&graph, Framework::TensorFlow, Policy::O1, spec);
+        let profile = Session::standard(spec).profile(trace.phase(Phase::Forward));
+        RooflineModel::from_profile(spec, &profile).validate_bounds().unwrap();
+        assert_eq!(profile.device, spec.name);
+        profile.total_seconds()
+    };
+    let (t_v, t_a, t_t) = (seconds(&v100), seconds(&a100), seconds(&t4));
+    assert!(t_a < t_v, "a100 {t_a} vs v100 {t_v}");
+    assert!(t_t > t_v, "t4 {t_t} vs v100 {t_v}");
 }

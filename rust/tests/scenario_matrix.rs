@@ -2,7 +2,7 @@
 //! end to end — deterministic enumeration, golden catalog, artifact
 //! layout, and cross-run reproducibility.
 
-use hroofline::device::GpuSpec;
+use hroofline::device::registry as devices;
 use hroofline::dl::workloads;
 use hroofline::scenario::{comparison_csv, comparison_table, Scenario, ScenarioMatrix};
 
@@ -61,19 +61,21 @@ fn quick_catalog_is_golden() {
 #[test]
 fn quick_sweep_meets_the_acceptance_floor() {
     // ≥ 16 scenarios from ≥ 4 workloads × 2 frameworks × ≥ 2
-    // phase/policy combos.
+    // phase/policy combos. Single-device (the registry default) so the
+    // required CI gate's cost stays flat as devices are registered.
     let m = ScenarioMatrix::quick();
     assert!(m.workloads.len() >= 4);
     assert_eq!(m.frameworks.len(), 2);
     assert!(m.phases.len() * m.policies.len() >= 2);
     assert!(m.enumerate().len() >= 16);
     assert_eq!(workloads::registry().len(), m.workloads.len());
+    assert_eq!(m.devices.len(), 1);
+    assert_eq!(m.devices[0].name, devices::default_entry().name);
 }
 
 #[test]
 fn quick_sweep_runs_and_compares_all_scenarios() {
-    let spec = GpuSpec::v100();
-    let run = ScenarioMatrix::quick().run(&spec);
+    let run = ScenarioMatrix::quick().run();
     assert_eq!(run.results.len(), QUICK_IDS.len());
 
     // Results arrive in enumeration order, every scenario non-empty
@@ -117,11 +119,10 @@ fn sweep_is_reproducible_byte_for_byte() {
     // Same matrix, two runs (each internally parallel): identical
     // comparison CSV. This is the cross-run determinism the golden CI
     // artifact diffing relies on.
-    let spec = GpuSpec::v100();
     let m1 = ScenarioMatrix::quick().with_workloads("resnet,transformer").unwrap();
     let m2 = ScenarioMatrix::quick().with_workloads("resnet,transformer").unwrap();
-    let a = comparison_csv(&m1.run(&spec).results);
-    let b = comparison_csv(&m2.run(&spec).results);
+    let a = comparison_csv(&m1.run().results);
+    let b = comparison_csv(&m2.run().results);
     assert_eq!(a, b);
     assert!(a.lines().count() == 1 + 16, "header + 16 rows: {}", a.lines().count());
 }
@@ -129,10 +130,38 @@ fn sweep_is_reproducible_byte_for_byte() {
 #[test]
 fn full_matrix_enumeration_is_superset_of_quick() {
     let full: Vec<String> = ScenarioMatrix::full().enumerate().iter().map(Scenario::id).collect();
-    assert_eq!(full.len(), 72);
+    // The full matrix crosses every registered device: 4 workloads × 2
+    // frameworks × 3 phases × 3 policies per device.
+    assert_eq!(full.len(), 72 * devices::entries().len());
     // Quick uses quick scale, so ids coincide but builds differ; the id
-    // space of quick is contained in full's.
+    // space of quick (default-device, device-less ids) is contained in
+    // full's.
     for id in QUICK_IDS {
         assert!(full.contains(&id.to_string()), "{id} missing from full matrix");
+    }
+    // Non-default devices appear with their short tag.
+    for d in devices::entries().iter().skip(1) {
+        let tagged = format!("deepcam-paper-tf-forward-O0@{}", d.short);
+        assert!(full.contains(&tagged), "{tagged} missing from full matrix");
+    }
+}
+
+#[test]
+fn device_restricted_quick_sweep_is_device_tagged() {
+    // A quick sweep pointed at a non-default device keeps the catalog
+    // shape but tags every id — nothing collides with the golden
+    // default-device catalog.
+    let m = ScenarioMatrix::quick()
+        .with_workloads("transformer")
+        .unwrap()
+        .with_devices("t4")
+        .unwrap();
+    let ids: Vec<String> = m.enumerate().iter().map(Scenario::id).collect();
+    assert_eq!(ids.len(), 8);
+    assert!(ids.iter().all(|id| id.ends_with("@t4")), "{ids:?}");
+    let run = m.run();
+    for r in &run.results {
+        assert_eq!(r.scenario.device.name, "t4-pcie-16gb");
+        assert!(!r.is_empty(), "{}", r.id());
     }
 }
