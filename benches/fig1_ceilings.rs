@@ -10,7 +10,7 @@ fn main() {
     // Correctness/shape first: print the reproduction table.
     let artifact = hroofline::report::fig1::generate().expect("fig1");
     println!("{}", artifact.text);
-    let _ = artifact.write_to(std::path::Path::new("out/report"));
+    let _ = artifact.write_all(std::path::Path::new("out/report"));
 
     // Then the harness cost (modeled sweep is a hot analysis path).
     let mut b = Bench::new("fig1_ceilings");

@@ -11,7 +11,7 @@ use hroofline::runtime::{ArtifactStore, Engine};
 fn main() {
     let artifact = hroofline::report::fig2::generate().expect("fig2");
     println!("{}", artifact.text);
-    let _ = artifact.write_to(std::path::Path::new("out/report"));
+    let _ = artifact.write_all(std::path::Path::new("out/report"));
 
     let mut b = Bench::new("fig2_gemm_sweep");
     b.case("modeled_sweep", || {

@@ -6,7 +6,7 @@ use hroofline::bench_harness::{black_box, Bench};
 fn main() {
     let artifact = hroofline::report::generate("fig3").expect("fig3");
     println!("{}", artifact.text);
-    let _ = artifact.write_to(std::path::Path::new("out/report"));
+    let _ = artifact.write_all(std::path::Path::new("out/report"));
 
     let mut b = Bench::new("fig3_tf_forward").iters(10);
     b.case("generate", || {

@@ -20,7 +20,7 @@ use hroofline::device::{GpuSpec, Precision};
 use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
-use hroofline::profiler::{Session, SessionConfig};
+use hroofline::profiler::{ProfileRequest, Session, SessionConfig};
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
 use hroofline::sim::{self, cache_sim, KernelDesc, SimCache};
@@ -68,12 +68,28 @@ fn main() {
         });
     }
 
-    // full profiling session over the whole training step (headline)
+    // full profiling session over the whole training step (headline).
+    // Counters-only keeps this case comparable with its pre-timing
+    // baseline; `profile_step_timed` below tracks the timed default.
     {
         let all = all.clone();
         b.case("profile_full_step", move || {
             let spec = GpuSpec::v100();
-            let p = Session::standard(&spec).profile(&all);
+            let p = Session::standard(&spec)
+                .run(&ProfileRequest::new(&all).counters_only())
+                .unwrap();
+            black_box(p.n_kernels() as u64);
+            n_inv
+        });
+    }
+
+    // the timed default path: counters + per-kernel cycle breakdowns
+    // (the time-based Roofline input)
+    {
+        let all = all.clone();
+        b.case("profile_step_timed", move || {
+            let spec = GpuSpec::v100();
+            let p = Session::standard(&spec).run(&ProfileRequest::new(&all)).unwrap();
             black_box(p.n_kernels() as u64);
             n_inv
         });
@@ -86,7 +102,9 @@ fn main() {
         b.case("profile_full_step_unmemoized", move || {
             let spec = GpuSpec::v100();
             let cfg = SessionConfig { memoize: false, threads: Some(1), ..Default::default() };
-            let p = Session::new(&spec, cfg).profile(&all);
+            let p = Session::new(&spec, cfg)
+                .run(&ProfileRequest::new(&all).counters_only())
+                .unwrap();
             black_box(p.n_kernels() as u64);
             n_inv
         });
@@ -116,7 +134,9 @@ fn main() {
                 let spec = entry.spec();
                 let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
                 let all = trace.all();
-                let p = Session::standard(&spec).profile(&all);
+                let p = Session::standard(&spec)
+                    .run(&ProfileRequest::new(&all).counters_only())
+                    .unwrap();
                 black_box(p.n_kernels() as u64);
                 all.iter().map(|i| i.invocations).sum()
             });
@@ -126,7 +146,9 @@ fn main() {
     // roofline + SVG emission
     {
         let spec2 = GpuSpec::v100();
-        let profile = Session::standard(&spec2).profile(trace.phase(Phase::Backward));
+        let profile = Session::standard(&spec2)
+            .run(&ProfileRequest::new(trace.phase(Phase::Backward)))
+            .unwrap();
         b.case("chart_svg_emit", move || {
             let spec = GpuSpec::v100();
             let model = RooflineModel::from_profile(&spec, &profile);

@@ -8,7 +8,7 @@ use hroofline::ert::fp16_ladder::ladder;
 fn main() {
     let artifact = hroofline::report::tab1::generate().expect("tab1");
     println!("{}", artifact.text);
-    let _ = artifact.write_to(std::path::Path::new("out/report"));
+    let _ = artifact.write_all(std::path::Path::new("out/report"));
 
     let mut b = Bench::new("tab1_fp16_ladder");
     b.case("ladder_eval", || {

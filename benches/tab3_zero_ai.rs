@@ -8,7 +8,7 @@ use hroofline::report::tab3;
 fn main() {
     let artifact = tab3::generate().expect("tab3");
     println!("{}", artifact.text);
-    let _ = artifact.write_to(std::path::Path::new("out/report"));
+    let _ = artifact.write_all(std::path::Path::new("out/report"));
 
     let mut b = Bench::new("tab3_zero_ai").iters(10);
     b.case("census", || {

@@ -9,7 +9,7 @@ use hroofline::device::GpuSpec;
 use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
-use hroofline::profiler::Session;
+use hroofline::profiler::{ProfileRequest, Session};
 use hroofline::util::error as anyhow;
 use hroofline::util::{fmt, Table};
 
@@ -29,7 +29,8 @@ fn main() -> anyhow::Result<()> {
         let mut t_o0 = None;
         for policy in [Policy::O0, Policy::O1, Policy::O2, Policy::ManualFp16] {
             let trace = lower(&graph, fw, policy, &spec);
-            let profile = Session::standard(&spec).profile(trace.phase(Phase::Backward));
+            let profile =
+                Session::standard(&spec).run(&ProfileRequest::new(trace.phase(Phase::Backward)))?;
             let total = profile.total_seconds();
             if policy == Policy::O0 {
                 t_o0 = Some(total);
@@ -61,11 +62,11 @@ fn main() -> anyhow::Result<()> {
     // The Fig. 8 equivalence, quantified.
     let amp_trace = lower(&graph, Framework::TensorFlow, Policy::O1, &spec);
     let tf_amp = Session::standard(&spec)
-        .profile(amp_trace.phase(Phase::Backward))
+        .run(&ProfileRequest::new(amp_trace.phase(Phase::Backward)))?
         .total_seconds();
     let manual_trace = lower(&graph, Framework::TensorFlow, Policy::ManualFp16, &spec);
     let tf_manual = Session::standard(&spec)
-        .profile(manual_trace.phase(Phase::Backward))
+        .run(&ProfileRequest::new(manual_trace.phase(Phase::Backward)))?
         .total_seconds();
     println!(
         "Fig. 8 check: TF manual-FP16 backward {} vs AMP backward {} ({:+.2}%)",

@@ -21,7 +21,7 @@ use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
 use hroofline::ert::{empirical, sweep::SweepConfig};
-use hroofline::profiler::Session;
+use hroofline::profiler::{ProfileRequest, Session};
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
 use hroofline::util::error as anyhow;
@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
         (Framework::PyTorch, Phase::Optimizer, "pt_optimizer"),
     ] {
         let trace = lower(&graph, fw, Policy::O1, &spec);
-        let profile = Session::standard(&spec).profile(trace.phase(phase));
+        let profile = Session::standard(&spec).run(&ProfileRequest::new(trace.phase(phase)))?;
         let model = RooflineModel::from_profile(&spec, &profile);
         model.validate_bounds().expect("roofline bounds");
         let chart =

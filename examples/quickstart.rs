@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use hroofline::device::{GpuSpec, Precision};
-use hroofline::profiler::Session;
+use hroofline::profiler::{ProfileRequest, Session};
 use hroofline::util::error as anyhow;
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             stream: 0,
         },
     ];
-    let profile = Session::standard(&spec).profile(&trace);
+    let profile = Session::standard(&spec).run(&ProfileRequest::new(&trace))?;
     println!(
         "\nprofiled {} kernels / {} invocations, total GPU time {}",
         profile.n_kernels(),

@@ -9,7 +9,7 @@ use hroofline::device::GpuSpec;
 use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
-use hroofline::profiler::Session;
+use hroofline::profiler::{ProfileRequest, Session};
 use hroofline::util::error as anyhow;
 use hroofline::util::{fmt, Table};
 
@@ -54,13 +54,13 @@ fn main() -> anyhow::Result<()> {
     ]);
     for (fw, trace) in &summaries {
         let all = trace.all();
-        let profile = Session::standard(&spec).profile(&all);
+        let profile = Session::standard(&spec).run(&ProfileRequest::new(&all))?;
         let fused: Vec<_> = all
             .iter()
             .filter(|i| !i.kernel.mix.is_zero_ai(&spec))
             .cloned()
             .collect();
-        let profile_fused = Session::standard(&spec).profile(&fused);
+        let profile_fused = Session::standard(&spec).run(&ProfileRequest::new(&fused))?;
         let t0 = profile.total_seconds();
         let t1 = profile_fused.total_seconds();
         let removed: u64 = all

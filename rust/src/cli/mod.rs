@@ -98,6 +98,35 @@ where
     }
 }
 
+/// Parse the unified `--device` list syntax shared by `repro
+/// ert|profile|matrix`: a comma-separated list of registry names or
+/// short aliases, `all` (every registered device, registry order), or
+/// `default` (the registry default — the paper's V100 testbed).
+/// Duplicates collapse; unknown names get the registry's did-you-mean
+/// hint.
+pub fn parse_device_list(
+    list: &str,
+) -> Result<Vec<&'static crate::device::registry::DeviceEntry>, CliError> {
+    use crate::device::registry as devices;
+    if list == "all" {
+        return Ok(devices::entries().iter().collect());
+    }
+    if list == "default" {
+        return Ok(vec![devices::default_entry()]);
+    }
+    let mut selected: Vec<&'static devices::DeviceEntry> = Vec::new();
+    for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let d = devices::lookup(name)?;
+        if !selected.iter().any(|s| s.name == d.name) {
+            selected.push(d);
+        }
+    }
+    if selected.is_empty() {
+        return Err(CliError("--device selected nothing (try --help)".into()));
+    }
+    Ok(selected)
+}
+
 impl Cmd {
     pub fn new(name: &str, about: &str) -> Cmd {
         Cmd {
@@ -377,6 +406,28 @@ mod tests {
     fn switch_with_value_rejected() {
         let cmd = Cmd::new("x", "t").switch("quick", "h");
         assert!(cmd.parse(&argv(&["--quick=1"])).is_err());
+    }
+
+    #[test]
+    fn device_list_syntax_is_unified() {
+        use crate::device::registry as devices;
+        // Comma list with aliases and spaces, deduped, order-preserving.
+        let d = parse_device_list("a100, t4, a100").unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].name, "a100-sxm4-40gb");
+        assert_eq!(d[1].name, "t4-pcie-16gb");
+        // `all` is the registry, in order; `default` is the V100 testbed.
+        let all = parse_device_list("all").unwrap();
+        assert_eq!(all.len(), devices::entries().len());
+        let def = parse_device_list("default").unwrap();
+        assert_eq!(def.len(), 1);
+        assert_eq!(def[0].name, devices::default_entry().name);
+        // Unknown names keep the registry's did-you-mean hint.
+        let err = parse_device_list("v100,t44").unwrap_err();
+        assert!(err.0.contains("unknown device 't44'"), "{}", err.0);
+        assert!(err.0.contains("did you mean 't4'?"), "{}", err.0);
+        // Empty selections are rejected.
+        assert!(parse_device_list(" , ").is_err());
     }
 
     #[test]

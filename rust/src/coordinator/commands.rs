@@ -5,22 +5,37 @@ use std::path::Path;
 use crate::cli::Parsed;
 use crate::util::error::{self as anyhow, Context, Result};
 use crate::device::registry as devices;
-use crate::device::{GpuSpec, MemLevel};
+use crate::device::MemLevel;
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, Phase};
 use crate::dl::Policy;
 use crate::ert::sweep::SweepConfig;
 use crate::ert::{empirical, modeled};
-use crate::profiler::{export, MetricRegistry, Session};
+use crate::profiler::{export, MetricRegistry, Profile, ProfileRequest, Session, StepTimeline};
 use crate::report::Artifact;
 use crate::roofline::chart::RooflineChart;
 use crate::roofline::model::RooflineModel;
+use crate::roofline::time as rtime;
 use crate::util::{fmt, Json, Table};
 
-/// Resolve the `--device` flag through the registry (clean [`CliError`]
-/// with a did-you-mean hint on unknown names).
-fn resolve_device(p: &Parsed) -> Result<GpuSpec> {
-    devices::DeviceRegistry::get(p.get("device")).map_err(Into::into)
+/// Resolve the unified `--device` list syntax (comma lists, `all`,
+/// `default`) through the registry, with a did-you-mean hint on
+/// unknown names. Shared by `ert`, `profile` and `matrix`.
+fn resolve_devices(p: &Parsed) -> Result<Vec<&'static devices::DeviceEntry>> {
+    crate::cli::parse_device_list(p.get("device")).map_err(Into::into)
+}
+
+/// Artifact-id suffix for a device within a selection: single-device
+/// selections keep the plain ids (so `--device a100` writes the same
+/// file names as the default run, just on another device), and in
+/// multi-device selections only non-default devices get `@short`
+/// tagged — mirroring the scenario-matrix id scheme.
+fn device_suffix(entry: &devices::DeviceEntry, n_selected: usize) -> String {
+    if n_selected > 1 && entry.name != devices::default_entry().name {
+        format!("@{}", entry.short)
+    } else {
+        String::new()
+    }
 }
 
 /// `repro ert` — machine characterization.
@@ -35,26 +50,31 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
     let mode = p.get("mode");
     // Validate --device up front so a typo fails with the registry's
     // did-you-mean even in empirical mode (which characterizes the host
-    // CPU and does not use the GPU spec).
-    let spec = resolve_device(p)?;
+    // CPU and does not use the GPU specs).
+    let selected = resolve_devices(p)?;
 
     if mode == "modeled" || mode == "both" {
-        // The modeled sweep fans its working-set × intensity grid across
-        // the machine's cores via `exec::parallel_map` (see
-        // `ert::modeled::run_sweep_threads`); output is identical to the
-        // serial path because every grid point is a pure evaluation.
-        let ceilings = modeled::characterize(&spec, &config);
-        let mut t = Table::new(&["ceiling", "value"]);
-        for (label, gf) in &ceilings.compute_gflops {
-            t.row(&[label.clone(), fmt::si_flops(gf * 1e9)]);
+        for entry in &selected {
+            let spec = entry.spec();
+            // The modeled sweep fans its working-set × intensity grid
+            // across the machine's cores via `exec::parallel_map` (see
+            // `ert::modeled::run_sweep_threads`); output is identical to
+            // the serial path because every grid point is a pure
+            // evaluation.
+            let ceilings = modeled::characterize(&spec, &config);
+            let mut t = Table::new(&["ceiling", "value"]);
+            for (label, gf) in &ceilings.compute_gflops {
+                t.row(&[label.clone(), fmt::si_flops(gf * 1e9)]);
+            }
+            for (level, gb) in &ceilings.bandwidth_gbs {
+                t.row(&[format!("{} bandwidth", level.name()), fmt::si(gb * 1e9, "B/s")]);
+            }
+            println!("== modeled {} (Fig. 1) ==\n{}", spec.name, t.render());
+            let mut artifact = crate::report::fig1::generate_for(&spec)?;
+            artifact.id = format!("{}{}", artifact.id, device_suffix(entry, selected.len()));
+            artifact.write_all(Path::new(&out_dir))?;
+            println!("wrote {out_dir}/{}.{{txt,json,svg}}", artifact.id);
         }
-        for (level, gb) in &ceilings.bandwidth_gbs {
-            t.row(&[format!("{} bandwidth", level.name()), fmt::si(gb * 1e9, "B/s")]);
-        }
-        println!("== modeled {} (Fig. 1) ==\n{}", spec.name, t.render());
-        let artifact = crate::report::fig1::generate_for(&spec)?;
-        artifact.write_to(Path::new(&out_dir))?;
-        println!("wrote {out_dir}/fig1.{{txt,json,svg}}");
     }
 
     if mode == "empirical" || mode == "both" {
@@ -123,9 +143,8 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     let out_dir = p.get("out").to_string();
     std::fs::create_dir_all(&out_dir)?;
 
-    let spec = resolve_device(p)?;
+    let selected = resolve_devices(p)?;
     let graph = deepcam(&cfg);
-    let trace = lower(&graph, fw, policy, &spec);
     let phases: Vec<(Phase, &str)> = match p.get("phase") {
         "forward" => vec![(Phase::Forward, "forward")],
         "backward" => vec![(Phase::Backward, "backward")],
@@ -138,60 +157,127 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
         other => anyhow::bail!("bad phase '{other}'"),
     };
 
-    // Profile the requested phases in parallel (each phase is an
-    // independent, deterministic simulation pass; within each phase the
-    // session additionally dedupes kernel descriptors and fans the
-    // trace out — see `Session::try_profile`). Rendering is captured
-    // into Artifacts inside the workers and written in input order
-    // below, so stdout and the written files are byte-identical to a
-    // serial run.
-    let session = Session::standard(&spec);
-    let workers = crate::exec::default_workers(phases.len());
-    let rendered = crate::exec::parallel_map(phases, workers, |(phase, label)| {
-        let kernel_trace = trace.phase(phase);
-        if kernel_trace.is_empty() {
-            return (label, None);
+    for entry in &selected {
+        let spec = entry.spec();
+        let suffix = device_suffix(entry, selected.len());
+        let trace = lower(&graph, fw, policy, &spec);
+
+        // Profile the requested phases in parallel (each phase is an
+        // independent, deterministic simulation pass; within each phase
+        // the session additionally dedupes kernel descriptors and fans
+        // the trace out — see `Session::run`). Rendering is captured
+        // into Artifacts inside the workers and written in input order
+        // below, so stdout and the written files are byte-identical to
+        // a serial run.
+        let session = Session::standard(&spec);
+        let workers = crate::exec::default_workers(phases.len());
+        let rendered = crate::exec::parallel_map(phases.clone(), workers, |(phase, label)| {
+            let kernel_trace = trace.phase(phase);
+            if kernel_trace.is_empty() {
+                return (label, None);
+            }
+            let profile = session
+                .run(&ProfileRequest::new(kernel_trace))
+                .expect("standard session on a lowered trace cannot fail");
+            let model = RooflineModel::from_profile(&spec, &profile);
+            let title =
+                format!("{} DeepCAM {label} ({}) on {}", fw.name(), policy.name(), spec.name);
+            let chart = RooflineChart::hierarchical(&model, &title);
+            let text = format!(
+                "== {title} ==\ntotal {} | kernels {} | invocations {} | profiler overhead {}\n{}",
+                fmt::duration(profile.total_seconds()),
+                profile.n_kernels(),
+                profile.total_invocations(),
+                fmt::duration(profile.profiling_overhead_s),
+                chart.to_table().render()
+            );
+            let mut timeline = StepTimeline::new(&spec.name);
+            timeline.push_phase(label, &profile);
+            let artifact = Artifact {
+                id: format!("{}_{label}{suffix}", fw.name()),
+                title: title.clone(),
+                json: Json::obj(vec![
+                    ("device", Json::str(&spec.name)),
+                    ("framework", Json::str(fw.name())),
+                    ("phase", Json::str(label)),
+                    ("amp", Json::str(policy.name())),
+                    ("total_seconds", Json::num(profile.total_seconds())),
+                    ("n_kernels", Json::num(profile.n_kernels() as f64)),
+                    ("invocations", Json::num(profile.total_invocations() as f64)),
+                    ("profiling_overhead_s", Json::num(profile.profiling_overhead_s)),
+                ]),
+                svg: Some(chart.to_svg()),
+                csv: Some(export::to_csv(&profile)),
+                text,
+                lanes: Vec::new(),
+            }
+            .with_lane("timeline.txt", rtime::timeline_text(&title, &timeline, &profile));
+            let artifact = match rtime::time_weighted_svg(
+                &spec,
+                &profile,
+                &format!("{title} — time-weighted"),
+            ) {
+                Some(svg) => artifact.with_lane("timeline.svg", svg),
+                None => artifact,
+            };
+            (label, Some((artifact, profile)))
+        });
+        let mut phase_profiles: Vec<(&str, Profile)> = Vec::new();
+        for (label, result) in rendered {
+            let Some((artifact, profile)) = result else {
+                println!("[{label}] no kernels (TF folds the optimizer into backward)");
+                continue;
+            };
+            println!("{}", artifact.text);
+            artifact.write_all(Path::new(&out_dir))?;
+            println!(
+                "wrote {out_dir}/{}.{{txt,json,svg,csv,timeline.txt,timeline.svg}}",
+                artifact.id
+            );
+            phase_profiles.push((label, profile));
         }
-        let profile = session.profile(kernel_trace);
-        let model = RooflineModel::from_profile(&spec, &profile);
-        let title =
-            format!("{} DeepCAM {label} ({}) on {}", fw.name(), policy.name(), spec.name);
-        let chart = RooflineChart::hierarchical(&model, &title);
-        let text = format!(
-            "== {title} ==\ntotal {} | kernels {} | invocations {} | profiler overhead {}\n{}",
-            fmt::duration(profile.total_seconds()),
-            profile.n_kernels(),
-            profile.total_invocations(),
-            fmt::duration(profile.profiling_overhead_s),
-            chart.to_table().render()
-        );
-        let artifact = Artifact {
-            id: format!("{}_{label}", fw.name()),
-            title: title.clone(),
-            json: Json::obj(vec![
-                ("device", Json::str(&spec.name)),
-                ("framework", Json::str(fw.name())),
-                ("phase", Json::str(label)),
-                ("amp", Json::str(policy.name())),
-                ("total_seconds", Json::num(profile.total_seconds())),
-                ("n_kernels", Json::num(profile.n_kernels() as f64)),
-                ("invocations", Json::num(profile.total_invocations() as f64)),
-                ("profiling_overhead_s", Json::num(profile.profiling_overhead_s)),
-            ]),
-            svg: Some(chart.to_svg()),
-            csv: Some(export::to_csv(&profile)),
-            text,
-        };
-        (label, Some(artifact))
-    });
-    for (label, result) in rendered {
-        let Some(artifact) = result else {
-            println!("[{label}] no kernels (TF folds the optimizer into backward)");
-            continue;
-        };
-        println!("{}", artifact.text);
-        artifact.write_to(Path::new(&out_dir))?;
-        println!("wrote {out_dir}/{}.{{txt,json,svg,csv}}", artifact.id);
+        // Whole-step timeline: only meaningful when more than one phase
+        // actually ran (a single-phase request *is* its own breakdown).
+        if phase_profiles.len() > 1 {
+            let timeline =
+                StepTimeline::from_phases(&spec.name, phase_profiles.iter().map(|(l, p)| (*l, p)));
+            let title =
+                format!("{} DeepCAM step ({}) on {}", fw.name(), policy.name(), spec.name);
+            let step_artifact = Artifact {
+                id: format!("{}_step{suffix}", fw.name()),
+                title: title.clone(),
+                text: format!(
+                    "== {title} — time-based Roofline ==\n{}",
+                    rtime::step_table(&timeline).render()
+                ),
+                json: Json::obj(vec![
+                    ("device", Json::str(&spec.name)),
+                    ("framework", Json::str(fw.name())),
+                    ("amp", Json::str(policy.name())),
+                    ("step_seconds", Json::num(timeline.step_seconds())),
+                    ("idle_seconds", Json::num(timeline.idle_seconds())),
+                    (
+                        "phases",
+                        Json::arr(timeline.phases.iter().map(|ph| {
+                            Json::obj(vec![
+                                ("label", Json::str(&ph.label)),
+                                ("seconds", Json::num(ph.seconds)),
+                                ("compute_s", Json::num(ph.compute_s)),
+                                ("memory_s", Json::num(ph.memory_s)),
+                                ("overhead_s", Json::num(ph.overhead_s)),
+                                ("ramp_s", Json::num(ph.ramp_s)),
+                            ])
+                        })),
+                    ),
+                ]),
+                svg: None,
+                csv: None,
+                lanes: Vec::new(),
+            };
+            println!("{}", step_artifact.text);
+            step_artifact.write_all(Path::new(&out_dir))?;
+            println!("wrote {out_dir}/{}.{{txt,json}}", step_artifact.id);
+        }
     }
     Ok(())
 }
@@ -223,18 +309,18 @@ pub fn cmd_matrix(p: &Parsed) -> Result<()> {
 
     let mut written = 0usize;
     for result in &run.results {
-        result.to_artifact().write_to(&scenario_dir)?;
+        result.to_artifact().write_all(&scenario_dir)?;
         written += 1;
     }
     let comparison = crate::scenario::comparison_artifact(&run);
-    comparison.write_to(Path::new(&out_dir))?;
+    comparison.write_all(Path::new(&out_dir))?;
     // Multi-device sweeps additionally get one overlay per device
     // (each against its own full ceiling set).
     let run_devices = run.device_entries();
     if run_devices.len() > 1 {
         for entry in &run_devices {
             crate::scenario::device_comparison_artifact(&run, entry)
-                .write_to(Path::new(&out_dir))?;
+                .write_all(Path::new(&out_dir))?;
         }
         println!(
             "wrote per-device overlays: {}",
@@ -248,8 +334,8 @@ pub fn cmd_matrix(p: &Parsed) -> Result<()> {
 
     println!("== {} ==\n{}", comparison.title, comparison.text);
     println!(
-        "wrote {written} scenario artifacts under {}/ and the comparison report \
-         (matrix.{{txt,json,svg,csv}}) under {out_dir}/",
+        "wrote {written} scenario artifacts (each with timeline lanes) under {}/ and the \
+         comparison report (matrix.{{txt,json,svg,csv,timeline.txt}}) under {out_dir}/",
         scenario_dir.display()
     );
     Ok(())
@@ -293,7 +379,7 @@ pub fn cmd_report(p: &Parsed) -> Result<()> {
     };
     for id in ids {
         let artifact = crate::report::generate(id)?;
-        artifact.write_to(Path::new(&out_dir))?;
+        artifact.write_all(Path::new(&out_dir))?;
         println!("== {} — {} ==\n{}", artifact.id, artifact.title, artifact.text);
     }
     println!("artifacts under {out_dir}/");
@@ -389,12 +475,51 @@ mod tests {
     fn profile_command_lite_scale() {
         let dir = std::env::temp_dir().join(format!("hroofline-profcmd-{}", std::process::id()));
         cmd_profile(&parsed(profile_cmd(dir.to_str().unwrap()), &[])).unwrap();
-        for ext in ["txt", "json", "svg", "csv"] {
+        for ext in ["txt", "json", "svg", "csv", "timeline.txt", "timeline.svg"] {
             assert!(dir.join(format!("pytorch_forward.{ext}")).exists(), "{ext}");
         }
         // The default device is stamped into the artifacts.
         let txt = std::fs::read_to_string(dir.join("pytorch_forward.txt")).unwrap();
         assert!(txt.contains("V100-SXM2-16GB"), "{txt}");
+        // The timeline lane carries the step-time breakdown; a
+        // single-phase run gets no separate step artifact.
+        let tl = std::fs::read_to_string(dir.join("pytorch_forward.timeline.txt")).unwrap();
+        assert!(tl.contains("step-time breakdown"), "{tl}");
+        assert!(tl.contains("step total"), "{tl}");
+        assert!(!dir.join("pytorch_step.txt").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn profile_all_phases_emits_step_timeline() {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-profstep-{}", std::process::id()));
+        let cmd = profile_cmd(dir.to_str().unwrap());
+        cmd_profile(&parsed(cmd, &["--phase", "all"])).unwrap();
+        for label in ["forward", "backward", "optimizer"] {
+            assert!(dir.join(format!("pytorch_{label}.timeline.txt")).exists(), "{label}");
+        }
+        let step = std::fs::read_to_string(dir.join("pytorch_step.txt")).unwrap();
+        assert!(step.contains("time-based Roofline"), "{step}");
+        for row in ["forward", "backward", "optimizer", "idle (launch/drain)", "step total"] {
+            assert!(step.contains(row), "missing '{row}' in {step}");
+        }
+        assert!(dir.join("pytorch_step.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn profile_multi_device_suffixes_non_default_artifacts() {
+        // The unified --device list syntax: the default device keeps the
+        // plain artifact ids, the rest get @short tags.
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-profmulti-{}", std::process::id()));
+        let cmd = profile_cmd(dir.to_str().unwrap());
+        cmd_profile(&parsed(cmd, &["--device", "v100,a100"])).unwrap();
+        assert!(dir.join("pytorch_forward.txt").exists());
+        assert!(dir.join("pytorch_forward@a100.txt").exists());
+        let txt = std::fs::read_to_string(dir.join("pytorch_forward@a100.txt")).unwrap();
+        assert!(txt.contains("A100-SXM4-40GB"), "{txt}");
         let _ = std::fs::remove_dir_all(dir);
     }
 
@@ -454,6 +579,16 @@ mod tests {
         assert_eq!(scenario_jsons, 16);
         assert!(dir.join("scenarios/transformer-pt-forward-O1.svg").exists());
         assert!(dir.join("scenarios/transformer-pt-forward-O1.csv").exists());
+        // Every scenario gets its time-based Roofline lanes, and the
+        // comparison report gets the step-time pivot lane.
+        let tl = std::fs::read_to_string(
+            dir.join("scenarios/transformer-pt-forward-O1.timeline.txt"),
+        )
+        .unwrap();
+        assert!(tl.contains("step total"), "{tl}");
+        assert!(dir.join("scenarios/transformer-pt-forward-O1.timeline.svg").exists());
+        let pivot = std::fs::read_to_string(dir.join("matrix.timeline.txt")).unwrap();
+        assert!(pivot.contains("step-time pivot"), "{pivot}");
         let _ = std::fs::remove_dir_all(dir);
     }
 
@@ -570,6 +705,24 @@ mod tests {
         cmd_ert(&parsed(cmd, &["--quick", "--device", "t4"])).unwrap();
         let txt = std::fs::read_to_string(dir.join("fig1.txt")).unwrap();
         assert!(txt.contains("T4-PCIE-16GB"), "{txt}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ert_device_list_writes_suffixed_fig1() {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-ertmulti-{}", std::process::id()));
+        let cmd = Cmd::new("ert", "t")
+            .flag("mode", "modeled", "h")
+            .flag("device", "default", "h")
+            .flag("out", dir.to_str().unwrap(), "h")
+            .switch("quick", "h");
+        cmd_ert(&parsed(cmd, &["--quick", "--device", "v100,t4"])).unwrap();
+        // Default device stays plain, the T4 gets the @short tag.
+        let v100 = std::fs::read_to_string(dir.join("fig1.txt")).unwrap();
+        assert!(v100.contains("V100-SXM2-16GB"), "{v100}");
+        let t4 = std::fs::read_to_string(dir.join("fig1@t4.txt")).unwrap();
+        assert!(t4.contains("T4-PCIE-16GB"), "{t4}");
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -42,7 +42,7 @@
 //! ```no_run
 //! use hroofline::device::DeviceRegistry;
 //! use hroofline::dl::{deepcam, lower, amp};
-//! use hroofline::profiler::Session;
+//! use hroofline::profiler::{ProfileRequest, Session};
 //! use hroofline::roofline::RooflineChart;
 //!
 //! // The device is a first-class axis: resolve it by registry name
@@ -51,7 +51,7 @@
 //! let gpu = DeviceRegistry::get("v100").unwrap();
 //! let net = deepcam::deepcam(&deepcam::DeepCamConfig::paper());
 //! let trace = lower::tensorflow(&net, amp::Policy::O1, &gpu).forward;
-//! let profile = Session::standard(&gpu).profile(&trace);
+//! let profile = Session::standard(&gpu).run(&ProfileRequest::new(&trace)).unwrap();
 //! let model = hroofline::roofline::RooflineModel::from_profile(&gpu, &profile);
 //! let chart = RooflineChart::hierarchical(&model, "TF DeepCAM forward");
 //! std::fs::write("roofline.svg", chart.to_svg()).unwrap();

@@ -25,7 +25,11 @@ fn main() {
         .command(
             Cmd::new("ert", "Machine characterization sweeps (Fig. 1, Tab. I, Fig. 2)")
                 .flag("mode", "modeled", "modeled | empirical | both")
-                .flag("device", "v100-sxm2-16gb", "registry device for the modeled sweep")
+                .flag(
+                    "device",
+                    "default",
+                    "comma-separated registry devices, 'all', or 'default' (the V100 testbed)",
+                )
                 .flag("out", "out/ert", "output directory")
                 .switch("quick", "reduced sweep grid"),
         )
@@ -36,7 +40,11 @@ fn main() {
                 .flag("phase", "forward", "forward | backward | optimizer | all")
                 .flag("amp", "O1", "O0 | O1 | O2 | off | manual-fp16")
                 .flag("scale", "paper", "paper | lite")
-                .flag("device", "v100-sxm2-16gb", "registry device to profile on")
+                .flag(
+                    "device",
+                    "default",
+                    "comma-separated registry devices, 'all', or 'default' (the V100 testbed)",
+                )
                 .flag("out", "out/profile", "output directory"),
         )
         .command(

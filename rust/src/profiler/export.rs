@@ -136,7 +136,7 @@ fn parse_csv_row(line: &str) -> Result<Vec<String>> {
 mod tests {
     use super::*;
     use crate::device::Precision;
-    use crate::profiler::Session;
+    use crate::profiler::{ProfileRequest, Session};
     use crate::sim::kernel::{KernelDesc, KernelInvocation};
 
     fn sample_profile() -> (GpuSpec, Profile) {
@@ -156,7 +156,7 @@ mod tests {
                 "hmma", 512, 512, 512, Precision::Fp16, true, 64, &spec,
             )),
         ];
-        let p = Session::standard(&spec).profile(&trace);
+        let p = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
         (spec, p)
     }
 

@@ -15,13 +15,17 @@
 //!   summed — "the data presented on these Roofline charts is the
 //!   aggregation of all these invocations of the same kernel" (§IV) —
 //!   and derived quantities (time via Eq. 5, FLOPs via add+2·fma+mul,
-//!   TC FLOPs via Eq. 6, AI per level) are exposed per kernel.
+//!   TC FLOPs via Eq. 6, AI per level) are exposed per kernel;
+//! * **step timelines** ([`timeline`]): per-phase profiles folded into
+//!   the time-based Roofline's step-time breakdown (arXiv 2009.04598).
 
 pub mod export;
 pub mod metrics;
 pub mod profile;
 pub mod session;
+pub mod timeline;
 
 pub use metrics::{Metric, MetricRegistry};
-pub use profile::{KernelProfile, Profile};
-pub use session::{Session, SessionConfig};
+pub use profile::{KernelProfile, KernelTiming, Profile};
+pub use session::{ProfileRequest, Session, SessionConfig};
+pub use timeline::{PhaseSlice, StepTimeline};

@@ -5,6 +5,57 @@ use std::collections::BTreeMap;
 
 use crate::device::{GpuSpec, MemLevel, Precision};
 use crate::sim::counters::CounterSet;
+use crate::sim::cycles::{Bound, CycleBreakdown};
+
+/// Model-attributed timing for one kernel aggregate — the time-based
+/// Roofline's "extra column" (Wang et al., arXiv 2009.04598). Cycle
+/// components come from [`CycleBreakdown`], converted to seconds via
+/// the device's SM clock; `total_s` is the elapsed time (max(compute,
+/// memory) + ramp per invocation), so the components overlap rather
+/// than stack:  `total_s = max(compute_s, memory_s) + ramp_s`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KernelTiming {
+    /// Seconds the compute pipelines needed (fully overlapped view).
+    pub compute_s: f64,
+    /// Seconds the memory hierarchy needed (fully overlapped view).
+    pub memory_s: f64,
+    /// Launch/drain ramp seconds (paid per invocation — the "idle"
+    /// slice of a step timeline).
+    pub ramp_s: f64,
+    /// Elapsed seconds across all invocations.
+    pub total_s: f64,
+}
+
+impl KernelTiming {
+    /// Fold `invocations` executions of a kernel with breakdown `b`
+    /// into this aggregate, converting cycles to seconds via the SM
+    /// clock.
+    pub fn accumulate(&mut self, b: &CycleBreakdown, invocations: u64, clock_hz: f64) {
+        let scale = invocations as f64 / clock_hz;
+        self.compute_s += b.compute_cycles * scale;
+        self.memory_s += b.memory_cycles * scale;
+        self.ramp_s += b.ramp_cycles * scale;
+        self.total_s += b.total_cycles * scale;
+    }
+
+    /// Elapsed seconds net of ramp — what the kernel body took.
+    pub fn body_s(&self) -> f64 {
+        self.total_s - self.ramp_s
+    }
+
+    /// Which resource bound this aggregate. Matches the per-invocation
+    /// [`CycleBreakdown::bound`] exactly for single-descriptor
+    /// aggregates (the scaling preserves every comparison).
+    pub fn bound(&self) -> Bound {
+        if self.body_s() < self.ramp_s {
+            Bound::Overhead
+        } else if self.compute_s >= self.memory_s {
+            Bound::Compute
+        } else {
+            Bound::Memory
+        }
+    }
+}
 
 /// Aggregate over all invocations of one kernel (keyed by kernel name),
 /// as the paper plots: "there could be many invocations of the same
@@ -16,12 +67,33 @@ pub struct KernelProfile {
     pub counters: CounterSet,
     /// FLOPs per tensor instruction of the profiled device (Eq. 6 factor).
     pub flops_per_tensor_inst: f64,
+    /// Model-attributed timing, when the session collected it. `None`
+    /// for counter-only sessions, hand-assembled profiles and CSV
+    /// imports — timing is strictly additive and never feeds back into
+    /// counters or their serialization.
+    pub timing: Option<KernelTiming>,
 }
 
 impl KernelProfile {
     /// Aggregated run time over all invocations (Eq. 5).
     pub fn seconds(&self) -> f64 {
         self.counters.elapsed_seconds()
+    }
+
+    /// Model-attributed duration: [`KernelTiming::total_s`] when timing
+    /// was collected, else the counter time base. The two agree to
+    /// rounding for session-built profiles (both are Cycles over the SM
+    /// clock).
+    pub fn duration_s(&self) -> f64 {
+        match &self.timing {
+            Some(t) => t.total_s,
+            None => self.seconds(),
+        }
+    }
+
+    /// Which resource bound this kernel, when timing was collected.
+    pub fn bound(&self) -> Option<Bound> {
+        self.timing.as_ref().map(KernelTiming::bound)
     }
 
     /// Total FLOPs over all invocations.
@@ -107,6 +179,7 @@ impl Profile {
                 invocations: 0,
                 counters: CounterSet::new(),
                 flops_per_tensor_inst: spec.flops_per_tensor_inst as f64,
+                timing: None,
             })
     }
 
@@ -140,6 +213,29 @@ impl Profile {
         let entry = self.entry_for(name, spec);
         entry.invocations += invocations;
         entry.counters.accumulate_scaled(counters, invocations);
+    }
+
+    /// Fold a cycle breakdown for `invocations` executions into the
+    /// kernel's timing aggregate. Counters are untouched: timing lives
+    /// next to them, so counter-only outputs (CSV, charts built from
+    /// counters) stay byte-identical whether or not timing was
+    /// collected.
+    pub fn record_timing(
+        &mut self,
+        name: &str,
+        invocations: u64,
+        b: &CycleBreakdown,
+        spec: &GpuSpec,
+    ) {
+        if invocations == 0 {
+            return;
+        }
+        let clock_hz = spec.clock_hz;
+        let entry = self.entry_for(name, spec);
+        entry
+            .timing
+            .get_or_insert_with(KernelTiming::default)
+            .accumulate(b, invocations, clock_hz);
     }
 
     pub fn kernel(&self, name: &str) -> Option<&KernelProfile> {
@@ -277,6 +373,37 @@ mod tests {
         let g = KernelDesc::gemm("hmma", 1024, 1024, 1024, Precision::Fp16, true, 64, &spec);
         let p = profile_of(&[("hmma", 1, g)]);
         assert!(p.kernel("hmma").unwrap().is_tensor_dominated());
+    }
+
+    #[test]
+    fn timing_accumulates_and_stays_out_of_counters() {
+        let spec = spec();
+        let k = KernelDesc::streaming_elementwise("relu", 1 << 18, Precision::Fp32, 1);
+        let (c, b) = sim::simulate_timed(&spec, &k);
+
+        let mut timed = Profile::new();
+        timed.record_scaled("relu", 3, &c, &spec);
+        timed.record_timing("relu", 3, &b, &spec);
+        let mut plain = Profile::new();
+        plain.record_scaled("relu", 3, &c, &spec);
+
+        let kt = timed.kernel("relu").unwrap();
+        let kp = plain.kernel("relu").unwrap();
+        assert_eq!(kt.counters, kp.counters, "timing must never touch counters");
+        assert_eq!(kp.timing, None);
+        assert_eq!(kp.duration_s(), kp.seconds());
+
+        let t = kt.timing.unwrap();
+        let expect = 3.0 * b.total_cycles / spec.clock_hz;
+        assert!((t.total_s - expect).abs() <= 1e-12 * expect);
+        assert_eq!(t.bound(), b.bound, "aggregate bound matches per-invocation bound");
+        // The two time bases are the same cycle count over the same
+        // clock — they agree to rounding.
+        let dt = (kt.duration_s() - kt.seconds()).abs();
+        assert!(dt <= 1e-9 * kt.seconds(), "duration_s vs counter seconds: {dt}");
+        // Components overlap, they don't stack.
+        let body = t.compute_s.max(t.memory_s);
+        assert!((t.body_s() - body).abs() <= 1e-12 * body.max(1e-30));
     }
 
     #[test]

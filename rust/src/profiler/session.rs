@@ -26,8 +26,56 @@ use crate::device::GpuSpec;
 use crate::profiler::metrics::{Metric, MetricRegistry};
 use crate::profiler::profile::Profile;
 use crate::sim::counters::{names, CounterId};
+use crate::sim::cycles::CycleBreakdown;
 use crate::sim::kernel::{KernelDesc, KernelInvocation};
 use crate::sim::{self, CounterSet};
+
+/// What to profile and how — the single argument to [`Session::run`],
+/// replacing the old `try_profile` / `try_profile_shared` / `profile`
+/// trio. Defaults: direct simulation (no shared cache), timing on.
+///
+/// ```text
+/// session.run(&ProfileRequest::new(&trace))?                    // standalone, timed
+/// session.run(&ProfileRequest::new(&trace).shared_cache(&c))?   // sweep-deduped
+/// session.run(&ProfileRequest::new(&trace).counters_only())?    // pre-timeline behaviour
+/// ```
+#[derive(Clone, Copy)]
+pub struct ProfileRequest<'a> {
+    trace: &'a [KernelInvocation],
+    cache: Option<&'a sim::SharedSimCache>,
+    timing: bool,
+}
+
+impl<'a> ProfileRequest<'a> {
+    pub fn new(trace: &'a [KernelInvocation]) -> ProfileRequest<'a> {
+        ProfileRequest {
+            trace,
+            cache: None,
+            timing: true,
+        }
+    }
+
+    /// Route baseline simulations through a cross-session
+    /// [`sim::SharedSimCache`]: a scenario sweep profiling many traces
+    /// over one device simulates each distinct descriptor once for the
+    /// *whole sweep*. Bit-identical to the standalone path (cached
+    /// simulation is pure; test-asserted).
+    pub fn shared_cache(mut self, cache: &'a sim::SharedSimCache) -> ProfileRequest<'a> {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Skip the per-kernel timing stamp ([`KernelProfile::timing`]
+    /// stays `None`). Counters are identical either way — this exists
+    /// for byte-identity cross-checks and to keep the hot path's
+    /// historical baseline measurable.
+    ///
+    /// [`KernelProfile::timing`]: crate::profiler::profile::KernelProfile
+    pub fn counters_only(mut self) -> ProfileRequest<'a> {
+        self.timing = false;
+        self
+    }
+}
 
 /// Session configuration.
 #[derive(Clone, Debug)]
@@ -138,8 +186,12 @@ impl<'a> Session<'a> {
         Session::new(spec, SessionConfig::default())
     }
 
-    /// Profile a trace, aggregating by kernel name. Panics never; returns
-    /// [`SessionError`] on unknown metrics or nondeterminism.
+    /// Profile a request's trace, aggregating by kernel name. Panics
+    /// never; returns [`SessionError`] on unknown metrics or
+    /// nondeterminism. This is the single profiling entry point — build
+    /// a [`ProfileRequest`] to pick standalone vs shared-cache
+    /// simulation and whether to stamp kernels with model-attributed
+    /// timing.
     ///
     /// Hot-path structure (§Perf L3 in EXPERIMENTS.md):
     ///
@@ -150,34 +202,49 @@ impl<'a> Session<'a> {
     /// 2. **Fan out** — the unique-kernel simulations and the per-entry
     ///    pass merges run through [`crate::exec::parallel_map`]; every
     ///    unit of work is pure, so parallelism cannot change the result.
-    /// 3. **Order-preserving aggregation** — merged counter sets are
-    ///    recorded into the [`Profile`] strictly in trace order, making
-    ///    the output bit-identical to the serial path (test-asserted,
-    ///    like PR 1's ERT sweep).
-    pub fn try_profile(&self, trace: &[KernelInvocation]) -> Result<Profile, SessionError> {
-        self.profile_with(trace, &|k| sim::simulate(self.spec, k))
+    /// 3. **Order-preserving aggregation** — merged counter sets (and
+    ///    timing, when requested) are recorded into the [`Profile`]
+    ///    strictly in trace order, making the output bit-identical to
+    ///    the serial path (test-asserted, like PR 1's ERT sweep).
+    pub fn run(&self, req: &ProfileRequest<'_>) -> Result<Profile, SessionError> {
+        match req.cache {
+            Some(cache) => self.profile_with(req.trace, req.timing, &|k| {
+                cache.get_or_simulate_timed(self.spec, k)
+            }),
+            None => {
+                self.profile_with(req.trace, req.timing, &|k| sim::simulate_timed(self.spec, k))
+            }
+        }
     }
 
-    /// Like [`Session::try_profile`], but baseline simulations go
-    /// through a cross-session [`sim::SharedSimCache`]: a scenario
-    /// sweep profiling many traces over one device simulates each
-    /// distinct descriptor once for the *whole sweep*. Bit-identical to
-    /// [`Session::try_profile`] (cached simulation is pure;
-    /// test-asserted).
+    /// Former entry point; use [`Session::run`].
+    #[deprecated(since = "0.6.0", note = "use Session::run(&ProfileRequest::new(trace))")]
+    pub fn try_profile(&self, trace: &[KernelInvocation]) -> Result<Profile, SessionError> {
+        self.run(&ProfileRequest::new(trace))
+    }
+
+    /// Former shared-cache entry point; use [`Session::run`] with
+    /// [`ProfileRequest::shared_cache`].
+    #[deprecated(
+        since = "0.6.0",
+        note = "use Session::run(&ProfileRequest::new(trace).shared_cache(cache))"
+    )]
     pub fn try_profile_shared(
         &self,
         trace: &[KernelInvocation],
         cache: &sim::SharedSimCache,
     ) -> Result<Profile, SessionError> {
-        self.profile_with(trace, &|k| cache.get_or_simulate(self.spec, k))
+        self.run(&ProfileRequest::new(trace).shared_cache(cache))
     }
 
     /// Core profiling path, parameterized on how a kernel descriptor
-    /// becomes baseline counters (direct simulation or a shared cache).
+    /// becomes baseline counters + timing (direct simulation or a
+    /// shared cache).
     fn profile_with(
         &self,
         trace: &[KernelInvocation],
-        simulate_kernel: &(dyn Fn(&KernelDesc) -> CounterSet + Sync),
+        timing: bool,
+        simulate_kernel: &(dyn Fn(&KernelDesc) -> (CounterSet, CycleBreakdown) + Sync),
     ) -> Result<Profile, SessionError> {
         let metric_refs: Vec<&str> = self.config.metrics.iter().map(|s| s.as_str()).collect();
         let metrics = self.registry.resolve(&metric_refs)?;
@@ -215,7 +282,7 @@ impl<'a> Session<'a> {
             }
         }
         let sim_workers = self.workers_for(unique.len());
-        let baselines: Vec<CounterSet> =
+        let baselines: Vec<(CounterSet, CycleBreakdown)> =
             crate::exec::parallel_map(unique, sim_workers, simulate_kernel);
 
         // 2. Merge each entry's replay passes (pure per entry; with the
@@ -225,18 +292,30 @@ impl<'a> Session<'a> {
         let merge_workers = self.workers_for(entries.len());
         let merged: Vec<Result<CounterSet, SessionError>> =
             crate::exec::parallel_map(entries, merge_workers, |(i, inv)| {
-                let baseline = deterministic.then(|| &baselines[baseline_of[i]]);
+                let baseline = deterministic.then(|| &baselines[baseline_of[i]].0);
                 self.merge_replay_passes(inv, &passes, baseline)
             });
 
         // 3. Aggregate in trace order; the first failing entry (in trace
         // order) wins, exactly as a serial scan would report.
-        for (inv, counters) in trace.iter().zip(merged) {
+        for (i, (inv, counters)) in trace.iter().zip(merged).enumerate() {
             // One merged CounterSet scaled by the invocation count
             // (invocations of one kernel are identical in a
             // deterministic app) — §Perf L3-2: scale once instead of
             // re-accumulating per invocation.
-            profile.record_scaled(&inv.kernel.name, inv.invocations, &counters?, self.spec);
+            let counters = counters?;
+            profile.record_scaled(&inv.kernel.name, inv.invocations, &counters, self.spec);
+            if timing {
+                // Deterministic runs reuse the baseline breakdown; the
+                // nondeterministic path (jittered counters) recomputes
+                // the pure model attribution per entry.
+                let b = if deterministic {
+                    baselines[baseline_of[i]].1
+                } else {
+                    sim::breakdown_of(self.spec, &inv.kernel)
+                };
+                profile.record_timing(&inv.kernel.name, inv.invocations, &b, self.spec);
+            }
             profile.profiling_overhead_s +=
                 passes.len() as f64 * inv.invocations as f64 * self.config.replay_overhead_s;
         }
@@ -338,9 +417,14 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// Convenience: standard sessions on valid traces cannot fail.
+    /// Former panicking convenience; use [`Session::run`] and handle
+    /// (or `.expect`) the `Result`.
+    #[deprecated(
+        since = "0.6.0",
+        note = "use Session::run(&ProfileRequest::new(trace)) and handle the Result"
+    )]
     pub fn profile(&self, trace: &[KernelInvocation]) -> Profile {
-        self.try_profile(trace).expect("standard session must succeed")
+        self.run(&ProfileRequest::new(trace)).expect("standard session must succeed")
     }
 }
 
@@ -349,6 +433,11 @@ mod tests {
     use super::*;
     use crate::device::Precision;
     use crate::sim::kernel::KernelDesc;
+
+    /// The common case in tests: standalone timed run, must succeed.
+    fn profiled(session: &Session, t: &[KernelInvocation]) -> Profile {
+        session.run(&ProfileRequest::new(t)).unwrap()
+    }
 
     fn trace() -> Vec<KernelInvocation> {
         vec![
@@ -368,21 +457,22 @@ mod tests {
     #[test]
     fn standard_session_collects_everything() {
         let spec = GpuSpec::v100();
-        let p = Session::standard(&spec).profile(&trace());
+        let p = profiled(&Session::standard(&spec), &trace());
         assert_eq!(p.n_kernels(), 2);
         assert_eq!(p.total_invocations(), 6);
         let relu = p.kernel("relu").unwrap();
         assert!(relu.flops() > 0.0);
         assert!(relu.seconds() > 0.0);
+        assert!(relu.timing.is_some(), "run() stamps timing by default");
         assert!(p.kernel("cast").unwrap().is_zero_ai());
     }
 
     #[test]
     fn multi_pass_equals_single_pass_on_deterministic_app() {
         let spec = GpuSpec::v100();
-        let packed = Session::standard(&spec).profile(&trace());
+        let packed = profiled(&Session::standard(&spec), &trace());
         let cfg = SessionConfig { one_metric_per_run: true, ..Default::default() };
-        let separate = Session::new(&spec, cfg).profile(&trace());
+        let separate = profiled(&Session::new(&spec, cfg), &trace());
         // "these metrics can be collected on separate runs as well, as
         // long as the execution ... is deterministic" (§II-B3).
         for k in packed.kernels() {
@@ -395,9 +485,9 @@ mod tests {
     #[test]
     fn one_metric_per_run_uses_more_passes_and_overhead() {
         let spec = GpuSpec::v100();
-        let packed = Session::standard(&spec).profile(&trace());
+        let packed = profiled(&Session::standard(&spec), &trace());
         let cfg = SessionConfig { one_metric_per_run: true, ..Default::default() };
-        let separate = Session::new(&spec, cfg).profile(&trace());
+        let separate = profiled(&Session::new(&spec, cfg), &trace());
         assert!(separate.passes > packed.passes);
         assert!(separate.profiling_overhead_s > packed.profiling_overhead_s);
     }
@@ -428,26 +518,27 @@ mod tests {
         // equals a fresh one exactly).
         let spec = GpuSpec::v100();
         let t = trace_with_duplicates();
-        let memoized = Session::standard(&spec).profile(&t);
+        let memoized = profiled(&Session::standard(&spec), &t);
         let cfg = SessionConfig { memoize: false, threads: Some(1), ..Default::default() };
-        let unmemoized = Session::new(&spec, cfg).profile(&t);
+        let unmemoized = profiled(&Session::new(&spec, cfg), &t);
         assert_eq!(memoized, unmemoized);
     }
 
     #[test]
     fn shared_cache_profile_identical_to_plain_profile() {
-        // The cross-session memoizer must not change a single bit, and
-        // a second session over the same cache must re-simulate nothing.
+        // The cross-session memoizer must not change a single bit
+        // (timing included — Profile equality covers it), and a second
+        // session over the same cache must re-simulate nothing.
         let spec = GpuSpec::v100();
         let t = trace_with_duplicates();
-        let plain = Session::standard(&spec).profile(&t);
+        let plain = profiled(&Session::standard(&spec), &t);
         let cache = sim::SharedSimCache::new();
         let session = Session::standard(&spec);
-        let shared = session.try_profile_shared(&t, &cache).unwrap();
+        let shared = session.run(&ProfileRequest::new(&t).shared_cache(&cache)).unwrap();
         assert_eq!(shared, plain);
         let first_sims = cache.stats().1;
         assert_eq!(first_sims as usize, cache.len());
-        let again = session.try_profile_shared(&t, &cache).unwrap();
+        let again = session.run(&ProfileRequest::new(&t).shared_cache(&cache)).unwrap();
         assert_eq!(again, plain);
         assert_eq!(cache.stats().1, first_sims, "second run fully cached");
     }
@@ -459,12 +550,44 @@ mod tests {
         let spec = GpuSpec::v100();
         let t = trace_with_duplicates();
         let serial_cfg = SessionConfig { threads: Some(1), ..Default::default() };
-        let serial = Session::new(&spec, serial_cfg).profile(&t);
+        let serial = profiled(&Session::new(&spec, serial_cfg), &t);
         for threads in [2, 4, 8] {
             let cfg = SessionConfig { threads: Some(threads), ..Default::default() };
-            let parallel = Session::new(&spec, cfg).profile(&t);
+            let parallel = profiled(&Session::new(&spec, cfg), &t);
             assert_eq!(parallel, serial, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn counters_only_run_differs_only_in_timing() {
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let session = Session::standard(&spec);
+        let timed = profiled(&session, &t);
+        let plain = session.run(&ProfileRequest::new(&t).counters_only()).unwrap();
+        assert_ne!(timed, plain, "timing is the only difference, but it is one");
+        for k in timed.kernels() {
+            let other = plain.kernel(&k.name).unwrap();
+            assert_eq!(k.counters, other.counters, "{}", k.name);
+            assert_eq!(k.invocations, other.invocations);
+            assert!(k.timing.is_some() && other.timing.is_none());
+        }
+        assert_eq!(timed.profiling_overhead_s, plain.profiling_overhead_s);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_run() {
+        // The migration shims must stay behaviourally identical to the
+        // new surface until they are removed.
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let session = Session::standard(&spec);
+        let reference = profiled(&session, &t);
+        assert_eq!(session.profile(&t), reference);
+        assert_eq!(session.try_profile(&t).unwrap(), reference);
+        let cache = sim::SharedSimCache::new();
+        assert_eq!(session.try_profile_shared(&t, &cache).unwrap(), reference);
     }
 
     #[test]
@@ -475,7 +598,8 @@ mod tests {
             threads: Some(4),
             ..Default::default()
         };
-        let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
+        let err =
+            Session::new(&spec, cfg).run(&ProfileRequest::new(&trace())).unwrap_err();
         assert!(matches!(err, SessionError::NonDeterministic { .. }), "{err}");
     }
 
@@ -483,7 +607,8 @@ mod tests {
     fn nondeterminism_detected() {
         let spec = GpuSpec::v100();
         let cfg = SessionConfig { nondeterminism: Some(1234), ..Default::default() };
-        let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
+        let err =
+            Session::new(&spec, cfg).run(&ProfileRequest::new(&trace())).unwrap_err();
         assert!(matches!(err, SessionError::NonDeterministic { .. }), "{err}");
     }
 
@@ -494,14 +619,15 @@ mod tests {
             metrics: vec!["sm__no_such.sum".into()],
             ..Default::default()
         };
-        let err = Session::new(&spec, cfg).try_profile(&trace()).unwrap_err();
+        let err =
+            Session::new(&spec, cfg).run(&ProfileRequest::new(&trace())).unwrap_err();
         assert!(matches!(err, SessionError::Metric(_)));
     }
 
     #[test]
     fn empty_trace_empty_profile() {
         let spec = GpuSpec::v100();
-        let p = Session::standard(&spec).profile(&[]);
+        let p = profiled(&Session::standard(&spec), &[]);
         assert_eq!(p.n_kernels(), 0);
         assert_eq!(p.profiling_overhead_s, 0.0);
     }
@@ -509,8 +635,8 @@ mod tests {
     #[test]
     fn profiles_are_stamped_with_the_session_device() {
         let v100 = GpuSpec::v100();
-        assert_eq!(Session::standard(&v100).profile(&trace()).device, "V100-SXM2-16GB");
+        assert_eq!(profiled(&Session::standard(&v100), &trace()).device, "V100-SXM2-16GB");
         let a100 = GpuSpec::a100();
-        assert_eq!(Session::standard(&a100).profile(&trace()).device, "A100-SXM4-40GB");
+        assert_eq!(profiled(&Session::standard(&a100), &trace()).device, "A100-SXM4-40GB");
     }
 }

@@ -1,0 +1,217 @@
+//! Step timelines: where the milliseconds of a training step went
+//! (Wang et al., *Time-Based Roofline for Deep Learning Performance
+//! Analysis*, arXiv 2009.04598). A [`StepTimeline`] folds one
+//! [`Profile`] per phase (forward / backward / optimizer) into
+//! [`PhaseSlice`]s — per-phase elapsed time partitioned into compute-,
+//! memory- and overhead-bound buckets via each kernel's
+//! [`Bound`](crate::sim::Bound) — plus the step-wide idle (launch/
+//! drain ramp) component. Rendering lives in
+//! [`crate::roofline::time`].
+//!
+//! Phase labels are plain strings so the profiler layer stays
+//! independent of `dl::lower::Phase`; callers pass `phase.name()`.
+
+use crate::profiler::profile::Profile;
+use crate::sim::cycles::Bound;
+
+/// One phase's slice of the step: elapsed seconds plus the
+/// bound-bucket partition. The three buckets (`compute_s`, `memory_s`,
+/// `overhead_s`) partition `seconds` exactly — each kernel's full
+/// elapsed time lands in the single bucket its [`Bound`] names.
+/// `ramp_s` is a *component* (launch/drain cycles inside every
+/// kernel), not a fourth bucket.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseSlice {
+    pub label: String,
+    /// Elapsed seconds of the phase (sum of kernel durations).
+    pub seconds: f64,
+    /// Seconds spent in compute-bound kernels.
+    pub compute_s: f64,
+    /// Seconds spent in memory-bound kernels.
+    pub memory_s: f64,
+    /// Seconds spent in overhead-bound kernels (ramp dominates the
+    /// body). Kernels without timing data also land here.
+    pub overhead_s: f64,
+    /// Launch/drain ramp seconds across all kernels of the phase.
+    pub ramp_s: f64,
+    /// Distinct kernels in the phase.
+    pub kernels: usize,
+    /// Total kernel invocations in the phase.
+    pub invocations: u64,
+}
+
+/// A training step assembled from per-phase profiles.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepTimeline {
+    /// Device the step ran on (from the first profile's stamp, or set
+    /// via [`StepTimeline::new`]).
+    pub device: String,
+    pub phases: Vec<PhaseSlice>,
+}
+
+impl StepTimeline {
+    pub fn new(device: &str) -> StepTimeline {
+        StepTimeline {
+            device: device.to_string(),
+            phases: Vec::new(),
+        }
+    }
+
+    /// Fold one phase's profile into a [`PhaseSlice`] and append it.
+    /// Empty profiles produce a zero slice — a TF step keeps its
+    /// (empty) optimizer row rather than dropping the phase.
+    pub fn push_phase(&mut self, label: &str, profile: &Profile) {
+        if self.device.is_empty() {
+            self.device = profile.device.clone();
+        }
+        let mut slice = PhaseSlice {
+            label: label.to_string(),
+            ..PhaseSlice::default()
+        };
+        for k in profile.kernels() {
+            let d = k.duration_s();
+            slice.seconds += d;
+            match k.bound().unwrap_or(Bound::Overhead) {
+                Bound::Compute => slice.compute_s += d,
+                Bound::Memory => slice.memory_s += d,
+                Bound::Overhead => slice.overhead_s += d,
+            }
+            if let Some(t) = &k.timing {
+                slice.ramp_s += t.ramp_s;
+            }
+            slice.kernels += 1;
+            slice.invocations += k.invocations;
+        }
+        self.phases.push(slice);
+    }
+
+    /// Build a timeline from `(label, profile)` pairs in step order.
+    pub fn from_phases<'a, I>(device: &str, phases: I) -> StepTimeline
+    where
+        I: IntoIterator<Item = (&'a str, &'a Profile)>,
+    {
+        let mut t = StepTimeline::new(device);
+        for (label, p) in phases {
+            t.push_phase(label, p);
+        }
+        t
+    }
+
+    /// Total step time: the sum of phase times (per-phase times sum to
+    /// this by construction).
+    pub fn step_seconds(&self) -> f64 {
+        self.phases.iter().map(|p| p.seconds).sum()
+    }
+
+    /// Step-wide idle time: launch/drain ramp summed over every kernel
+    /// invocation. A component of `step_seconds`, not an addition to it.
+    pub fn idle_seconds(&self) -> f64 {
+        self.phases.iter().map(|p| p.ramp_s).sum()
+    }
+
+    /// Step-wide `(compute, memory, overhead)` bucket seconds.
+    pub fn bucket_seconds(&self) -> (f64, f64, f64) {
+        self.phases.iter().fold((0.0, 0.0, 0.0), |acc, p| {
+            (acc.0 + p.compute_s, acc.1 + p.memory_s, acc.2 + p.overhead_s)
+        })
+    }
+
+    /// Total distinct kernels across phases (phases are separate
+    /// profiles, so a kernel appearing in two phases counts twice).
+    pub fn total_kernels(&self) -> usize {
+        self.phases.iter().map(|p| p.kernels).sum()
+    }
+
+    /// Total invocations across phases.
+    pub fn total_invocations(&self) -> u64 {
+        self.phases.iter().map(|p| p.invocations).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{GpuSpec, Precision};
+    use crate::sim::{self, KernelDesc};
+
+    fn timed_profile(spec: &GpuSpec, kernels: &[(&str, u64, KernelDesc)]) -> Profile {
+        let mut p = Profile::for_device(spec);
+        for (name, inv, k) in kernels {
+            let (c, b) = sim::simulate_timed(spec, k);
+            p.record_scaled(name, *inv, &c, spec);
+            p.record_timing(name, *inv, &b, spec);
+        }
+        p
+    }
+
+    #[test]
+    fn buckets_partition_phase_time() {
+        let spec = GpuSpec::v100();
+        let fwd = timed_profile(
+            &spec,
+            &[
+                (
+                    "gemm",
+                    4,
+                    KernelDesc::gemm("gemm", 1024, 1024, 1024, Precision::Fp16, true, 64, &spec),
+                ),
+                ("relu", 8, KernelDesc::streaming_elementwise("relu", 1 << 20, Precision::Fp32, 1)),
+                ("tiny", 2, KernelDesc::streaming_elementwise("tiny", 64, Precision::Fp32, 0)),
+            ],
+        );
+        let mut t = StepTimeline::new("");
+        t.push_phase("forward", &fwd);
+        assert_eq!(t.device, spec.name, "device picked up from the profile");
+        let s = &t.phases[0];
+        let parts = s.compute_s + s.memory_s + s.overhead_s;
+        assert!((parts - s.seconds).abs() <= 1e-12 * s.seconds, "buckets partition the phase");
+        assert!(s.compute_s > 0.0, "tensor GEMM is compute-bound");
+        assert!(s.memory_s > 0.0, "streaming relu is memory-bound");
+        assert!(s.overhead_s > 0.0, "tiny kernel is ramp-dominated");
+        assert!(s.ramp_s > 0.0 && s.ramp_s < s.seconds);
+        assert_eq!(s.kernels, 3);
+        assert_eq!(s.invocations, 14);
+    }
+
+    #[test]
+    fn phase_times_sum_to_step_total_and_empty_phases_survive() {
+        let spec = GpuSpec::v100();
+        let a = timed_profile(
+            &spec,
+            &[("x", 2, KernelDesc::streaming_elementwise("x", 1 << 16, Precision::Fp32, 1))],
+        );
+        let b = timed_profile(
+            &spec,
+            &[("y", 3, KernelDesc::streaming_elementwise("y", 1 << 18, Precision::Fp16, 2))],
+        );
+        let empty = Profile::for_device(&spec);
+        let t = StepTimeline::from_phases(
+            &spec.name,
+            [("forward", &a), ("backward", &b), ("optimizer", &empty)],
+        );
+        assert_eq!(t.phases.len(), 3, "empty optimizer keeps its row");
+        assert_eq!(t.phases[2].seconds, 0.0);
+        let by_phase: f64 = t.phases.iter().map(|p| p.seconds).sum();
+        assert_eq!(t.step_seconds(), by_phase);
+        let want = a.total_seconds() + b.total_seconds();
+        assert!((t.step_seconds() - want).abs() <= 1e-9 * want);
+        assert!(t.idle_seconds() > 0.0);
+        assert!(t.idle_seconds() < t.step_seconds());
+    }
+
+    #[test]
+    fn untimed_profiles_fall_into_overhead_bucket() {
+        // Hand-assembled / CSV-imported profiles carry no timing; the
+        // timeline still renders, attributing them to overhead.
+        let spec = GpuSpec::v100();
+        let k = KernelDesc::streaming_elementwise("z", 1 << 18, Precision::Fp32, 1);
+        let c = sim::simulate(&spec, &k);
+        let mut p = Profile::for_device(&spec);
+        p.record_scaled("z", 2, &c, &spec);
+        let mut t = StepTimeline::new(&spec.name);
+        t.push_phase("forward", &p);
+        let s = &t.phases[0];
+        assert_eq!(s.overhead_s, s.seconds);
+        assert_eq!(s.ramp_s, 0.0);
+    }
+}

@@ -18,7 +18,7 @@ use crate::util::error::{self as anyhow, Result};
 use crate::dl::deepcam::{deepcam, DeepCamConfig};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
 use crate::dl::{Graph, Policy};
-use crate::profiler::{Profile, Session};
+use crate::profiler::{Profile, ProfileRequest, Session};
 use crate::roofline::chart::RooflineChart;
 use crate::roofline::model::RooflineModel;
 use crate::util::Json;
@@ -99,7 +99,9 @@ pub(crate) fn paper_graph() -> &'static Graph {
 /// device (lowering and collection both target the same spec).
 pub fn profile_for(spec: &GpuSpec, fig: &FigSpec) -> (FrameworkTrace, Profile) {
     let trace = lower(paper_graph(), fig.framework, fig.policy, spec);
-    let profile = Session::standard(spec).profile(trace.phase(fig.phase));
+    let profile = Session::standard(spec)
+        .run(&ProfileRequest::new(trace.phase(fig.phase)))
+        .expect("standard session on a lowered trace cannot fail");
     (trace, profile)
 }
 
@@ -174,6 +176,7 @@ pub fn generate_for(spec: &GpuSpec, id: &str) -> Result<Artifact> {
         ]),
         svg: Some(chart.to_svg()),
         csv: None,
+        lanes: Vec::new(),
     })
 }
 

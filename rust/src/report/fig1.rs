@@ -111,6 +111,7 @@ pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
         ]),
         svg: Some(chart.to_svg()),
         csv: None,
+        lanes: Vec::new(),
     })
 }
 

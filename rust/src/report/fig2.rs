@@ -46,6 +46,7 @@ pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
         json: Json::obj(vec![("rows", Json::arr(rows))]),
         svg: Some(svg),
         csv: None,
+        lanes: Vec::new(),
     })
 }
 

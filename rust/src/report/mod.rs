@@ -30,11 +30,27 @@ pub struct Artifact {
     /// CSV payload (Nsight-style counter rows or summary tables), when
     /// the artifact carries one — scenario-matrix artifacts do.
     pub csv: Option<String>,
+    /// Extra named lanes, written as `{id}.{kind}` by
+    /// [`Artifact::write_all`] — e.g. the time-based Roofline lanes
+    /// `timeline.txt` / `timeline.svg` that ride alongside the four
+    /// core lanes without perturbing their bytes. Attach with
+    /// [`Artifact::with_lane`].
+    pub lanes: Vec<(String, String)>,
 }
 
 impl Artifact {
-    /// Write text/json[/svg][/csv] files into `dir`.
-    pub fn write_to(&self, dir: &Path) -> Result<()> {
+    /// Attach an extra output lane. `kind` is the file suffix after the
+    /// artifact id — `with_lane("timeline.txt", ..)` on artifact `fig3`
+    /// writes `fig3.timeline.txt`.
+    pub fn with_lane(mut self, kind: &str, content: impl Into<String>) -> Artifact {
+        self.lanes.push((kind.to_string(), content.into()));
+        self
+    }
+
+    /// Write every lane into `dir`: the core text/json[/svg][/csv]
+    /// quartet plus all extra lanes. The single emission point for all
+    /// artifact producers (`repro report|profile|matrix`).
+    pub fn write_all(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join(format!("{}.txt", self.id)), &self.text)?;
         std::fs::write(
@@ -47,7 +63,15 @@ impl Artifact {
         if let Some(csv) = &self.csv {
             std::fs::write(dir.join(format!("{}.csv", self.id)), csv)?;
         }
+        for (kind, content) in &self.lanes {
+            std::fs::write(dir.join(format!("{}.{kind}", self.id)), content)?;
+        }
         Ok(())
+    }
+
+    /// Back-compat alias for [`Artifact::write_all`].
+    pub fn write_to(&self, dir: &Path) -> Result<()> {
+        self.write_all(dir)
     }
 }
 
@@ -85,6 +109,31 @@ mod tests {
     #[test]
     fn unknown_id_is_error() {
         assert!(generate("fig99").is_err());
+    }
+
+    #[test]
+    fn lanes_write_next_to_core_files() {
+        let a = Artifact {
+            id: "probe".into(),
+            title: "probe".into(),
+            text: "text".into(),
+            json: crate::util::Json::str("x"),
+            svg: Some("<svg/>".into()),
+            csv: None,
+            lanes: Vec::new(),
+        }
+        .with_lane("timeline.txt", "step total");
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-lanes-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        a.write_all(&dir).unwrap();
+        assert!(dir.join("probe.txt").exists());
+        assert!(dir.join("probe.json").exists());
+        assert!(dir.join("probe.svg").exists());
+        assert!(!dir.join("probe.csv").exists());
+        let lane = std::fs::read_to_string(dir.join("probe.timeline.txt")).unwrap();
+        assert_eq!(lane, "step total");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

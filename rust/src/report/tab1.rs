@@ -49,6 +49,7 @@ pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
         json: Json::obj(vec![("rows", Json::arr(rows))]),
         svg: None,
         csv: None,
+        lanes: Vec::new(),
     })
 }
 

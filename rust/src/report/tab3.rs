@@ -134,6 +134,7 @@ pub fn generate_for(spec: &GpuSpec) -> Result<Artifact> {
         ]),
         svg: None,
         csv: None,
+        lanes: Vec::new(),
     })
 }
 

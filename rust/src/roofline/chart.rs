@@ -384,7 +384,7 @@ fn perf_label(v: f64) -> String {
 mod tests {
     use super::*;
     use crate::device::{GpuSpec, Precision};
-    use crate::profiler::Session;
+    use crate::profiler::{ProfileRequest, Session};
     use crate::roofline::model::RooflineModel;
     use crate::sim::kernel::{KernelDesc, KernelInvocation};
 
@@ -400,7 +400,7 @@ mod tests {
                 stream: 0,
             },
         ];
-        let profile = Session::standard(&spec).profile(&trace);
+        let profile = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
         let model = RooflineModel::from_profile(&spec, &profile);
         (spec, model)
     }

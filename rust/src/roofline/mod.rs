@@ -6,9 +6,12 @@
 //!   idiom: blue/red/green circles for L1/L2/HBM, circle area ∝ kernel
 //!   run time, diagonal bandwidth ceilings, horizontal compute ceilings
 //!   (Figs 1, 3–9).
+//! * [`time`] — time-based Roofline renderings (arXiv 2009.04598):
+//!   step-time breakdown tables and time-weighted charts.
 
 pub mod chart;
 pub mod model;
+pub mod time;
 
 pub use chart::{ChartConfig, RooflineChart};
 pub use model::{Ceilings, KernelPoint, RooflineModel};

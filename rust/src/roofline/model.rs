@@ -224,7 +224,7 @@ impl RooflineModel {
 mod tests {
     use super::*;
     use crate::device::Precision;
-    use crate::profiler::Session;
+    use crate::profiler::{ProfileRequest, Session};
     use crate::sim::kernel::{KernelDesc, KernelInvocation};
 
     #[test]
@@ -259,7 +259,7 @@ mod tests {
                 "cast", 1 << 18, Precision::Fp16, 0,
             )),
         ];
-        let profile = Session::standard(&spec).profile(&trace);
+        let profile = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
         let model = RooflineModel::from_profile(&spec, &profile);
         assert_eq!(model.points.len(), 1);
         assert_eq!(model.points[0].name, "fma");
@@ -271,7 +271,7 @@ mod tests {
         let trace = vec![KernelInvocation::once(KernelDesc::streaming_elementwise(
             "stream", 1 << 22, Precision::Fp32, 1,
         ))];
-        let profile = Session::standard(&spec).profile(&trace);
+        let profile = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
         let model = RooflineModel::from_profile(&spec, &profile);
         assert!(model.points[0].is_streaming());
     }
@@ -280,7 +280,9 @@ mod tests {
     fn gemm_not_streaming() {
         let spec = GpuSpec::v100();
         let g = KernelDesc::gemm("g", 2048, 2048, 2048, Precision::Fp16, true, 64, &spec);
-        let profile = Session::standard(&spec).profile(&[KernelInvocation::once(g)]);
+        let profile = Session::standard(&spec)
+            .run(&ProfileRequest::new(&[KernelInvocation::once(g)]))
+            .unwrap();
         let model = RooflineModel::from_profile(&spec, &profile);
         assert!(!model.points[0].is_streaming());
     }
@@ -327,7 +329,7 @@ mod tests {
                 "s", 1 << 20, Precision::Fp32, 8,
             )),
         ];
-        let profile = Session::standard(&spec).profile(&trace);
+        let profile = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
         let model = RooflineModel::from_profile(&spec, &profile);
         model.validate_bounds().unwrap();
     }

@@ -1,0 +1,220 @@
+//! Time-based Roofline renderings (Wang et al., *Time-Based Roofline
+//! for Deep Learning Performance Analysis*, arXiv 2009.04598): the
+//! position-on-the-chart view answers "how efficient is this kernel",
+//! the time view answers "where did the milliseconds go". Three
+//! renderings:
+//!
+//! * [`step_table`] — per-phase step-time breakdown: elapsed time,
+//!   share of step, and the compute-/memory-/overhead-bound buckets,
+//!   plus the step-wide idle (launch/drain ramp) component;
+//! * [`kernel_time_table`] — per-kernel durations, shares and bounds,
+//!   hottest first;
+//! * [`time_weighted_svg`] — the paper-style hierarchical chart with
+//!   every dot labelled by its share of step time (dot area is already
+//!   ∝ kernel run time in the base chart).
+
+use crate::device::GpuSpec;
+use crate::profiler::profile::Profile;
+use crate::profiler::timeline::StepTimeline;
+use crate::roofline::chart::RooflineChart;
+use crate::roofline::model::RooflineModel;
+use crate::util::fmt;
+use crate::util::Table;
+
+/// Step-time breakdown table: one row per phase, an idle component row
+/// (launch/drain ramp summed over every kernel — a *component* of the
+/// phase times, not an extra addend), and a "step total" row. Per-phase
+/// times sum to the step total by construction.
+pub fn step_table(t: &StepTimeline) -> Table {
+    let mut tb = Table::new(&[
+        "phase",
+        "time",
+        "step%",
+        "compute-bound",
+        "memory-bound",
+        "overhead-bound",
+        "kernels",
+        "inv",
+    ]);
+    let step = t.step_seconds();
+    let share = |x: f64| {
+        if step > 0.0 {
+            fmt::pct(x / step)
+        } else {
+            "-".to_string()
+        }
+    };
+    let bucket = |x: f64, of: f64| {
+        if of > 0.0 {
+            format!("{} ({})", fmt::duration(x), fmt::pct(x / of))
+        } else {
+            "-".to_string()
+        }
+    };
+    for p in &t.phases {
+        tb.row(&[
+            p.label.clone(),
+            fmt::duration(p.seconds),
+            share(p.seconds),
+            bucket(p.compute_s, p.seconds),
+            bucket(p.memory_s, p.seconds),
+            bucket(p.overhead_s, p.seconds),
+            p.kernels.to_string(),
+            p.invocations.to_string(),
+        ]);
+    }
+    tb.row(&[
+        "idle (launch/drain)".to_string(),
+        fmt::duration(t.idle_seconds()),
+        share(t.idle_seconds()),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    let (c, m, o) = t.bucket_seconds();
+    tb.row(&[
+        "step total".to_string(),
+        fmt::duration(step),
+        if step > 0.0 { "100.0%".to_string() } else { "-".to_string() },
+        bucket(c, step),
+        bucket(m, step),
+        bucket(o, step),
+        t.total_kernels().to_string(),
+        t.total_invocations().to_string(),
+    ]);
+    tb
+}
+
+/// Per-kernel "where the milliseconds went" table, hottest first.
+pub fn kernel_time_table(profile: &Profile) -> Table {
+    let mut tb = Table::new(&["kernel", "time", "share", "bound", "compute", "memory", "ramp"]);
+    let total: f64 = profile.kernels().map(|k| k.duration_s()).sum();
+    let mut kernels: Vec<_> = profile.kernels().collect();
+    kernels.sort_by(|a, b| b.duration_s().partial_cmp(&a.duration_s()).unwrap());
+    for k in kernels {
+        let (bound, compute, memory, ramp) = match &k.timing {
+            Some(t) => (
+                t.bound().name().to_string(),
+                fmt::duration(t.compute_s),
+                fmt::duration(t.memory_s),
+                fmt::duration(t.ramp_s),
+            ),
+            None => ("-".to_string(), "-".to_string(), "-".to_string(), "-".to_string()),
+        };
+        tb.row(&[
+            k.name.clone(),
+            fmt::duration(k.duration_s()),
+            if total > 0.0 { fmt::pct(k.duration_s() / total) } else { "-".to_string() },
+            bound,
+            compute,
+            memory,
+            ramp,
+        ]);
+    }
+    tb
+}
+
+/// Time-weighted hierarchical Roofline chart: the paper-style triplet
+/// scatter with every kernel's label carrying its share of step time
+/// (dot area is ∝ run time already — `ChartConfig::r_min/r_max` scale
+/// by `sqrt(seconds)`). Returns `None` when the profile contributes no
+/// plottable points (all-zero-AI or empty).
+pub fn time_weighted_svg(spec: &GpuSpec, profile: &Profile, title: &str) -> Option<String> {
+    let mut model = RooflineModel::from_profile(spec, profile);
+    if model.points.is_empty() {
+        return None;
+    }
+    let total: f64 = profile.kernels().map(|k| k.duration_s()).sum();
+    if total <= 0.0 {
+        return None;
+    }
+    // Shares are of the *whole* profile time, zero-AI kernels included
+    // — the labels answer "what fraction of the step is this dot".
+    let shares: Vec<String> = model
+        .points
+        .iter()
+        .map(|p| {
+            let d = profile.kernel(&p.name).map(|k| k.duration_s()).unwrap_or(p.seconds);
+            fmt::pct(d / total)
+        })
+        .collect();
+    for (p, share) in model.points.iter_mut().zip(shares) {
+        p.name = format!("{} [{share}]", p.name);
+    }
+    Some(RooflineChart::overlay(&model, title).to_svg())
+}
+
+/// The standard `timeline.txt` lane payload: step-time breakdown +
+/// per-kernel timing, under one title.
+pub fn timeline_text(title: &str, timeline: &StepTimeline, profile: &Profile) -> String {
+    format!(
+        "== {title} — time-based Roofline ==\ndevice: {}\n\nstep-time breakdown:\n{}\n\
+         per-kernel timing (hottest first):\n{}",
+        timeline.device,
+        step_table(timeline).render(),
+        kernel_time_table(profile).render(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Precision;
+    use crate::profiler::{ProfileRequest, Session};
+    use crate::sim::kernel::{KernelDesc, KernelInvocation};
+
+    fn trace(spec: &GpuSpec) -> Vec<KernelInvocation> {
+        vec![
+            KernelInvocation {
+                kernel: KernelDesc::gemm("hmma", 1024, 1024, 1024, Precision::Fp16, true, 64, spec),
+                invocations: 3,
+                stream: 0,
+            },
+            KernelInvocation {
+                kernel: KernelDesc::streaming_elementwise("relu", 1 << 20, Precision::Fp32, 1),
+                invocations: 5,
+                stream: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn step_table_rows_and_totals() {
+        let spec = GpuSpec::v100();
+        let p = Session::standard(&spec).run(&ProfileRequest::new(&trace(&spec))).unwrap();
+        let mut t = StepTimeline::new(&spec.name);
+        t.push_phase("forward", &p);
+        let text = step_table(&t).render();
+        assert!(text.contains("forward"));
+        assert!(text.contains("idle (launch/drain)"));
+        assert!(text.contains("step total"));
+        assert!(text.contains("100.0%"));
+    }
+
+    #[test]
+    fn kernel_table_is_sorted_and_bounded() {
+        let spec = GpuSpec::v100();
+        let p = Session::standard(&spec).run(&ProfileRequest::new(&trace(&spec))).unwrap();
+        let text = kernel_time_table(&p).render();
+        assert!(text.contains("hmma"));
+        assert!(text.contains("relu"));
+        // Both bound labels appear: the tensor GEMM is compute-bound,
+        // the big streaming kernel memory-bound.
+        assert!(text.contains("compute"));
+        assert!(text.contains("memory"));
+    }
+
+    #[test]
+    fn time_weighted_chart_labels_shares() {
+        let spec = GpuSpec::v100();
+        let p = Session::standard(&spec).run(&ProfileRequest::new(&trace(&spec))).unwrap();
+        let svg = time_weighted_svg(&spec, &p, "t").unwrap();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.contains('%'), "labels carry time shares");
+        assert!(svg.contains("hmma ["));
+        // Empty profile → no chart.
+        assert!(time_weighted_svg(&spec, &Profile::for_device(&spec), "t").is_none());
+    }
+}

@@ -40,10 +40,11 @@ use crate::device::{GpuSpec, MemLevel};
 use crate::dl::lower::{lower, Framework, FrameworkTrace, Phase};
 use crate::dl::workloads::{self, Scale, WorkloadSpec};
 use crate::dl::{Graph, Policy};
-use crate::profiler::{export, Profile, Session, SessionConfig};
+use crate::profiler::{export, Profile, ProfileRequest, Session, SessionConfig, StepTimeline};
 use crate::report::Artifact;
 use crate::roofline::chart::RooflineChart;
 use crate::roofline::model::{Ceilings, KernelPoint, RooflineModel};
+use crate::roofline::time as rtime;
 use crate::sim::SharedSimCache;
 use crate::util::table::Align;
 use crate::util::{fmt, Json, Table};
@@ -159,25 +160,12 @@ impl ScenarioMatrix {
         Ok(self)
     }
 
-    /// Restrict the device axis to a comma-separated name/alias list
-    /// (`"all"` selects every registered device); unknown names are a
-    /// clean [`CliError`] with the registry's did-you-mean hint.
+    /// Restrict the device axis via the unified `--device` list syntax
+    /// ([`crate::cli::parse_device_list`]: comma lists, `all`,
+    /// `default`); unknown names are a clean [`CliError`] with the
+    /// registry's did-you-mean hint.
     pub fn with_devices(mut self, list: &str) -> Result<ScenarioMatrix, CliError> {
-        if list == "all" {
-            self.devices = devices::entries().iter().collect();
-            return Ok(self);
-        }
-        let mut selected: Vec<&'static DeviceEntry> = Vec::new();
-        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-            let d = devices::lookup(name)?;
-            if !selected.iter().any(|s| s.name == d.name) {
-                selected.push(d);
-            }
-        }
-        if selected.is_empty() {
-            return Err(CliError("--device selected nothing (try --help)".into()));
-        }
-        self.devices = selected;
+        self.devices = crate::cli::parse_device_list(list)?;
         Ok(self)
     }
 
@@ -238,10 +226,11 @@ impl ScenarioMatrix {
     /// 2. lower each (workload, device, framework, policy) combination
     ///    once — the three phases of a combination share one lowering,
     ///    and lowering is device-aware (tile selection, HMMA width);
-    /// 3. profile every scenario through [`Session::try_profile_shared`]
-    ///    over one [`SharedSimCache`] *per device* (the cache is keyed
-    ///    by descriptor, so each device needs its own), fanned out with
-    ///    [`crate::exec::parallel_map`] (results in enumeration order).
+    /// 3. profile every scenario through [`Session::run`] with a
+    ///    [`ProfileRequest`] carrying one [`SharedSimCache`] *per
+    ///    device* (the cache is keyed by descriptor, so each device
+    ///    needs its own), fanned out with [`crate::exec::parallel_map`]
+    ///    (results in enumeration order).
     pub fn run(&self) -> MatrixRun {
         let scenarios = self.enumerate();
 
@@ -291,7 +280,7 @@ impl ScenarioMatrix {
                 let key = (widx[sc.workload.name], di, sc.framework, sc.policy);
                 let trace = traces[combo_of[&key]].phase(sc.phase);
                 sessions[di]
-                    .try_profile_shared(trace, &caches[di])
+                    .run(&ProfileRequest::new(trace).shared_cache(&caches[di]))
                     .expect("standard session on a lowered trace cannot fail")
             });
 
@@ -429,10 +418,22 @@ impl ScenarioResult {
         })
     }
 
+    /// This scenario's step timeline: one phase slice (a scenario
+    /// profiles exactly one phase of the step).
+    pub fn timeline(&self) -> StepTimeline {
+        let mut t = StepTimeline::new(self.scenario.device.display);
+        t.push_phase(self.scenario.phase.name(), &self.profile);
+        t
+    }
+
     /// Per-scenario artifact: kernel-table text, summary JSON,
     /// paper-style SVG chart, and the Nsight-style counter CSV. The
     /// scenario's device supplies the ceilings and is recorded in the
-    /// JSON payload (and the CSV's `# device=` stamp).
+    /// JSON payload (and the CSV's `# device=` stamp). The time-based
+    /// Roofline rides in extra lanes (`timeline.txt` — step-time
+    /// breakdown + per-kernel timing — and `timeline.svg`, the
+    /// time-weighted chart), keeping the four core lanes byte-identical
+    /// to the counter-only pipeline.
     pub fn to_artifact(&self) -> Artifact {
         let model = self.roofline_model();
         let bound_violation = model.validate_bounds().err();
@@ -462,7 +463,13 @@ impl ScenarioResult {
                 })
                 .collect(),
         );
-        Artifact {
+        let timeline_lane = rtime::timeline_text(&title, &self.timeline(), &self.profile);
+        let timeline_svg = rtime::time_weighted_svg(
+            &self.scenario.device.spec(),
+            &self.profile,
+            &format!("{title} — time-weighted"),
+        );
+        let artifact = Artifact {
             id: self.id(),
             title,
             text,
@@ -488,6 +495,12 @@ impl ScenarioResult {
             ]),
             svg: if self.is_empty() { None } else { Some(chart.to_svg()) },
             csv: if self.is_empty() { None } else { Some(export::to_csv(&self.profile)) },
+            lanes: Vec::new(),
+        };
+        let artifact = artifact.with_lane("timeline.txt", timeline_lane);
+        match timeline_svg {
+            Some(svg) => artifact.with_lane("timeline.svg", svg),
+            None => artifact,
         }
     }
 }
@@ -624,6 +637,106 @@ pub fn cross_device_table(run: &MatrixRun) -> Table {
     t
 }
 
+/// Cross-scenario step-time pivot (time-based Roofline): one row per
+/// scenario — step time, compute-/memory-/overhead-bound shares, and
+/// the idle (launch/drain) component share. Rendered into the matrix
+/// artifact's `timeline.txt` lane.
+pub fn step_time_pivot<'a, I>(results: I) -> Table
+where
+    I: IntoIterator<Item = &'a ScenarioResult>,
+{
+    let mut t = Table::new(&["scenario", "time", "compute", "memory", "overhead", "idle"])
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for r in results {
+        if r.is_empty() {
+            t.row(&[r.id(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        let tl = r.timeline();
+        let step = tl.step_seconds();
+        let (c, m, o) = tl.bucket_seconds();
+        let pct = |x: f64| {
+            if step > 0.0 {
+                fmt::pct(x / step)
+            } else {
+                "-".to_string()
+            }
+        };
+        t.row(&[
+            r.id(),
+            fmt::duration(step),
+            pct(c),
+            pct(m),
+            pct(o),
+            pct(tl.idle_seconds()),
+        ]);
+    }
+    t
+}
+
+/// Cross-device step-time pivot: one row per device-less scenario
+/// stem, one (time, bound-mix) column pair per device. The bound mix
+/// is a compact `c/m/o` percent triple — how the compute-/memory-/
+/// overhead-bound split shifts between devices.
+pub fn cross_device_step_table(run: &MatrixRun) -> Table {
+    let entries = run.device_entries();
+    let mut headers: Vec<String> = vec!["scenario".into()];
+    for d in &entries {
+        headers.push(format!("time({})", d.short));
+        headers.push(format!("c/m/o({})", d.short));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut aligns = vec![Align::Left];
+    aligns.resize(headers.len(), Align::Right);
+    let mut t = Table::new(&header_refs).aligns(&aligns);
+
+    let mut stems: Vec<String> = Vec::new();
+    let mut by_cell: HashMap<(String, &str), &ScenarioResult> = HashMap::new();
+    for r in &run.results {
+        let stem = r.scenario.base_id();
+        if !stems.contains(&stem) {
+            stems.push(stem.clone());
+        }
+        by_cell.insert((stem, r.scenario.device.name), r);
+    }
+    for stem in stems {
+        let mut row = vec![stem.clone()];
+        for d in &entries {
+            match by_cell.get(&(stem.clone(), d.name)) {
+                Some(r) if !r.is_empty() => {
+                    let tl = r.timeline();
+                    let step = tl.step_seconds();
+                    let (c, m, o) = tl.bucket_seconds();
+                    row.push(fmt::duration(step));
+                    row.push(if step > 0.0 {
+                        format!(
+                            "{:.0}/{:.0}/{:.0}",
+                            100.0 * c / step,
+                            100.0 * m / step,
+                            100.0 * o / step
+                        )
+                    } else {
+                        "-".into()
+                    });
+                }
+                _ => {
+                    row.push("-".into());
+                    row.push("-".into());
+                }
+            }
+        }
+        t.row(&row);
+    }
+    t
+}
+
 /// The cross-scenario report: comparison table + combined overlay
 /// Roofline chart (every scenario as one labelled aggregate triplet)
 /// + machine-readable JSON/CSV.
@@ -696,6 +809,16 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
             })),
         ),
     ]);
+    let mut timeline_lane = format!(
+        "cross-scenario step-time pivot (time-based Roofline):\n{}",
+        step_time_pivot(&run.results).render()
+    );
+    if multi_device {
+        timeline_lane.push_str(&format!(
+            "\ncross-device step-time pivot:\n{}",
+            cross_device_step_table(run).render()
+        ));
+    }
     Artifact {
         id: "matrix".into(),
         title: "Cross-scenario comparison (hierarchical Roofline overlay)".into(),
@@ -703,7 +826,9 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
         json,
         svg: Some(chart.to_svg()),
         csv: Some(comparison_csv(&run.results)),
+        lanes: Vec::new(),
     }
+    .with_lane("timeline.txt", timeline_lane)
 }
 
 /// One device's slice of a multi-device run as its own overlay
@@ -742,6 +867,11 @@ pub fn device_comparison_artifact(run: &MatrixRun, device: &DeviceEntry) -> Arti
             ]);
         }
     }
+    let timeline_lane = format!(
+        "step-time pivot on {} (time-based Roofline):\n{}",
+        spec.name,
+        step_time_pivot(results.iter().copied()).render()
+    );
     Artifact {
         id: format!("matrix@{}", device.short),
         title: title.clone(),
@@ -753,7 +883,9 @@ pub fn device_comparison_artifact(run: &MatrixRun, device: &DeviceEntry) -> Arti
         ]),
         svg: Some(chart.to_svg()),
         csv: None,
+        lanes: Vec::new(),
     }
+    .with_lane("timeline.txt", timeline_lane)
 }
 
 #[cfg(test)]
@@ -840,7 +972,9 @@ mod tests {
             let spec = r.scenario.device.spec();
             let g = r.scenario.workload.build(r.scenario.scale);
             let t = lower(&g, r.scenario.framework, r.scenario.policy, &spec);
-            let direct = Session::standard(&spec).profile(t.phase(r.scenario.phase));
+            let direct = Session::standard(&spec)
+                .run(&ProfileRequest::new(t.phase(r.scenario.phase)))
+                .unwrap();
             assert_eq!(r.profile, direct, "{}", r.id());
         }
     }
@@ -879,6 +1013,27 @@ mod tests {
             );
             // The counter CSV travels with its device stamp.
             assert!(a.csv.as_ref().unwrap().starts_with("# device=V100-SXM2-16GB"));
+            // Time-based Roofline lanes ride along: the step-time
+            // breakdown and the time-weighted chart.
+            let tl = a.lanes.iter().find(|(k, _)| k == "timeline.txt").unwrap();
+            assert!(tl.1.contains("step total"), "{}", tl.1);
+            assert!(tl.1.contains("per-kernel timing"), "{}", tl.1);
+            let svg_lane = a.lanes.iter().find(|(k, _)| k == "timeline.svg").unwrap();
+            assert!(svg_lane.1.starts_with("<svg"));
+        }
+    }
+
+    #[test]
+    fn scenario_timeline_sums_to_profile_total() {
+        let run = tiny_matrix().run();
+        for r in &run.results {
+            let tl = r.timeline();
+            let want = r.profile.total_seconds();
+            let got = tl.step_seconds();
+            assert!((got - want).abs() <= 1e-9 * want.max(1e-30), "{}: {got} vs {want}", r.id());
+            let (c, m, o) = tl.bucket_seconds();
+            let parts = c + m + o;
+            assert!((parts - got).abs() <= 1e-12 * got.max(1e-30), "{}", r.id());
         }
     }
 
@@ -900,6 +1055,14 @@ mod tests {
         );
         // Single-device run: no cross-device section.
         assert!(!a.text.contains("cross-device comparison"), "{}", a.text);
+        // The step-time pivot rides in the timeline lane, not the text
+        // (the core lanes stay byte-identical to the counter-only
+        // pipeline).
+        assert!(!a.text.contains("step-time"), "{}", a.text);
+        let tl = a.lanes.iter().find(|(k, _)| k == "timeline.txt").unwrap();
+        for r in &run.results {
+            assert!(tl.1.contains(&r.id()), "pivot row for {}", r.id());
+        }
     }
 
     #[test]
@@ -925,6 +1088,8 @@ mod tests {
         let da = device_comparison_artifact(&run, a100);
         assert_eq!(da.id, "matrix@a100");
         assert!(da.svg.as_ref().unwrap().contains("A100-SXM4-40GB"));
+        let da_tl = da.lanes.iter().find(|(k, _)| k == "timeline.txt").unwrap();
+        assert!(da_tl.1.contains("deepcam-lite-pt-forward-O1@a100"), "{}", da_tl.1);
         // The combined artifact carries the pivot and both ceilings.
         let c = comparison_artifact(&run);
         assert!(c.text.contains("cross-device comparison"), "{}", c.text);
@@ -932,6 +1097,11 @@ mod tests {
         let svg = c.svg.as_ref().unwrap();
         assert!(svg.contains("V100-SXM2-16GB") && svg.contains("A100-SXM4-40GB"));
         assert_eq!(c.json.get("devices").unwrap().as_arr().unwrap().len(), 2);
+        // Multi-device: the timeline lane additionally pivots the
+        // step-time buckets across devices.
+        let c_tl = c.lanes.iter().find(|(k, _)| k == "timeline.txt").unwrap();
+        assert!(c_tl.1.contains("cross-device step-time pivot"), "{}", c_tl.1);
+        assert!(c_tl.1.contains("c/m/o(a100)"), "{}", c_tl.1);
     }
 
     #[test]
@@ -953,6 +1123,10 @@ mod tests {
         let a = r.to_artifact();
         assert!(a.svg.is_none() && a.csv.is_none());
         assert!(a.text.contains("no kernels"));
+        // An empty phase still gets its (zero) step-time table, but no
+        // time-weighted chart (nothing to plot).
+        assert!(a.lanes.iter().any(|(k, _)| k == "timeline.txt"));
+        assert!(!a.lanes.iter().any(|(k, _)| k == "timeline.svg"));
         // The comparison table still carries the row.
         let table = comparison_table(&run.results);
         assert_eq!(table.n_rows(), 1);

@@ -35,6 +35,18 @@ pub enum Bound {
     Memory,
 }
 
+impl Bound {
+    /// Lower-case label for tables and CSV ("compute" / "memory" /
+    /// "overhead").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bound::Overhead => "overhead",
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+        }
+    }
+}
+
 impl<'a> CycleModel<'a> {
     pub fn new(spec: &'a GpuSpec) -> CycleModel<'a> {
         CycleModel { spec }

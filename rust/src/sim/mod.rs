@@ -30,7 +30,7 @@ pub mod schedule;
 
 pub use cache::{CacheModel, Traffic};
 pub use counters::{CounterId, CounterSet};
-pub use cycles::CycleModel;
+pub use cycles::{Bound, CycleBreakdown, CycleModel};
 pub use kernel::{AccessPattern, InstMix, KernelDesc, KernelInvocation};
 
 use std::collections::HashMap;
@@ -39,11 +39,30 @@ use std::sync::Mutex;
 
 use crate::device::GpuSpec;
 
+/// Whole-kernel *timed* simulation: counters plus the [`CycleBreakdown`]
+/// that produced them. The breakdown is the time-based Roofline's extra
+/// column (Wang et al., arXiv 2009.04598): where the cycles went
+/// (compute vs memory vs ramp) and which resource bound the kernel —
+/// data [`simulate`] computes internally and used to discard.
+pub fn simulate_timed(spec: &GpuSpec, k: &KernelDesc) -> (CounterSet, CycleBreakdown) {
+    let traffic = CacheModel::new(spec).traffic(k);
+    let breakdown = CycleModel::new(spec).breakdown(k, &traffic);
+    let counters = counters::synthesize(spec, k, &traffic, breakdown.total_cycles);
+    (counters, breakdown)
+}
+
 /// Whole-kernel simulation: traffic + cycles + counters in one call.
 pub fn simulate(spec: &GpuSpec, k: &KernelDesc) -> CounterSet {
+    simulate_timed(spec, k).0
+}
+
+/// The cycle breakdown alone (no counter synthesis). Pure in
+/// `(spec, desc)`, so callers that obtained counters elsewhere — e.g.
+/// a replayed (jittered) execution — can recompute the model-attributed
+/// timing without re-running the full simulation.
+pub fn breakdown_of(spec: &GpuSpec, k: &KernelDesc) -> CycleBreakdown {
     let traffic = CacheModel::new(spec).traffic(k);
-    let cycles = CycleModel::new(spec).elapsed_cycles(k, &traffic);
-    counters::synthesize(spec, k, &traffic, cycles)
+    CycleModel::new(spec).breakdown(k, &traffic)
 }
 
 /// Memoizing wrapper around [`simulate`]: identical kernel descriptors
@@ -101,7 +120,7 @@ impl<'a> SimCache<'a> {
 /// harmless, simulation is pure).
 #[derive(Default)]
 pub struct SharedSimCache {
-    cache: Mutex<HashMap<KernelDesc, CounterSet>>,
+    cache: Mutex<HashMap<KernelDesc, (CounterSet, CycleBreakdown)>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -114,15 +133,27 @@ impl SharedSimCache {
     /// Simulate `k` on `spec`, reusing the cached result for
     /// descriptors already seen by *any* thread.
     pub fn get_or_simulate(&self, spec: &GpuSpec, k: &KernelDesc) -> CounterSet {
-        if let Some(c) = self.cache.lock().unwrap().get(k) {
+        self.get_or_simulate_timed(spec, k).0
+    }
+
+    /// Timed variant of [`SharedSimCache::get_or_simulate`]: the cache
+    /// stores the [`CycleBreakdown`] next to the counters, so the
+    /// shared-cache profiling path yields timing bit-identical to the
+    /// standalone one (both reduce to `simulate_timed`).
+    pub fn get_or_simulate_timed(
+        &self,
+        spec: &GpuSpec,
+        k: &KernelDesc,
+    ) -> (CounterSet, CycleBreakdown) {
+        if let Some((c, b)) = self.cache.lock().unwrap().get(k) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return c.clone();
+            return (c.clone(), *b);
         }
-        let counters = simulate(spec, k);
+        let timed = simulate_timed(spec, k);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut guard = self.cache.lock().unwrap();
-        guard.entry(k.clone()).or_insert_with(|| counters.clone());
-        counters
+        guard.entry(k.clone()).or_insert_with(|| timed.clone());
+        timed
     }
 
     /// Number of distinct kernels simulated so far.
@@ -179,6 +210,27 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(hits + misses, 8, "every lookup counted");
         assert!(misses >= 4, "at least one simulation per distinct kernel");
+    }
+
+    #[test]
+    fn timed_simulation_consistent_with_counters() {
+        // The breakdown and the counters are two views of one cycle
+        // model: total cycles must agree, the timed path must match the
+        // plain one bitwise, and the pure breakdown_of must match the
+        // breakdown simulate_timed threads through.
+        let spec = GpuSpec::v100();
+        for k in [
+            KernelDesc::streaming_elementwise("relu", 1 << 18, Precision::Fp32, 1),
+            KernelDesc::gemm("g", 512, 512, 512, Precision::Fp16, true, 64, &spec),
+        ] {
+            let (counters, b) = simulate_timed(&spec, &k);
+            assert_eq!(counters, simulate(&spec, &k));
+            assert_eq!(b, breakdown_of(&spec, &k));
+            assert_eq!(counters.get_id(CounterId::Cycles), b.total_cycles);
+            let body = b.compute_cycles.max(b.memory_cycles);
+            assert_eq!(b.total_cycles, body + b.ramp_cycles);
+            assert!(b.total_cycles > 0.0);
+        }
     }
 
     #[test]

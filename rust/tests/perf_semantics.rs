@@ -9,7 +9,7 @@ use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework};
 use hroofline::dl::Policy;
 use hroofline::profiler::export::to_csv;
-use hroofline::profiler::{Session, SessionConfig};
+use hroofline::profiler::{ProfileRequest, Session, SessionConfig};
 use hroofline::prop::check;
 use hroofline::sim::kernel::{KernelDesc, KernelInvocation};
 
@@ -21,7 +21,7 @@ fn legacy_config() -> SessionConfig {
 
 #[test]
 fn full_step_profile_bit_identical_across_optimizations() {
-    // The acceptance check for this PR: `Session::standard(..).profile`
+    // The acceptance check for this PR: a standard `Session::run`
     // over a full DeepCAM training step produces the same bits no
     // matter which of memoization / parallel fan-out is active.
     let spec = GpuSpec::v100();
@@ -30,16 +30,16 @@ fn full_step_profile_bit_identical_across_optimizations() {
     let all = trace.all();
     assert!(all.len() > 10, "paper-scale step should have many entries");
 
-    let reference = Session::new(&spec, legacy_config()).profile(&all);
+    let reference = Session::new(&spec, legacy_config()).run(&ProfileRequest::new(&all)).unwrap();
     let reference_csv = to_csv(&reference);
 
-    let standard = Session::standard(&spec).profile(&all);
+    let standard = Session::standard(&spec).run(&ProfileRequest::new(&all)).unwrap();
     assert_eq!(standard, reference, "standard (memoized, auto-threaded)");
     assert_eq!(to_csv(&standard), reference_csv, "serialized output");
 
     for (memoize, threads) in [(true, 1), (true, 8), (false, 8)] {
         let cfg = SessionConfig { memoize, threads: Some(threads), ..Default::default() };
-        let p = Session::new(&spec, cfg).profile(&all);
+        let p = Session::new(&spec, cfg).run(&ProfileRequest::new(&all)).unwrap();
         assert_eq!(p, reference, "memoize={memoize} threads={threads}");
         assert_eq!(to_csv(&p), reference_csv, "memoize={memoize} threads={threads}");
     }
@@ -78,11 +78,12 @@ fn random_traces_profile_identically_memoized_and_parallel() {
             })
             .collect();
 
-        let reference = Session::new(&spec, legacy_config()).profile(&trace);
-        let standard = Session::standard(&spec).profile(&trace);
+        let reference =
+            Session::new(&spec, legacy_config()).run(&ProfileRequest::new(&trace)).unwrap();
+        let standard = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
         assert_eq!(standard, reference);
         let par = SessionConfig { threads: Some(3), ..Default::default() };
-        let parallel = Session::new(&spec, par).profile(&trace);
+        let parallel = Session::new(&spec, par).run(&ProfileRequest::new(&trace)).unwrap();
         assert_eq!(parallel, reference);
         assert_eq!(to_csv(&parallel), to_csv(&reference));
     });
@@ -99,11 +100,11 @@ fn one_metric_per_run_still_bit_identical_under_optimizations() {
 
     let mut legacy = legacy_config();
     legacy.one_metric_per_run = true;
-    let reference = Session::new(&spec, legacy).profile(&all);
+    let reference = Session::new(&spec, legacy).run(&ProfileRequest::new(&all)).unwrap();
 
     let fast =
         SessionConfig { one_metric_per_run: true, threads: Some(4), ..Default::default() };
-    let optimized = Session::new(&spec, fast).profile(&all);
+    let optimized = Session::new(&spec, fast).run(&ProfileRequest::new(&all)).unwrap();
     assert_eq!(optimized, reference);
     assert_eq!(to_csv(&optimized), to_csv(&reference));
 }

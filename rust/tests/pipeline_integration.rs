@@ -7,7 +7,7 @@ use hroofline::device::{GpuSpec, MemLevel};
 use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
 use hroofline::dl::lower::{lower, Framework, Phase};
 use hroofline::dl::Policy;
-use hroofline::profiler::Session;
+use hroofline::profiler::{ProfileRequest, Session};
 use hroofline::roofline::chart::RooflineChart;
 use hroofline::roofline::model::RooflineModel;
 
@@ -16,7 +16,9 @@ fn full_pipeline_tf_forward() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
     let trace = lower(&graph, Framework::TensorFlow, Policy::O1, &spec);
-    let profile = Session::standard(&spec).profile(trace.phase(Phase::Forward));
+    let profile = Session::standard(&spec)
+        .run(&ProfileRequest::new(trace.phase(Phase::Forward)))
+        .unwrap();
     assert!(profile.n_kernels() > 5);
     assert!(profile.total_seconds() > 0.0);
 
@@ -41,10 +43,12 @@ fn backward_pass_dominates_forward_in_time() {
     for fw in [Framework::TensorFlow, Framework::PyTorch] {
         let trace = lower(&graph, fw, Policy::O1, &spec);
         let fwd = Session::standard(&spec)
-            .profile(trace.phase(Phase::Forward))
+            .run(&ProfileRequest::new(trace.phase(Phase::Forward)))
+            .unwrap()
             .total_seconds();
         let bwd = Session::standard(&spec)
-            .profile(trace.phase(Phase::Backward))
+            .run(&ProfileRequest::new(trace.phase(Phase::Backward)))
+            .unwrap()
             .total_seconds();
         assert!(bwd > fwd, "{fw:?}: bwd {bwd} fwd {fwd}");
     }
@@ -59,7 +63,10 @@ fn amp_o1_speeds_up_both_frameworks() {
         let o0 = lower(&graph, fw, Policy::O0, &spec);
         let o1 = lower(&graph, fw, Policy::O1, &spec);
         let time = |t: &hroofline::dl::lower::FrameworkTrace| {
-            Session::standard(&spec).profile(&t.all()).total_seconds()
+            Session::standard(&spec)
+                .run(&ProfileRequest::new(&t.all()))
+                .unwrap()
+                .total_seconds()
         };
         let (t0, t1) = (time(&o0), time(&o1));
         assert!(t1 < t0 * 0.85, "{fw:?}: O1 {t1} vs O0 {t0}");
@@ -74,7 +81,9 @@ fn optimizer_kernels_sit_near_bandwidth_ceiling() {
     let spec = GpuSpec::v100();
     let graph = deepcam(&DeepCamConfig::paper());
     let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
-    let profile = Session::standard(&spec).profile(trace.phase(Phase::Optimizer));
+    let profile = Session::standard(&spec)
+        .run(&ProfileRequest::new(trace.phase(Phase::Optimizer)))
+        .unwrap();
     let model = RooflineModel::from_profile(&spec, &profile);
     assert!(!model.points.is_empty());
     for p in &model.points {
@@ -122,12 +131,12 @@ fn profiler_overhead_scales_with_metric_passes() {
     let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
     let kernels = trace.phase(Phase::Forward);
 
-    let packed = Session::standard(&spec).profile(kernels);
+    let packed = Session::standard(&spec).run(&ProfileRequest::new(kernels)).unwrap();
     let cfg = hroofline::profiler::SessionConfig {
         one_metric_per_run: true,
         ..Default::default()
     };
-    let separate = Session::new(&spec, cfg).try_profile(kernels).unwrap();
+    let separate = Session::new(&spec, cfg).run(&ProfileRequest::new(kernels)).unwrap();
     assert!(separate.profiling_overhead_s > 2.0 * packed.profiling_overhead_s);
     // Same derived results either way (determinism requirement, §II-B).
     assert!((separate.total_seconds() - packed.total_seconds()).abs() < 1e-9);
@@ -144,7 +153,9 @@ fn alternate_devices_profile_consistently() {
     let graph = deepcam(&DeepCamConfig::paper());
     let seconds = |spec: &GpuSpec| {
         let trace = lower(&graph, Framework::TensorFlow, Policy::O1, spec);
-        let profile = Session::standard(spec).profile(trace.phase(Phase::Forward));
+        let profile = Session::standard(spec)
+            .run(&ProfileRequest::new(trace.phase(Phase::Forward)))
+            .unwrap();
         RooflineModel::from_profile(spec, &profile).validate_bounds().unwrap();
         assert_eq!(profile.device, spec.name);
         profile.total_seconds()

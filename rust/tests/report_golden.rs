@@ -10,7 +10,7 @@ fn all_artifacts_generate_and_write() {
         let a = generate(id).unwrap_or_else(|e| panic!("{id}: {e:#}"));
         assert_eq!(a.id, id);
         assert!(!a.text.is_empty(), "{id}: empty text");
-        a.write_to(&dir).unwrap();
+        a.write_all(&dir).unwrap();
         assert!(dir.join(format!("{id}.txt")).exists());
         assert!(dir.join(format!("{id}.json")).exists());
         if a.svg.is_some() {

@@ -1,0 +1,146 @@
+//! Semantics guards for the time-based Roofline (arXiv 2009.04598)
+//! layer: per-kernel durations must tile the step exactly, the
+//! bound-bucket decomposition must partition every phase, the timeline
+//! must be deterministic across shared-cache and standalone sessions,
+//! and — crucially — the pre-existing counter-only outputs (CSV, SVG,
+//! counter sets) must stay byte-identical when timing is collected.
+
+use hroofline::device::GpuSpec;
+use hroofline::dl::deepcam::{deepcam, DeepCamConfig};
+use hroofline::dl::lower::{lower, Framework, Phase};
+use hroofline::dl::Policy;
+use hroofline::profiler::export::to_csv;
+use hroofline::profiler::{ProfileRequest, Session, StepTimeline};
+use hroofline::roofline::chart::RooflineChart;
+use hroofline::roofline::model::RooflineModel;
+use hroofline::sim::SharedSimCache;
+
+const PHASES: [(Phase, &str); 3] = [
+    (Phase::Forward, "forward"),
+    (Phase::Backward, "backward"),
+    (Phase::Optimizer, "optimizer"),
+];
+
+fn rel_eq(a: f64, b: f64, tol: f64) {
+    let scale = a.abs().max(b.abs()).max(1e-30);
+    assert!((a - b).abs() <= tol * scale, "{a} vs {b} (rel tol {tol})");
+}
+
+#[test]
+fn phase_durations_sum_to_step_total() {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
+    let session = Session::standard(&spec);
+
+    let profiles: Vec<_> = PHASES
+        .iter()
+        .map(|(phase, label)| {
+            (*label, session.run(&ProfileRequest::new(trace.phase(*phase))).unwrap())
+        })
+        .collect();
+    let timeline = StepTimeline::from_phases(&spec.name, profiles.iter().map(|(l, p)| (*l, p)));
+    assert_eq!(timeline.phases.len(), PHASES.len());
+
+    // Each phase slice is exactly the sum of its kernels' timed
+    // durations, and those agree with the counter-derived phase time.
+    let mut step = 0.0;
+    for ((_, profile), slice) in profiles.iter().zip(&timeline.phases) {
+        let kernel_sum: f64 = profile.kernels().map(|k| k.duration_s()).sum();
+        rel_eq(slice.seconds, kernel_sum, 1e-12);
+        rel_eq(slice.seconds, profile.total_seconds(), 1e-9);
+        step += profile.total_seconds();
+    }
+    rel_eq(timeline.step_seconds(), step, 1e-9);
+    assert!(timeline.step_seconds() > 0.0);
+    // The idle (launch/drain ramp) component is part of the phase
+    // times, never an extra addend on top of them.
+    assert!(timeline.idle_seconds() > 0.0);
+    assert!(timeline.idle_seconds() < timeline.step_seconds());
+}
+
+#[test]
+fn bound_bucket_fractions_sum_to_one() {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::TensorFlow, Policy::O1, &spec);
+    let session = Session::standard(&spec);
+
+    let profiles: Vec<_> = PHASES
+        .iter()
+        .map(|(phase, label)| {
+            (*label, session.run(&ProfileRequest::new(trace.phase(*phase))).unwrap())
+        })
+        .collect();
+    let timeline = StepTimeline::from_phases(&spec.name, profiles.iter().map(|(l, p)| (*l, p)));
+
+    // Every phase partitions into the three bound buckets...
+    for slice in &timeline.phases {
+        rel_eq(slice.compute_s + slice.memory_s + slice.overhead_s, slice.seconds, 1e-12);
+    }
+    // ...and so does the step: the bucket fractions sum to exactly 1.
+    let step = timeline.step_seconds();
+    assert!(step > 0.0);
+    let (c, m, o) = timeline.bucket_seconds();
+    rel_eq(c / step + m / step + o / step, 1.0, 1e-12);
+    // A full training step exercises both compute- and memory-bound
+    // kernels (tensor-core GEMMs vs streaming optimizer updates).
+    assert!(c > 0.0, "compute-bound bucket empty");
+    assert!(m > 0.0, "memory-bound bucket empty");
+}
+
+#[test]
+fn timeline_deterministic_across_shared_and_standalone_sessions() {
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::lite());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
+    let session = Session::standard(&spec);
+    let cache = SharedSimCache::new();
+
+    for (phase, label) in PHASES {
+        let kernels = trace.phase(phase);
+        let standalone = session.run(&ProfileRequest::new(kernels)).unwrap();
+        let shared = session.run(&ProfileRequest::new(kernels).shared_cache(&cache)).unwrap();
+        // Bit-identical profiles, timing included...
+        assert_eq!(standalone, shared, "{label}");
+        // ...and therefore bit-identical timeline renderings.
+        let mut t_standalone = StepTimeline::new(&spec.name);
+        t_standalone.push_phase(label, &standalone);
+        let mut t_shared = StepTimeline::new(&spec.name);
+        t_shared.push_phase(label, &shared);
+        assert_eq!(t_standalone, t_shared, "{label}");
+        assert_eq!(
+            hroofline::roofline::time::timeline_text(label, &t_standalone, &standalone),
+            hroofline::roofline::time::timeline_text(label, &t_shared, &shared),
+        );
+    }
+}
+
+#[test]
+fn v100_counter_outputs_byte_identical_with_and_without_timing() {
+    // The acceptance bar for this PR: collecting durations must not
+    // perturb a single byte of the counter-only artifact lanes.
+    let spec = GpuSpec::v100();
+    let graph = deepcam(&DeepCamConfig::paper());
+    let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
+    let all = trace.all();
+    let session = Session::standard(&spec);
+
+    let timed = session.run(&ProfileRequest::new(&all)).unwrap();
+    let counters_only = session.run(&ProfileRequest::new(&all).counters_only()).unwrap();
+
+    // Timing is the only difference between the two profiles.
+    assert!(timed.kernels().all(|k| k.timing.is_some()));
+    assert!(counters_only.kernels().all(|k| k.timing.is_none()));
+    for (a, b) in timed.kernels().zip(counters_only.kernels()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.counters, b.counters, "{}", a.name);
+        assert_eq!(a.invocations, b.invocations, "{}", a.name);
+    }
+    assert_eq!(timed.total_seconds(), counters_only.total_seconds());
+
+    // The serialized counter lanes are byte-identical.
+    assert_eq!(to_csv(&timed), to_csv(&counters_only));
+    let svg = |p| RooflineChart::hierarchical(&RooflineModel::from_profile(&spec, p), "t").to_svg();
+    assert_eq!(svg(&timed), svg(&counters_only));
+}
