@@ -179,6 +179,25 @@ fn main() {
         100_000
     });
 
+    // supervision overhead ablation: the panic-safe fan-out vs the raw
+    // one over 10k trivially cheap items — the worst case for per-item
+    // bookkeeping (catch_unwind, slot mutexes, attempt accounting)
+    b.case("exec_parallel_map_raw_10k", || {
+        let items: Vec<u64> = (0..10_000).collect();
+        let out = hroofline::exec::parallel_map(items, 4, |x| x.wrapping_mul(0x9e37_79b9));
+        black_box(out.len() as u64);
+        10_000
+    });
+    b.case("exec_parallel_try_map_supervised_10k", || {
+        let items: Vec<u64> = (0..10_000).collect();
+        let policy = hroofline::exec::SupervisePolicy::default();
+        let out = hroofline::exec::parallel_try_map(items, 4, &policy, |x| {
+            Ok(x.wrapping_mul(0x9e37_79b9))
+        });
+        black_box(out.iter().filter(|r| r.is_ok()).count() as u64);
+        10_000
+    });
+
     b.run();
 
     // Real PJRT hot path (separate group; skipped without artifacts).

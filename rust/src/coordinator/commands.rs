@@ -129,8 +129,71 @@ pub fn cmd_metrics(_p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// `repro profile --from-csv` — re-ingest a previously exported
+/// counter CSV and re-render the hierarchical Roofline from it.
+/// `--lenient` routes through [`export::from_csv_lenient`]: malformed
+/// rows are skipped and reported instead of failing the whole file.
+fn cmd_profile_from_csv(p: &Parsed, csv_path: &str) -> Result<()> {
+    let out_dir = p.get("out").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+    let selected = resolve_devices(p)?;
+    // The CSV's own device stamp wins inside the importer; the
+    // --device selection only supplies the ceiling set (first entry).
+    let spec = selected[0].spec();
+    let text = std::fs::read_to_string(csv_path).with_context(|| format!("reading '{csv_path}'"))?;
+    let profile = if p.has("lenient") {
+        let (profile, diagnostics) = export::from_csv_lenient(&text, &spec)?;
+        if !diagnostics.is_empty() {
+            eprintln!(
+                "skipped {} malformed row(s) in '{csv_path}':\n{}",
+                diagnostics.total(),
+                diagnostics.summary()
+            );
+        }
+        profile
+    } else {
+        export::from_csv(&text, &spec)?
+    };
+    let model = RooflineModel::from_profile(&spec, &profile);
+    // Headerless CSVs carry no device stamp; fall back to the ceiling
+    // device so the title and json are never blank.
+    let device_name =
+        if profile.device.is_empty() { spec.name.clone() } else { profile.device.clone() };
+    let title = format!("ingested profile on {device_name}");
+    let chart = RooflineChart::hierarchical(&model, &title);
+    let artifact = Artifact {
+        id: "ingested".to_string(),
+        title: title.clone(),
+        text: format!(
+            "== {title} ==\ntotal {} | kernels {} | invocations {}\n{}",
+            fmt::duration(profile.total_seconds()),
+            profile.n_kernels(),
+            profile.total_invocations(),
+            chart.to_table().render()
+        ),
+        json: Json::obj(vec![
+            ("device", Json::str(&device_name)),
+            ("source", Json::str(csv_path)),
+            ("total_seconds", Json::num(profile.total_seconds())),
+            ("n_kernels", Json::num(profile.n_kernels() as f64)),
+            ("invocations", Json::num(profile.total_invocations() as f64)),
+        ]),
+        svg: Some(chart.to_svg()),
+        csv: Some(export::to_csv(&profile)),
+        lanes: Vec::new(),
+    };
+    println!("{}", artifact.text);
+    artifact.write_all(Path::new(&out_dir))?;
+    println!("wrote {out_dir}/{}.{{txt,json,svg,csv}}", artifact.id);
+    Ok(())
+}
+
 /// `repro profile` — application characterization.
 pub fn cmd_profile(p: &Parsed) -> Result<()> {
+    let csv_path = p.get("from-csv");
+    if !csv_path.is_empty() {
+        return cmd_profile_from_csv(p, csv_path);
+    }
     let fw = Framework::parse(p.get("framework"))
         .with_context(|| format!("bad framework '{}'", p.get("framework")))?;
     let policy = Policy::parse(p.get("amp"))
@@ -168,17 +231,24 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
         // the trace out — see `Session::run`). Rendering is captured
         // into Artifacts inside the workers and written in input order
         // below, so stdout and the written files are byte-identical to
-        // a serial run.
+        // a serial run. The fan-out is supervised: a phase that fails
+        // (or panics) is isolated and reported at the end instead of
+        // aborting its siblings mid-write.
         let session = Session::standard(&spec);
         let workers = crate::exec::default_workers(phases.len());
-        let rendered = crate::exec::parallel_map(phases.clone(), workers, |(phase, label)| {
+        let sup = crate::exec::SupervisePolicy::default();
+        let rendered = crate::exec::parallel_try_map(
+            phases.clone(),
+            workers,
+            &sup,
+            |&(phase, label)| {
             let kernel_trace = trace.phase(phase);
             if kernel_trace.is_empty() {
-                return (label, None);
+                return Ok((label, None));
             }
             let profile = session
                 .run(&ProfileRequest::new(kernel_trace))
-                .expect("standard session on a lowered trace cannot fail");
+                .map_err(|e| crate::exec::TaskError::fatal(e.to_string()))?;
             let model = RooflineModel::from_profile(&spec, &profile);
             let title =
                 format!("{} DeepCAM {label} ({}) on {}", fw.name(), policy.name(), spec.name);
@@ -220,21 +290,37 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
                 Some(svg) => artifact.with_lane("timeline.svg", svg),
                 None => artifact,
             };
-            (label, Some((artifact, profile)))
-        });
+            Ok((label, Some((artifact, profile))))
+            },
+        );
         let mut phase_profiles: Vec<(&str, Profile)> = Vec::new();
-        for (label, result) in rendered {
-            let Some((artifact, profile)) = result else {
-                println!("[{label}] no kernels (TF folds the optimizer into backward)");
-                continue;
-            };
-            println!("{}", artifact.text);
-            artifact.write_all(Path::new(&out_dir))?;
-            println!(
-                "wrote {out_dir}/{}.{{txt,json,svg,csv,timeline.txt,timeline.svg}}",
-                artifact.id
+        let mut failed_phases: Vec<String> = Vec::new();
+        // An Err slot loses its label, so zip the input order back in.
+        for ((_, in_label), outcome) in phases.iter().zip(rendered) {
+            match outcome {
+                Ok((label, Some((artifact, profile)))) => {
+                    println!("{}", artifact.text);
+                    artifact.write_all(Path::new(&out_dir))?;
+                    println!(
+                        "wrote {out_dir}/{}.{{txt,json,svg,csv,timeline.txt,timeline.svg}}",
+                        artifact.id
+                    );
+                    phase_profiles.push((label, profile));
+                }
+                Ok((label, None)) => {
+                    println!("[{label}] no kernels (TF folds the optimizer into backward)");
+                }
+                Err(e) => failed_phases.push(format!("{in_label} ({e})")),
+            }
+        }
+        if !failed_phases.is_empty() {
+            anyhow::bail!(
+                "{} of {} phase(s) failed to profile on {}: {}",
+                failed_phases.len(),
+                phases.len(),
+                spec.name,
+                failed_phases.join("; ")
             );
-            phase_profiles.push((label, profile));
         }
         // Whole-step timeline: only meaningful when more than one phase
         // actually ran (a single-phase request *is* its own breakdown).
@@ -282,11 +368,23 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// Process exit code for a matrix run in which one or more cells
+/// failed (surviving cells still produced artifacts). Distinct from
+/// `1` (command error: nothing ran) and `2` (CLI/usage error) so
+/// scripts can tell "degraded but useful" from "broken".
+pub const EXIT_MATRIX_CELLS_FAILED: i32 = 3;
+
 /// `repro matrix` — the scenario-matrix sweep: workload registry ×
 /// framework × phase × AMP policy, profiled through one shared
 /// simulation cache, with per-scenario artifacts plus the
 /// cross-scenario comparison report.
-pub fn cmd_matrix(p: &Parsed) -> Result<()> {
+///
+/// Cells run under `exec::supervise`: a panicking or failing cell is
+/// isolated, the survivors keep profiling, and the failures land in
+/// `matrix.errors.json` + the comparison report. Returns the process
+/// exit code: `0` for a clean sweep, [`EXIT_MATRIX_CELLS_FAILED`]
+/// when any cell failed.
+pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     let matrix = if p.has("quick") {
         crate::scenario::ScenarioMatrix::quick()
     } else {
@@ -305,7 +403,35 @@ pub fn cmd_matrix(p: &Parsed) -> Result<()> {
     let scenario_dir = Path::new(&out_dir).join("scenarios");
     std::fs::create_dir_all(&scenario_dir)?;
 
-    let run = matrix.run();
+    // Failure budget: --fail-fast stops at the first failure;
+    // --max-failures N tolerates N and stops at the N+1st (the default
+    // 'unlimited' never stops early). Any failure still exits nonzero.
+    let stop_after = if p.has("fail-fast") {
+        Some(1)
+    } else {
+        match p.get("max-failures") {
+            "unlimited" => None,
+            n => {
+                let n: usize = n.parse().map_err(|_| {
+                    anyhow::anyhow!("bad --max-failures '{n}': expected a count or 'unlimited'")
+                })?;
+                Some(n + 1)
+            }
+        }
+    };
+    let policy =
+        crate::exec::SupervisePolicy { stop_after_failures: stop_after, ..Default::default() };
+    // --inject-fault: a deterministic FaultPlan for drills and CI
+    // smokes ("panic:<cell-id>;seed=7" — see `exec::fault`).
+    let fault_spec = p.get("inject-fault");
+    let injector = if fault_spec.is_empty() {
+        None
+    } else {
+        Some(crate::exec::FaultInjector::new(crate::exec::FaultPlan::parse(fault_spec)?))
+    };
+    let options = crate::scenario::MatrixRunOptions { policy, fault: injector.as_ref() };
+
+    let run = matrix.run_with(&options);
 
     let mut written = 0usize;
     for result in &run.results {
@@ -338,7 +464,21 @@ pub fn cmd_matrix(p: &Parsed) -> Result<()> {
          comparison report (matrix.{{txt,json,svg,csv,timeline.txt}}) under {out_dir}/",
         scenario_dir.display()
     );
-    Ok(())
+    if run.failures.is_empty() {
+        return Ok(0);
+    }
+    // Degraded sweep: persist the machine-readable error manifest next
+    // to the comparison report and signal via the exit code.
+    let manifest_path = Path::new(&out_dir).join("matrix.errors.json");
+    std::fs::write(&manifest_path, crate::scenario::errors_manifest(&run).to_string_pretty())?;
+    eprintln!(
+        "{} of {} cells failed:\n{}wrote {}",
+        run.failures.len(),
+        run.n_cells(),
+        crate::scenario::failure_table(&run.failures).render(),
+        manifest_path.display()
+    );
+    Ok(EXIT_MATRIX_CELLS_FAILED)
 }
 
 /// `repro bench-diff` — gate the bench trajectory: compare a fresh
@@ -468,6 +608,8 @@ mod tests {
             .flag("amp", "O1", "h")
             .flag("scale", "lite", "h")
             .flag("device", "v100-sxm2-16gb", "h")
+            .flag("from-csv", "", "h")
+            .switch("lenient", "h")
             .flag("out", out, "h")
     }
 
@@ -558,6 +700,9 @@ mod tests {
             .flag("workloads", "all", "h")
             .flag("device", "default", "h")
             .flag("out", out, "h")
+            .flag("max-failures", "unlimited", "h")
+            .flag("inject-fault", "", "h")
+            .switch("fail-fast", "h")
             .switch("quick", "h")
     }
 
@@ -565,7 +710,10 @@ mod tests {
     fn matrix_quick_restricted_writes_artifacts() {
         let dir = std::env::temp_dir().join(format!("hroofline-matrixcmd-{}", std::process::id()));
         let cmd = matrix_cmd(dir.to_str().unwrap());
-        cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "deepcam-lite,transformer"])).unwrap();
+        let code = cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "deepcam-lite,transformer"]))
+            .unwrap();
+        assert_eq!(code, 0, "clean sweep exits 0");
+        assert!(!dir.join("matrix.errors.json").exists(), "no manifest on a clean sweep");
         for name in ["matrix.txt", "matrix.json", "matrix.svg", "matrix.csv"] {
             assert!(dir.join(name).exists(), "{name}");
         }
@@ -632,6 +780,82 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("unknown device 'a100-sxm4-40g'"), "{msg}");
         assert!(msg.contains("did you mean 'a100-sxm4-40gb'?"), "{msg}");
+    }
+
+    #[test]
+    fn matrix_injected_fault_degrades_and_exits_nonzero() {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-matrixfault-{}", std::process::id()));
+        let cmd = matrix_cmd(dir.to_str().unwrap());
+        let code = cmd_matrix(&parsed(
+            cmd,
+            &[
+                "--quick",
+                "--workloads",
+                "transformer",
+                "--inject-fault",
+                "panic:transformer-tf-forward-O0",
+            ],
+        ))
+        .unwrap();
+        assert_eq!(code, EXIT_MATRIX_CELLS_FAILED);
+        // The failed cell got no artifact; its siblings all did, and
+        // the comparison report still landed.
+        assert!(!dir.join("scenarios/transformer-tf-forward-O0.json").exists());
+        assert!(dir.join("scenarios/transformer-pt-forward-O0.json").exists());
+        assert!(dir.join("matrix.txt").exists());
+        let manifest = std::fs::read_to_string(dir.join("matrix.errors.json")).unwrap();
+        assert!(manifest.contains("hroofline-matrix-errors-v1"), "{manifest}");
+        assert!(manifest.contains("transformer-tf-forward-O0"), "{manifest}");
+        assert!(manifest.contains("panicked"), "{manifest}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn matrix_rejects_bad_flag_values() {
+        let cmd = matrix_cmd("/tmp/x");
+        let err =
+            cmd_matrix(&parsed(cmd, &["--quick", "--max-failures", "many"])).unwrap_err();
+        assert!(format!("{err:#}").contains("bad --max-failures"), "{err:#}");
+        let cmd = matrix_cmd("/tmp/x");
+        let err =
+            cmd_matrix(&parsed(cmd, &["--quick", "--inject-fault", "panic"])).unwrap_err();
+        assert!(format!("{err:#}").contains("bad fault clause"), "{err:#}");
+    }
+
+    #[test]
+    fn profile_from_csv_round_trips_an_exported_profile() {
+        use crate::device::GpuSpec;
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-profcsv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Export a real profile, then re-ingest it through the CLI path.
+        let spec = GpuSpec::v100();
+        let graph = deepcam(&DeepCamConfig::lite());
+        let trace = lower(&graph, Framework::PyTorch, Policy::O1, &spec);
+        let profile = Session::standard(&spec)
+            .run(&ProfileRequest::new(trace.phase(Phase::Forward)))
+            .unwrap();
+        let csv_path = dir.join("exported.csv");
+        std::fs::write(&csv_path, export::to_csv(&profile)).unwrap();
+        let cmd = profile_cmd(dir.to_str().unwrap());
+        cmd_profile(&parsed(cmd, &["--from-csv", csv_path.to_str().unwrap()])).unwrap();
+        let txt = std::fs::read_to_string(dir.join("ingested.txt")).unwrap();
+        assert!(txt.contains("ingested profile on V100-SXM2-16GB"), "{txt}");
+        assert!(dir.join("ingested.json").exists());
+        assert!(dir.join("ingested.svg").exists());
+        // A corrupted row fails strict ingestion but passes --lenient.
+        let mut text = std::fs::read_to_string(&csv_path).unwrap();
+        text.push_str("\"broken\",\"not-a-number\"\n");
+        std::fs::write(&csv_path, text).unwrap();
+        let cmd = profile_cmd(dir.to_str().unwrap());
+        assert!(
+            cmd_profile(&parsed(cmd, &["--from-csv", csv_path.to_str().unwrap()])).is_err()
+        );
+        let cmd = profile_cmd(dir.to_str().unwrap());
+        cmd_profile(&parsed(cmd, &["--from-csv", csv_path.to_str().unwrap(), "--lenient"]))
+            .unwrap();
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Deterministic fault injection for the supervised execution layer.
+//!
+//! Real collection runs fail in ways unit tests never see: a single
+//! kernel aborts metric replay, a cell hangs, a counter read flakes
+//! once and then succeeds. A [`FaultPlan`] scripts exactly those
+//! shapes — "panic on the cell matching X", "fail the first N attempts
+//! of the kernel matching Y", "delay Z by D ms", "fail with probability
+//! p" — and a [`FaultInjector`] built from the plan is threaded into
+//! [`crate::profiler::Session`] (per-kernel labels) and
+//! [`crate::scenario::ScenarioMatrix`] (per-cell labels) so every
+//! failure path in the pipeline is exercisable on demand, byte-for-byte
+//! reproducibly.
+//!
+//! Determinism: nothing here consults wall clocks or global RNG state.
+//! Probabilistic faults derive their coin flip from
+//! `FaultPlan::seed ^ fnv1a(label)` via [`crate::util::rng::Rng`], so
+//! the same plan over the same labels fires identically regardless of
+//! scheduling order or thread count. Stateful faults (`FailFirst`)
+//! count applications per label, which is also order-independent.
+//!
+//! Labels are plain strings; the pipeline uses two schemes:
+//! `cell#<index>:<scenario-id>` for matrix cells and `kernel:<name>`
+//! for per-kernel simulation inside a session. A fault's `target`
+//! matches any label containing it as a substring, or everything when
+//! it is `"*"`.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::supervise::TaskError;
+use crate::cli::CliError;
+use crate::util::rng::Rng;
+
+/// One scripted fault. `target` is a substring matched against the
+/// label passed to [`FaultInjector::apply`] (`"*"` matches every
+/// label).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Panic whenever a matching label is applied — models a hard
+    /// crash inside the work function.
+    PanicOn { target: String },
+    /// Return a *transient* [`TaskError`] for the first `attempts`
+    /// applications per matching label, then succeed — models flaky
+    /// collection that a retry rides out.
+    FailFirst { target: String, attempts: u32 },
+    /// Sleep for `millis` before succeeding — models a slow cell for
+    /// exercising soft deadlines.
+    Delay { target: String, millis: u64 },
+    /// Return a transient error with probability `probability`, decided
+    /// deterministically per label from the plan seed.
+    Chaos { target: String, probability: f64 },
+}
+
+impl Fault {
+    fn target(&self) -> &str {
+        match self {
+            Fault::PanicOn { target }
+            | Fault::FailFirst { target, .. }
+            | Fault::Delay { target, .. }
+            | Fault::Chaos { target, .. } => target,
+        }
+    }
+
+    fn matches(&self, label: &str) -> bool {
+        let t = self.target();
+        t == "*" || label.contains(t)
+    }
+}
+
+/// A scripted set of faults plus the seed that makes probabilistic
+/// ones reproducible. Build programmatically or parse from the CLI
+/// spec grammar (see [`FaultPlan::parse`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn panic_on(mut self, target: impl Into<String>) -> FaultPlan {
+        self.faults.push(Fault::PanicOn { target: target.into() });
+        self
+    }
+
+    pub fn fail_first(mut self, target: impl Into<String>, attempts: u32) -> FaultPlan {
+        self.faults.push(Fault::FailFirst { target: target.into(), attempts });
+        self
+    }
+
+    pub fn delay(mut self, target: impl Into<String>, millis: u64) -> FaultPlan {
+        self.faults.push(Fault::Delay { target: target.into(), millis });
+        self
+    }
+
+    pub fn chaos(mut self, target: impl Into<String>, probability: f64) -> FaultPlan {
+        self.faults.push(Fault::Chaos { target: target.into(), probability });
+        self
+    }
+
+    /// Parse the CLI spec grammar: `;`-separated clauses, each one of
+    ///
+    /// * `panic:<target>`
+    /// * `fail:<target>:<attempts>`
+    /// * `delay:<target>:<millis>`
+    /// * `chaos:<target>:<probability>`
+    /// * `seed=<u64>`
+    ///
+    /// Targets may themselves contain `:` (cell labels do) — the
+    /// numeric argument is split off the *last* `:`. Example:
+    /// `--inject-fault "panic:transformer-tf-forward-O0;seed=7"`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, CliError> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                plan.seed = seed
+                    .parse::<u64>()
+                    .map_err(|_| CliError(format!("bad fault seed '{seed}' (want a u64)")))?;
+                continue;
+            }
+            let (kind, rest) = clause.split_once(':').ok_or_else(|| {
+                CliError(format!(
+                    "bad fault clause '{clause}' (want panic:<t>, fail:<t>:<n>, \
+                     delay:<t>:<ms>, chaos:<t>:<p>, or seed=<n>)"
+                ))
+            })?;
+            let split_num = |rest: &str| -> Result<(String, String), CliError> {
+                let (target, num) = rest.rsplit_once(':').ok_or_else(|| {
+                    CliError(format!("fault clause '{clause}' is missing its numeric argument"))
+                })?;
+                if target.is_empty() {
+                    return Err(CliError(format!("fault clause '{clause}' has an empty target")));
+                }
+                Ok((target.to_string(), num.to_string()))
+            };
+            match kind {
+                "panic" => {
+                    if rest.is_empty() {
+                        return Err(CliError(format!(
+                            "fault clause '{clause}' has an empty target"
+                        )));
+                    }
+                    plan = plan.panic_on(rest);
+                }
+                "fail" => {
+                    let (target, num) = split_num(rest)?;
+                    let attempts = num.parse::<u32>().map_err(|_| {
+                        CliError(format!("bad attempt count '{num}' in '{clause}'"))
+                    })?;
+                    plan = plan.fail_first(target, attempts);
+                }
+                "delay" => {
+                    let (target, num) = split_num(rest)?;
+                    let millis = num.parse::<u64>().map_err(|_| {
+                        CliError(format!("bad delay millis '{num}' in '{clause}'"))
+                    })?;
+                    plan = plan.delay(target, millis);
+                }
+                "chaos" => {
+                    let (target, num) = split_num(rest)?;
+                    let p = num.parse::<f64>().map_err(|_| {
+                        CliError(format!("bad probability '{num}' in '{clause}'"))
+                    })?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(CliError(format!(
+                            "probability {p} in '{clause}' is outside [0, 1]"
+                        )));
+                    }
+                    plan = plan.chaos(target, p);
+                }
+                other => {
+                    return Err(CliError(format!(
+                        "unknown fault kind '{other}' in '{clause}' \
+                         (want panic, fail, delay, or chaos)"
+                    )));
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        hash ^= u64::from(b);
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Executes a [`FaultPlan`] against labeled work sites. Thread-safe;
+/// one injector is shared across all workers of a fan-out so stateful
+/// faults count applications globally.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    // Applications per (fault index, label) — keys FailFirst counting.
+    counts: Mutex<HashMap<String, u32>>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan, counts: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Fire every fault whose target matches `label`. Returns `Ok(())`
+    /// when nothing (or only a delay) fired; panics for `PanicOn`;
+    /// returns a transient [`TaskError`] for `FailFirst` (within its
+    /// budget) and `Chaos` (when the deterministic coin lands).
+    pub fn apply(&self, label: &str) -> Result<(), TaskError> {
+        for (index, fault) in self.plan.faults.iter().enumerate() {
+            if !fault.matches(label) {
+                continue;
+            }
+            match fault {
+                Fault::Delay { millis, .. } => {
+                    std::thread::sleep(Duration::from_millis(*millis));
+                }
+                Fault::PanicOn { .. } => {
+                    panic!("fault injected: panic on '{label}'");
+                }
+                Fault::FailFirst { attempts, .. } => {
+                    // Tolerate poisoning: a PanicOn arm never holds this
+                    // lock, but a caller's catch_unwind may outlive one.
+                    let mut counts =
+                        self.counts.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                    let seen = counts.entry(format!("{index}:{label}")).or_insert(0);
+                    if *seen < *attempts {
+                        *seen += 1;
+                        return Err(TaskError::transient(format!(
+                            "fault injected: failing attempt {seen} of first {attempts} \
+                             for '{label}'"
+                        )));
+                    }
+                }
+                Fault::Chaos { probability, .. } => {
+                    let mut rng = Rng::new(self.plan.seed ^ fnv1a(label));
+                    if rng.chance(*probability) {
+                        return Err(TaskError::transient(format!(
+                            "fault injected: chaos (p={probability}) on '{label}'"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        let plan =
+            FaultPlan::parse("panic:cell#3;fail:kernel:conv2d:2;delay:relu:15;chaos:*:0.25;seed=9")
+                .unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::PanicOn { target: "cell#3".into() },
+                Fault::FailFirst { target: "kernel:conv2d".into(), attempts: 2 },
+                Fault::Delay { target: "relu".into(), millis: 15 },
+                Fault::Chaos { target: "*".into(), probability: 0.25 },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "explode:everything",
+            "panic:",
+            "fail:conv2d",
+            "fail:conv2d:many",
+            "delay:relu:soon",
+            "chaos:*:1.5",
+            "seed=minus-one",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn panic_on_fires_only_for_matching_labels() {
+        let inj = FaultInjector::new(FaultPlan::new(0).panic_on("cell#2:"));
+        assert!(inj.apply("cell#1:deepcam").is_ok());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inj.apply("cell#2:deepcam").ok();
+        }));
+        assert!(caught.is_err(), "matching label must panic");
+    }
+
+    #[test]
+    fn fail_first_is_transient_then_clears() {
+        let inj = FaultInjector::new(FaultPlan::new(0).fail_first("conv", 2));
+        let first = inj.apply("kernel:conv2d").unwrap_err();
+        assert!(first.transient);
+        assert!(inj.apply("kernel:conv2d").is_err());
+        assert!(inj.apply("kernel:conv2d").is_ok(), "budget spent => success");
+        // Budgets are per label.
+        assert!(inj.apply("kernel:conv1d").is_err());
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_label_and_seed() {
+        let labels: Vec<String> = (0..64).map(|i| format!("kernel:k{i}")).collect();
+        let fire = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::new(FaultPlan::new(seed).chaos("*", 0.5));
+            labels.iter().map(|l| inj.apply(l).is_err()).collect()
+        };
+        let a = fire(7);
+        assert_eq!(a, fire(7), "same seed => same outcomes");
+        assert_ne!(a, fire(8), "different seed => different outcomes");
+        let fired = a.iter().filter(|&&b| b).count();
+        assert!((8..=56).contains(&fired), "p=0.5 over 64 labels fired {fired} times");
+    }
+
+    #[test]
+    fn delay_passes_through() {
+        let inj = FaultInjector::new(FaultPlan::new(0).delay("slow", 1));
+        assert!(inj.apply("cell#0:slow-cell").is_ok());
+        assert!(inj.apply("cell#0:fast").is_ok());
+    }
+}

@@ -3,6 +3,20 @@
 //! kernels per pass). Replaces `tokio`/`rayon`, which are not in the
 //! offline vendor set — the workload here is CPU-bound, so plain std
 //! threads with a work queue are the right shape anyway.
+//!
+//! `parallel_map` is the infallible fast path: one panic aborts the
+//! whole fan-out. Work that must degrade gracefully — matrix cells,
+//! per-kernel simulation over real traces — goes through the
+//! [`supervise`] sibling instead, which isolates panics, enforces soft
+//! deadlines, retries transient failures, and reports a structured
+//! [`ExecError`] per item. [`fault`] provides the deterministic fault
+//! injection that makes every one of those paths testable.
+
+pub mod fault;
+pub mod supervise;
+
+pub use fault::{Fault, FaultInjector, FaultPlan};
+pub use supervise::{parallel_try_map, ExecError, RetryPolicy, SupervisePolicy, TaskError};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};

@@ -1,0 +1,587 @@
+//! Supervised execution: the panic-safe, deadline-aware, retryable
+//! sibling of [`crate::exec::parallel_map`].
+//!
+//! The plain fan-out is the right tool for pure, infallible work, but
+//! one panic aborts every sibling item — unacceptable once the pipeline
+//! ingests real-world traces where individual cells fail all the time
+//! (kernels that fail metric replay, truncated exports; cf. arXiv
+//! 2009.02449 §"collection pitfalls"). [`parallel_try_map`] isolates
+//! each item instead:
+//!
+//! * every attempt runs under `catch_unwind`, so a panicking item
+//!   becomes an [`ExecError::Panicked`] result while its siblings keep
+//!   running;
+//! * a per-item **soft deadline** is enforced by a watchdog thread: std
+//!   threads cannot be cancelled, so an overdue item is not killed, but
+//!   it is counted as failed the moment it goes overdue (so fail-fast
+//!   engages while it still runs) and its eventual result is replaced
+//!   by [`ExecError::TimedOut`];
+//! * errors classified *transient* by the work function are retried
+//!   under a [`RetryPolicy`] with a deterministic exponential backoff
+//!   schedule; panics and fatal errors are never retried;
+//! * [`SupervisePolicy::stop_after_failures`] stops *scheduling* new
+//!   items once enough failures accumulated (the CLI's `--fail-fast` /
+//!   `--max-failures`); already-claimed items run to completion and
+//!   unclaimed ones are recorded as [`ExecError::Skipped`].
+//!
+//! Results come back in input order, one `Result` per item, so callers
+//! degrade gracefully instead of all-or-nothing. With the default
+//! policy and an infallible work function the output is item-for-item
+//! identical to `parallel_map` (test-asserted); the only happy-path
+//! cost is `catch_unwind` + clock bookkeeping, tracked by the
+//! `exec_parallel_try_map_supervised_10k` hotpath bench case.
+//!
+//! Note: a caught panic still runs the process's panic hook, so the
+//! default hook prints the usual `thread ... panicked` line to stderr.
+//! That noise is deliberate — a supervised panic is contained, not
+//! hidden.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A work-function failure: a message plus the transience
+/// classification the [`RetryPolicy`] keys on. Only errors explicitly
+/// marked [`TaskError::transient`] are retried.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskError {
+    pub message: String,
+    pub transient: bool,
+}
+
+impl TaskError {
+    /// A permanent failure: never retried.
+    pub fn fatal(message: impl Into<String>) -> TaskError {
+        TaskError { message: message.into(), transient: false }
+    }
+
+    /// A transient failure: retried under the [`RetryPolicy`].
+    pub fn transient(message: impl Into<String>) -> TaskError {
+        TaskError { message: message.into(), transient: true }
+    }
+}
+
+impl std::fmt::Display for TaskError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+/// How a supervised item failed. Returned per item by
+/// [`parallel_try_map`]; the matrix error manifest serializes
+/// [`ExecError::kind`], [`ExecError::attempts`] and
+/// [`ExecError::elapsed_s`] per failed cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecError {
+    /// The work function panicked; the payload is the panic message.
+    Panicked { payload: String, attempts: u32, elapsed_s: f64 },
+    /// The item exceeded the soft deadline. The work itself was not
+    /// cancelled (std threads cannot be), but its result is discarded.
+    TimedOut { elapsed_s: f64, deadline_s: f64 },
+    /// The work function returned an error; `attempts` counts every
+    /// try, so a transient error that exhausted its retry budget
+    /// reports `attempts == max_attempts`.
+    Failed { error: String, attempts: u32, elapsed_s: f64 },
+    /// Never attempted: the failure budget was already spent when this
+    /// item came up for scheduling (fail-fast / max-failures).
+    Skipped { after_failures: usize },
+}
+
+impl ExecError {
+    /// Stable machine-readable discriminant (manifest `kind` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ExecError::Panicked { .. } => "panicked",
+            ExecError::TimedOut { .. } => "timed_out",
+            ExecError::Failed { .. } => "failed",
+            ExecError::Skipped { .. } => "skipped",
+        }
+    }
+
+    /// How many attempts ran (0 for skipped items, 1 for timeouts —
+    /// an overdue item is never retried).
+    pub fn attempts(&self) -> u32 {
+        match self {
+            ExecError::Panicked { attempts, .. } | ExecError::Failed { attempts, .. } => *attempts,
+            ExecError::TimedOut { .. } => 1,
+            ExecError::Skipped { .. } => 0,
+        }
+    }
+
+    /// Wall-clock seconds spent on the item before it failed.
+    pub fn elapsed_s(&self) -> f64 {
+        match self {
+            ExecError::Panicked { elapsed_s, .. }
+            | ExecError::TimedOut { elapsed_s, .. }
+            | ExecError::Failed { elapsed_s, .. } => *elapsed_s,
+            ExecError::Skipped { .. } => 0.0,
+        }
+    }
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Panicked { payload, attempts, .. } => {
+                write!(f, "panicked on attempt {attempts}: {payload}")
+            }
+            ExecError::TimedOut { elapsed_s, deadline_s } => {
+                write!(f, "exceeded soft deadline ({elapsed_s:.3}s > {deadline_s:.3}s)")
+            }
+            ExecError::Failed { error, attempts, .. } => {
+                write!(f, "failed after {attempts} attempt(s): {error}")
+            }
+            ExecError::Skipped { after_failures } => {
+                write!(f, "skipped after {after_failures} earlier failure(s)")
+            }
+        }
+    }
+}
+
+/// Retry budget and backoff schedule for transient failures. The
+/// schedule is deterministic (base · 2^(attempt−1), capped) so reruns
+/// of the same plan behave identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles per further attempt.
+    pub backoff: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub backoff_cap: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries: one attempt, no backoff.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+        }
+    }
+
+    /// Up to `max_attempts` total attempts with no backoff sleeps
+    /// (tests and in-memory work rarely want real waiting).
+    pub fn attempts(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy { max_attempts: max_attempts.max(1), ..RetryPolicy::none() }
+    }
+
+    /// Add an exponential backoff schedule: `base` before the second
+    /// attempt, doubling per attempt, never exceeding `cap`.
+    pub fn with_backoff(mut self, base: Duration, cap: Duration) -> RetryPolicy {
+        self.backoff = base;
+        self.backoff_cap = cap;
+        self
+    }
+
+    /// The deterministic sleep before attempt `attempt + 1` (attempts
+    /// are 1-based: `backoff_for(1)` precedes the second attempt).
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        if self.backoff.is_zero() {
+            return Duration::ZERO;
+        }
+        let doublings = attempt.saturating_sub(1).min(16);
+        (self.backoff * 2u32.saturating_pow(doublings)).min(self.backoff_cap.max(self.backoff))
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy::none()
+    }
+}
+
+/// Everything [`parallel_try_map`] needs to know beyond the work
+/// function: retry budget, per-item soft deadline, and the failure
+/// budget after which unclaimed items are skipped.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SupervisePolicy {
+    pub retry: RetryPolicy,
+    /// Per-item soft deadline. `None` disables the watchdog.
+    pub soft_deadline: Option<Duration>,
+    /// Stop scheduling new items once this many failures were recorded
+    /// (`Some(1)` = fail-fast). `None` = always run every item.
+    pub stop_after_failures: Option<usize>,
+}
+
+fn payload_string(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// One item end to end: attempts loop + panic capture + deadline
+/// classification. `overdue` is pre-set by the watchdog when the item
+/// went over its deadline mid-flight.
+fn run_attempts<T, R, F>(
+    item: &T,
+    policy: &SupervisePolicy,
+    overdue: &AtomicBool,
+    f: &F,
+) -> Result<R, ExecError>
+where
+    F: Fn(&T) -> Result<R, TaskError>,
+{
+    let start = Instant::now();
+    let over = |elapsed: Duration| {
+        overdue.load(Ordering::SeqCst) || policy.soft_deadline.is_some_and(|d| elapsed > d)
+    };
+    let mut attempt: u32 = 1;
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| f(item)));
+        let elapsed = start.elapsed();
+        let elapsed_s = elapsed.as_secs_f64();
+        match outcome {
+            Ok(Ok(value)) => {
+                if over(elapsed) {
+                    let deadline_s =
+                        policy.soft_deadline.unwrap_or(elapsed).as_secs_f64();
+                    return Err(ExecError::TimedOut { elapsed_s, deadline_s });
+                }
+                return Ok(value);
+            }
+            Ok(Err(task_err)) => {
+                if task_err.transient && attempt < policy.retry.max_attempts && !over(elapsed) {
+                    let pause = policy.retry.backoff_for(attempt);
+                    if !pause.is_zero() {
+                        std::thread::sleep(pause);
+                    }
+                    attempt += 1;
+                    continue;
+                }
+                return Err(ExecError::Failed {
+                    error: task_err.message,
+                    attempts: attempt,
+                    elapsed_s,
+                });
+            }
+            Err(payload) => {
+                return Err(ExecError::Panicked {
+                    payload: payload_string(payload),
+                    attempts: attempt,
+                    elapsed_s,
+                });
+            }
+        }
+    }
+}
+
+/// Apply `f` to every item in parallel across up to `threads` workers,
+/// preserving input order, isolating each item's failures. See the
+/// module docs for the semantics of panics, deadlines, retries and
+/// fail-fast skipping. With the default [`SupervisePolicy`] and an
+/// infallible `f`, output values are identical to
+/// [`crate::exec::parallel_map`]'s.
+///
+/// Unlike `parallel_map`, `f` borrows its item (`Fn(&T)`) so a
+/// transient failure can be retried on the same input.
+pub fn parallel_try_map<T, R, F>(
+    items: Vec<T>,
+    threads: usize,
+    policy: &SupervisePolicy,
+    f: F,
+) -> Vec<Result<R, ExecError>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&T) -> Result<R, TaskError> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+
+    if threads == 1 {
+        // Serial path: deterministic scheduling (items run in order, so
+        // fail-fast skips exactly the suffix after the budget is spent)
+        // and no watchdog thread — the deadline is classified from the
+        // measured elapsed time after each item completes.
+        let mut failures = 0usize;
+        let overdue = AtomicBool::new(false);
+        return items
+            .iter()
+            .map(|item| {
+                if policy.stop_after_failures.is_some_and(|stop| failures >= stop) {
+                    return Err(ExecError::Skipped { after_failures: failures });
+                }
+                overdue.store(false, Ordering::SeqCst);
+                let out = run_attempts(item, policy, &overdue, &f);
+                if out.is_err() {
+                    failures += 1;
+                }
+                out
+            })
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(0);
+    let failures = AtomicUsize::new(0);
+    let overdue: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    let counted: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    let starts: Vec<Mutex<Option<Instant>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let outputs: Vec<Mutex<Option<Result<R, ExecError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let count_failure = |i: usize| {
+        if !counted[i].swap(true, Ordering::SeqCst) {
+            failures.fetch_add(1, Ordering::SeqCst);
+        }
+    };
+
+    std::thread::scope(|scope| {
+        // The watchdog: scans in-flight items and marks overdue ones as
+        // failed *immediately*, so the fail-fast budget engages even
+        // while a hung item is still running (its thread cannot be
+        // cancelled; its eventual result is discarded).
+        if let Some(deadline) = policy.soft_deadline {
+            scope.spawn(|| {
+                let poll = (deadline / 8)
+                    .clamp(Duration::from_millis(1), Duration::from_millis(50));
+                while completed.load(Ordering::SeqCst) < n {
+                    std::thread::sleep(poll);
+                    for i in 0..n {
+                        if overdue[i].load(Ordering::SeqCst) {
+                            continue;
+                        }
+                        let started = *starts[i].lock().unwrap();
+                        if started.is_some_and(|s| s.elapsed() > deadline) {
+                            overdue[i].store(true, Ordering::SeqCst);
+                            count_failure(i);
+                        }
+                    }
+                }
+            });
+        }
+
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let failed_so_far = failures.load(Ordering::SeqCst);
+                let out = if policy
+                    .stop_after_failures
+                    .is_some_and(|stop| failed_so_far >= stop)
+                {
+                    Err(ExecError::Skipped { after_failures: failed_so_far })
+                } else {
+                    *starts[i].lock().unwrap() = Some(Instant::now());
+                    let out = run_attempts(&items[i], policy, &overdue[i], &f);
+                    *starts[i].lock().unwrap() = None;
+                    out
+                };
+                if out.is_err() {
+                    count_failure(i);
+                }
+                *outputs[i].lock().unwrap() = Some(out);
+                completed.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing supervised output"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn counts() -> Mutex<HashMap<i64, u32>> {
+        Mutex::new(HashMap::new())
+    }
+
+    #[test]
+    fn matches_parallel_map_on_infallible_work() {
+        let items: Vec<i64> = (0..500).collect();
+        let raw = crate::exec::parallel_map(items.clone(), 8, |x| x * x);
+        let supervised = parallel_try_map(items, 8, &SupervisePolicy::default(), |&x| {
+            Ok::<i64, TaskError>(x * x)
+        });
+        assert_eq!(supervised.len(), raw.len());
+        for (s, r) in supervised.into_iter().zip(raw) {
+            assert_eq!(s.unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<Result<i32, ExecError>> =
+            parallel_try_map(Vec::<i32>::new(), 4, &SupervisePolicy::default(), |&x| Ok(x));
+        assert!(out.is_empty());
+        let out = parallel_try_map(vec![41], 4, &SupervisePolicy::default(), |&x| {
+            Ok::<i32, TaskError>(x + 1)
+        });
+        assert_eq!(out[0].as_ref().unwrap(), &42);
+    }
+
+    #[test]
+    fn panic_is_isolated_and_reported() {
+        let items: Vec<i64> = (0..8).collect();
+        let out = parallel_try_map(items, 4, &SupervisePolicy::default(), |&x| {
+            if x == 3 {
+                panic!("boom on {x}");
+            }
+            Ok::<i64, TaskError>(x)
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i == 3 {
+                match r {
+                    Err(ExecError::Panicked { payload, attempts, .. }) => {
+                        assert_eq!(payload, "boom on 3");
+                        assert_eq!(*attempts, 1);
+                    }
+                    other => panic!("expected Panicked, got {other:?}"),
+                }
+                assert_eq!(r.as_ref().unwrap_err().kind(), "panicked");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn transient_errors_retry_to_success() {
+        let seen = counts();
+        let policy = SupervisePolicy { retry: RetryPolicy::attempts(3), ..Default::default() };
+        let out = parallel_try_map(vec![7i64], 2, &policy, |&x| {
+            let mut seen = seen.lock().unwrap();
+            let n = seen.entry(x).or_insert(0);
+            *n += 1;
+            if *n < 3 {
+                Err(TaskError::transient(format!("flaky attempt {n}")))
+            } else {
+                Ok(x * 10)
+            }
+        });
+        assert_eq!(out[0].as_ref().unwrap(), &70);
+        assert_eq!(seen.lock().unwrap()[&7], 3, "two retries then success");
+    }
+
+    #[test]
+    fn fatal_errors_do_not_retry() {
+        let seen = counts();
+        let policy = SupervisePolicy { retry: RetryPolicy::attempts(5), ..Default::default() };
+        let out = parallel_try_map(vec![1i64], 1, &policy, |&x| {
+            *seen.lock().unwrap().entry(x).or_insert(0) += 1;
+            Err::<i64, _>(TaskError::fatal("permanent"))
+        });
+        match &out[0] {
+            Err(ExecError::Failed { error, attempts, .. }) => {
+                assert_eq!(error, "permanent");
+                assert_eq!(*attempts, 1, "fatal => single attempt");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(seen.lock().unwrap()[&1], 1);
+    }
+
+    #[test]
+    fn transient_exhaustion_reports_attempt_count() {
+        let policy = SupervisePolicy { retry: RetryPolicy::attempts(3), ..Default::default() };
+        let out = parallel_try_map(vec![0u8], 1, &policy, |_| {
+            Err::<(), _>(TaskError::transient("always down"))
+        });
+        match &out[0] {
+            Err(ExecError::Failed { attempts, .. }) => assert_eq!(*attempts, 3),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn soft_deadline_times_out_slow_items() {
+        let policy = SupervisePolicy {
+            soft_deadline: Some(Duration::from_millis(5)),
+            ..Default::default()
+        };
+        for threads in [1, 3] {
+            let out = parallel_try_map(vec![0u8, 1, 2], threads, &policy, |&x| {
+                if x == 1 {
+                    std::thread::sleep(Duration::from_millis(40));
+                }
+                Ok::<u8, TaskError>(x)
+            });
+            assert_eq!(out[0].as_ref().unwrap(), &0, "threads={threads}");
+            assert_eq!(out[2].as_ref().unwrap(), &2, "threads={threads}");
+            match &out[1] {
+                Err(ExecError::TimedOut { elapsed_s, deadline_s }) => {
+                    assert!(*elapsed_s >= *deadline_s, "threads={threads}");
+                    assert_eq!(out[1].as_ref().unwrap_err().attempts(), 1);
+                }
+                other => panic!("expected TimedOut (threads={threads}), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn fail_fast_skips_the_rest_serially() {
+        let policy = SupervisePolicy { stop_after_failures: Some(1), ..Default::default() };
+        let out = parallel_try_map((0..5i64).collect(), 1, &policy, |&x| {
+            if x == 1 {
+                Err(TaskError::fatal("first failure"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert_eq!(out[0].as_ref().unwrap(), &0);
+        assert!(matches!(out[1], Err(ExecError::Failed { .. })));
+        for r in &out[2..] {
+            assert!(
+                matches!(r, Err(ExecError::Skipped { after_failures: 1 })),
+                "tail must be skipped: {r:?}"
+            );
+            assert_eq!(r.as_ref().unwrap_err().attempts(), 0);
+        }
+    }
+
+    #[test]
+    fn failure_budget_accounts_all_outcomes_in_parallel() {
+        // Parallel fail-fast cannot pin *which* items skip, but every
+        // item must come back classified and the budget must bite.
+        let policy = SupervisePolicy { stop_after_failures: Some(1), ..Default::default() };
+        let out = parallel_try_map((0..64i64).collect(), 8, &policy, |&x| {
+            if x == 0 {
+                Err(TaskError::fatal("seed failure"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert_eq!(out.len(), 64);
+        let failed = out.iter().filter(|r| r.is_err()).count();
+        assert!(failed >= 1);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_capped() {
+        let p = RetryPolicy::attempts(8)
+            .with_backoff(Duration::from_millis(10), Duration::from_millis(35));
+        assert_eq!(p.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(20));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(35), "capped");
+        assert_eq!(p.backoff_for(7), Duration::from_millis(35), "capped");
+        assert_eq!(RetryPolicy::none().backoff_for(4), Duration::ZERO);
+    }
+
+    #[test]
+    fn error_accessors_and_display() {
+        let e = ExecError::Failed { error: "x".into(), attempts: 2, elapsed_s: 0.5 };
+        assert_eq!(e.kind(), "failed");
+        assert_eq!(e.attempts(), 2);
+        assert_eq!(e.elapsed_s(), 0.5);
+        assert!(e.to_string().contains("after 2 attempt(s)"));
+        let s = ExecError::Skipped { after_failures: 3 };
+        assert_eq!((s.kind(), s.attempts(), s.elapsed_s()), ("skipped", 0, 0.0));
+        assert!(s.to_string().contains("3 earlier failure(s)"));
+    }
+}

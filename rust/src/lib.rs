@@ -36,6 +36,10 @@
 //! [`bench_harness`]) replace crates unavailable in the offline build
 //! (clap/tokio/proptest/criterion/serde); [`util::error`] stands in for
 //! `anyhow`/`thiserror` and [`runtime::xla`] for the PJRT bindings.
+//! Fan-outs that must survive bad cells run through the panic-safe
+//! supervised substrate ([`exec::supervise`]) with deterministic fault
+//! injection ([`exec::fault`]) for drills — a failing matrix cell or
+//! kernel simulation degrades that cell, not the process.
 //!
 //! ## Quickstart
 //!

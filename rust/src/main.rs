@@ -15,6 +15,13 @@
 //!               loop through PJRT, logging the loss curve
 //!   bench-diff  gate the bench trajectory against a committed baseline
 //!
+//! Exit codes:
+//!   0  success
+//!   1  command error (bad input, I/O failure — nothing useful produced)
+//!   2  CLI/usage error (unknown command or flag)
+//!   3  matrix: one or more cells failed; surviving cells still wrote
+//!      artifacts and matrix.errors.json lists the casualties
+//!
 //! Run `repro <cmd> --help` for flags.
 
 use hroofline::cli::{App, Cmd};
@@ -45,6 +52,12 @@ fn main() {
                     "default",
                     "comma-separated registry devices, 'all', or 'default' (the V100 testbed)",
                 )
+                .flag(
+                    "from-csv",
+                    "",
+                    "re-ingest an exported counter CSV instead of simulating",
+                )
+                .switch("lenient", "with --from-csv: skip and report malformed rows")
                 .flag("out", "out/profile", "output directory"),
         )
         .command(
@@ -60,6 +73,17 @@ fn main() {
                  (quick: v100 only; full: all registered)",
             )
             .flag("out", "out/matrix", "output directory")
+            .flag(
+                "max-failures",
+                "unlimited",
+                "stop the sweep after this many failed cells (default: never stop early)",
+            )
+            .flag(
+                "inject-fault",
+                "",
+                "deterministic fault plan for drills, e.g. 'panic:<cell-id>;seed=7'",
+            )
+            .switch("fail-fast", "stop the sweep at the first failed cell")
             .switch("quick", "reduced matrix at smoke scale (the CI gate)"),
         )
         .command(
@@ -97,7 +121,14 @@ fn main() {
         "ert" => hroofline::coordinator::cmd_ert(&parsed),
         "metrics" => hroofline::coordinator::cmd_metrics(&parsed),
         "profile" => hroofline::coordinator::cmd_profile(&parsed),
-        "matrix" => hroofline::coordinator::cmd_matrix(&parsed),
+        // `matrix` signals partial failure (some cells died, the rest
+        // produced artifacts) through its own exit code — see the
+        // module docs above.
+        "matrix" => match hroofline::coordinator::cmd_matrix(&parsed) {
+            Ok(0) => Ok(()),
+            Ok(code) => std::process::exit(code),
+            Err(e) => Err(e),
+        },
         "report" => hroofline::coordinator::cmd_report(&parsed),
         "train" => hroofline::coordinator::cmd_train(&parsed),
         "bench-diff" => hroofline::coordinator::cmd_bench_diff(&parsed),

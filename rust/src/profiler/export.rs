@@ -47,48 +47,173 @@ pub fn to_csv(profile: &Profile) -> String {
     out
 }
 
-/// Parse a CSV back into a [`Profile`] (aggregated counters per kernel).
-pub fn from_csv(text: &str, spec: &GpuSpec) -> Result<Profile> {
-    let mut per_kernel: BTreeMap<String, (u64, CounterSet)> = BTreeMap::new();
+/// One rejected row from a lenient ingest: the 1-based file line and
+/// why the row was skipped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowDiagnostic {
+    pub line: usize,
+    pub reason: String,
+}
+
+/// The diagnostics side of [`from_csv_lenient`]: per-row reasons,
+/// capped at [`RowDiagnostics::CAP`] entries (a multi-million-row
+/// export with a systematic defect must not balloon memory), plus the
+/// count of diagnostics suppressed past the cap.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RowDiagnostics {
+    pub rows: Vec<RowDiagnostic>,
+    pub suppressed: usize,
+}
+
+impl RowDiagnostics {
+    pub const CAP: usize = 64;
+
+    fn push(&mut self, line: usize, reason: String) {
+        if self.rows.len() < Self::CAP {
+            self.rows.push(RowDiagnostic { line, reason });
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    /// Total rejected rows, including suppressed ones.
+    pub fn total(&self) -> usize {
+        self.rows.len() + self.suppressed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty() && self.suppressed == 0
+    }
+
+    /// Human-readable digest for CLI surfacing: one line per diagnostic
+    /// plus an overflow trailer when the cap was hit.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for d in &self.rows {
+            let _ = writeln!(out, "line {}: {}", d.line, d.reason);
+        }
+        if self.suppressed > 0 {
+            let _ = writeln!(out, "... and {} more malformed row(s)", self.suppressed);
+        }
+        out
+    }
+}
+
+/// Split off the optional `# device=` stamp and the column header.
+/// Returns the resolved device, the 1-based file line number of the
+/// first data row, and the remaining lines. Header problems are fatal
+/// in both strict and lenient ingest — without a recognized header
+/// nothing downstream is trustworthy.
+fn split_header<'a>(
+    text: &'a str,
+    spec: &GpuSpec,
+) -> Result<(String, usize, std::str::Lines<'a>)> {
     let mut lines = text.lines();
     let mut header = lines.next().context("empty csv")?;
     // Optional device stamp ahead of the column header; external Nsight
     // exports without one fall back to the caller's spec.
     let mut device = spec.name.clone();
+    let mut first_data_line = 2;
     if let Some(name) = header.strip_prefix(DEVICE_PREFIX) {
         device = name.trim().to_string();
         header = lines.next().context("csv has a device line but no header")?;
+        first_data_line = 3;
     }
     if !header.contains("Kernel Name") || !header.contains("Metric Name") {
         bail!("unrecognized csv header: {header}");
     }
-    for (lineno, line) in lines.enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        let fields = parse_csv_row(line)
-            .with_context(|| format!("csv line {}: '{line}'", lineno + 2))?;
-        if fields.len() != 4 {
-            bail!("csv line {}: expected 4 fields, got {}", lineno + 2, fields.len());
-        }
-        let value: f64 = fields[2]
-            .parse()
-            .with_context(|| format!("csv line {}: bad value '{}'", lineno + 2, fields[2]))?;
-        let invocations: u64 = fields[3]
-            .parse()
-            .with_context(|| format!("csv line {}: bad invocations '{}'", lineno + 2, fields[3]))?;
-        let entry = per_kernel
-            .entry(fields[0].clone())
-            .or_insert_with(|| (invocations, CounterSet::new()));
-        entry.0 = invocations;
-        entry.1.set(&fields[1], value);
+    Ok((device, first_data_line, lines))
+}
+
+/// Parse and fold one data row into the per-kernel accumulator —
+/// shared by the strict and lenient ingest paths, so both enforce
+/// identical row semantics (including the invocation-conflict check).
+fn ingest_row(
+    line: &str,
+    lineno: usize,
+    per_kernel: &mut BTreeMap<String, (u64, CounterSet)>,
+) -> Result<()> {
+    let fields =
+        parse_csv_row(line).with_context(|| format!("csv line {lineno}: '{line}'"))?;
+    if fields.len() != 4 {
+        bail!("csv line {lineno}: expected 4 fields, got {}", fields.len());
     }
+    let value: f64 = fields[2]
+        .parse()
+        .with_context(|| format!("csv line {lineno}: bad value '{}'", fields[2]))?;
+    let invocations: u64 = fields[3]
+        .parse()
+        .with_context(|| format!("csv line {lineno}: bad invocations '{}'", fields[3]))?;
+    let entry = per_kernel
+        .entry(fields[0].clone())
+        .or_insert_with(|| (invocations, CounterSet::new()));
+    // Nsight emits one invocation count per kernel; a disagreement
+    // means a corrupt or spliced export. The old code silently let the
+    // last row win — now it is a structured error naming both values.
+    if entry.0 != invocations {
+        bail!(
+            "csv line {lineno}: conflicting Invocations for kernel '{}': \
+             {} earlier vs {} here",
+            fields[0],
+            entry.0,
+            invocations
+        );
+    }
+    entry.1.set(&fields[1], value);
+    Ok(())
+}
+
+fn profile_from(
+    per_kernel: BTreeMap<String, (u64, CounterSet)>,
+    device: String,
+    spec: &GpuSpec,
+) -> Profile {
     let mut profile = Profile::new();
     profile.device = device;
     for (name, (invocations, counters)) in per_kernel {
         profile.record(&name, invocations, &counters, spec);
     }
-    Ok(profile)
+    profile
+}
+
+/// Parse a CSV back into a [`Profile`] (aggregated counters per
+/// kernel). Strict: the first malformed row — including rows whose
+/// `Invocations` conflict with an earlier row of the same kernel — is
+/// an error carrying its file line number.
+pub fn from_csv(text: &str, spec: &GpuSpec) -> Result<Profile> {
+    let (device, first_data_line, lines) = split_header(text, spec)?;
+    let mut per_kernel: BTreeMap<String, (u64, CounterSet)> = BTreeMap::new();
+    for (offset, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        ingest_row(line, first_data_line + offset, &mut per_kernel)?;
+    }
+    Ok(profile_from(per_kernel, device, spec))
+}
+
+/// Lenient ingest for real-world exports: malformed rows are *skipped*
+/// (each recorded as a [`RowDiagnostic`] with its line and reason,
+/// capped with an overflow count) and every well-formed row still
+/// lands in the profile. Header problems remain fatal. A conflicting-
+/// invocations row is skipped too — the kernel keeps the first count
+/// it declared. Surfaced on the CLI as `repro profile --from-csv
+/// <file> --lenient`.
+pub fn from_csv_lenient(text: &str, spec: &GpuSpec) -> Result<(Profile, RowDiagnostics)> {
+    let (device, first_data_line, lines) = split_header(text, spec)?;
+    let mut per_kernel: BTreeMap<String, (u64, CounterSet)> = BTreeMap::new();
+    let mut diagnostics = RowDiagnostics::default();
+    for (offset, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = first_data_line + offset;
+        if let Err(e) = ingest_row(line, lineno, &mut per_kernel) {
+            diagnostics.push(lineno, format!("{e:#}"));
+        }
+    }
+    Ok((profile_from(per_kernel, device, spec), diagnostics))
 }
 
 fn escape(s: &str) -> String {
@@ -253,6 +378,96 @@ mod tests {
         let ingested = from_csv(external, &a100).unwrap();
         assert_eq!(ingested.device, "A100-SXM4-40GB");
         assert!(to_csv(&ingested).starts_with("# device=A100-SXM4-40GB\n"));
+    }
+
+    const HEADER: &str = "\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n";
+
+    #[test]
+    fn conflicting_invocations_are_a_structured_error() {
+        let spec = GpuSpec::v100();
+        let csv = format!(
+            "{HEADER}\"k\",\"sm__cycles_elapsed.avg\",1000,3\n\
+             \"k\",\"dram__bytes.sum\",5000,7\n"
+        );
+        let err = from_csv(&csv, &spec).unwrap_err();
+        let msg = format!("{err:#}");
+        // The error names the line and both disagreeing values.
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("conflicting Invocations"), "{msg}");
+        assert!(msg.contains('3') && msg.contains('7'), "{msg}");
+        // Consistent counts across rows of one kernel still pass.
+        let ok = format!(
+            "{HEADER}\"k\",\"sm__cycles_elapsed.avg\",1000,3\n\
+             \"k\",\"dram__bytes.sum\",5000,3\n"
+        );
+        let p = from_csv(&ok, &spec).unwrap();
+        assert_eq!(p.kernel("k").unwrap().invocations, 3);
+    }
+
+    #[test]
+    fn lenient_ingest_skips_bad_rows_and_reports_them() {
+        let spec = GpuSpec::v100();
+        let csv = format!(
+            "{HEADER}\"k\",\"sm__cycles_elapsed.avg\",1000,1\n\
+             \"k\",\"dram__bytes.sum\",notanumber,1\n\
+             too,few\n\
+             \"k\",\"lts__t_bytes.sum\",800,2\n\
+             \"k\",\"l1tex__t_bytes.sum\",900,1\n"
+        );
+        let (p, diags) = from_csv_lenient(&csv, &spec).unwrap();
+        // Good rows landed; the conflicting-invocations row (line 5)
+        // kept the kernel's first count.
+        let k = p.kernel("k").unwrap();
+        assert_eq!(k.invocations, 1);
+        assert_eq!(k.counters.get("l1tex__t_bytes.sum"), 900.0);
+        assert_eq!(k.counters.get("lts__t_bytes.sum"), 0.0, "conflicting row skipped");
+        // Three diagnostics with the right lines, in order.
+        assert_eq!(diags.total(), 3);
+        let lines: Vec<usize> = diags.rows.iter().map(|d| d.line).collect();
+        assert_eq!(lines, [3, 4, 5]);
+        assert!(diags.rows[0].reason.contains("bad value"), "{}", diags.rows[0].reason);
+        assert!(diags.rows[1].reason.contains("expected 4 fields"), "{}", diags.rows[1].reason);
+        assert!(
+            diags.rows[2].reason.contains("conflicting Invocations"),
+            "{}",
+            diags.rows[2].reason
+        );
+        assert!(diags.summary().contains("line 4"), "{}", diags.summary());
+        // Strict mode rejects the same text outright.
+        assert!(from_csv(&csv, &spec).is_err());
+        // A clean file yields empty diagnostics and the same profile as
+        // strict ingest.
+        let clean = format!("{HEADER}\"k\",\"sm__cycles_elapsed.avg\",1000,1\n");
+        let (lenient, d) = from_csv_lenient(&clean, &spec).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(lenient, from_csv(&clean, &spec).unwrap());
+    }
+
+    #[test]
+    fn lenient_diagnostics_cap_with_overflow_count() {
+        let spec = GpuSpec::v100();
+        let mut csv = String::from(HEADER);
+        for _ in 0..(RowDiagnostics::CAP + 10) {
+            csv.push_str("garbage,row\n");
+        }
+        let (p, diags) = from_csv_lenient(&csv, &spec).unwrap();
+        assert_eq!(p.n_kernels(), 0);
+        assert_eq!(diags.rows.len(), RowDiagnostics::CAP);
+        assert_eq!(diags.suppressed, 10);
+        assert_eq!(diags.total(), RowDiagnostics::CAP + 10);
+        assert!(diags.summary().contains("10 more malformed row(s)"), "{}", diags.summary());
+    }
+
+    #[test]
+    fn lenient_line_numbers_account_for_the_device_stamp() {
+        let spec = GpuSpec::v100();
+        let csv = format!("# device=V100-SXM2-16GB\n{HEADER}bad,row\n");
+        let (_, diags) = from_csv_lenient(&csv, &spec).unwrap();
+        assert_eq!(diags.rows.len(), 1);
+        assert_eq!(diags.rows[0].line, 3, "stamp shifts data rows to line 3");
+        // Header errors stay fatal even in lenient mode.
+        assert!(from_csv_lenient("", &spec).is_err());
+        assert!(from_csv_lenient("bogus header\n", &spec).is_err());
     }
 
     #[test]

@@ -25,7 +25,8 @@ pub mod profile;
 pub mod session;
 pub mod timeline;
 
+pub use export::{RowDiagnostic, RowDiagnostics};
 pub use metrics::{Metric, MetricRegistry};
 pub use profile::{KernelProfile, KernelTiming, Profile};
-pub use session::{ProfileRequest, Session, SessionConfig};
+pub use session::{ProfileRequest, Session, SessionConfig, SessionError};
 pub use timeline::{PhaseSlice, StepTimeline};

@@ -264,7 +264,9 @@ impl Profile {
     /// Kernels sorted by descending aggregated run time.
     pub fn by_time(&self) -> Vec<&KernelProfile> {
         let mut ks: Vec<&KernelProfile> = self.kernels.values().collect();
-        ks.sort_by(|a, b| b.seconds().partial_cmp(&a.seconds()).unwrap());
+        // total_cmp: NaN seconds (conceivable from ingested traces)
+        // must not panic; identical to partial_cmp on finite values.
+        ks.sort_by(|a, b| b.seconds().total_cmp(&a.seconds()));
         ks
     }
 

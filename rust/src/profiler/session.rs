@@ -44,6 +44,7 @@ pub struct ProfileRequest<'a> {
     trace: &'a [KernelInvocation],
     cache: Option<&'a sim::SharedSimCache>,
     timing: bool,
+    fault: Option<&'a crate::exec::FaultInjector>,
 }
 
 impl<'a> ProfileRequest<'a> {
@@ -52,6 +53,7 @@ impl<'a> ProfileRequest<'a> {
             trace,
             cache: None,
             timing: true,
+            fault: None,
         }
     }
 
@@ -73,6 +75,17 @@ impl<'a> ProfileRequest<'a> {
     /// [`KernelProfile::timing`]: crate::profiler::profile::KernelProfile
     pub fn counters_only(mut self) -> ProfileRequest<'a> {
         self.timing = false;
+        self
+    }
+
+    /// Arm a deterministic [`crate::exec::FaultInjector`] over the
+    /// per-kernel simulation fan-out: each unique kernel applies the
+    /// plan under the label `kernel:<name>` before simulating. Injected
+    /// panics and errors surface as [`SessionError::Exec`] instead of
+    /// unwinding — this is how every session failure path is exercised
+    /// without real flakiness.
+    pub fn fault_injector(mut self, injector: &'a crate::exec::FaultInjector) -> ProfileRequest<'a> {
+        self.fault = Some(injector);
         self
     }
 }
@@ -105,6 +118,11 @@ pub struct SessionConfig {
     /// is pure and aggregation preserves trace order, so the profile is
     /// bit-identical for every setting (test-asserted).
     pub threads: Option<usize>,
+    /// Retry budget for *transient* per-kernel simulation failures
+    /// (e.g. a flaky counter read scripted by a fault plan). The
+    /// default is no retries; real collection wrappers typically want
+    /// 2–3 attempts (cf. Nsight replay-failure retries).
+    pub retry: crate::exec::RetryPolicy,
 }
 
 impl Default for SessionConfig {
@@ -117,6 +135,7 @@ impl Default for SessionConfig {
             nondeterminism: None,
             memoize: true,
             threads: None,
+            retry: crate::exec::RetryPolicy::none(),
         }
     }
 }
@@ -131,6 +150,13 @@ pub enum SessionError {
         a: f64,
         b: f64,
     },
+    /// A kernel's supervised simulation failed (panicked, timed out, or
+    /// exhausted its retry budget). The first failing kernel in trace
+    /// order wins, matching a serial collection scan.
+    Exec {
+        kernel: String,
+        error: crate::exec::ExecError,
+    },
 }
 
 impl std::fmt::Display for SessionError {
@@ -144,6 +170,9 @@ impl std::fmt::Display for SessionError {
                  '{metric}' across replay passes ({a} vs {b}); enable determinism \
                  (cf. tensorflow-determinism)"
             ),
+            SessionError::Exec { kernel, error } => {
+                write!(f, "simulation of kernel '{kernel}' {error}")
+            }
         }
     }
 }
@@ -154,7 +183,7 @@ impl std::error::Error for SessionError {
             // Transparent: Display already *is* the inner error, so the
             // source chain must continue past it (not repeat it).
             SessionError::Metric(e) => e.source(),
-            SessionError::NonDeterministic { .. } => None,
+            SessionError::NonDeterministic { .. } | SessionError::Exec { .. } => None,
         }
     }
 }
@@ -199,21 +228,23 @@ impl<'a> Session<'a> {
     ///    simulation (K simulations for N entries); valid because
     ///    simulation is pure, disabled when the nondeterminism hook is
     ///    armed (each pass must then genuinely re-execute).
-    /// 2. **Fan out** — the unique-kernel simulations and the per-entry
-    ///    pass merges run through [`crate::exec::parallel_map`]; every
-    ///    unit of work is pure, so parallelism cannot change the result.
+    /// 2. **Fan out** — the unique-kernel simulations run through the
+    ///    supervised [`crate::exec::parallel_try_map`] (panic-isolated,
+    ///    retryable, fault-injectable) and the per-entry pass merges
+    ///    through [`crate::exec::parallel_map`]; every unit of work is
+    ///    pure, so parallelism cannot change the result.
     /// 3. **Order-preserving aggregation** — merged counter sets (and
     ///    timing, when requested) are recorded into the [`Profile`]
     ///    strictly in trace order, making the output bit-identical to
     ///    the serial path (test-asserted, like PR 1's ERT sweep).
     pub fn run(&self, req: &ProfileRequest<'_>) -> Result<Profile, SessionError> {
         match req.cache {
-            Some(cache) => self.profile_with(req.trace, req.timing, &|k| {
+            Some(cache) => self.profile_with(req.trace, req.timing, req.fault, &|k| {
                 cache.get_or_simulate_timed(self.spec, k)
             }),
-            None => {
-                self.profile_with(req.trace, req.timing, &|k| sim::simulate_timed(self.spec, k))
-            }
+            None => self.profile_with(req.trace, req.timing, req.fault, &|k| {
+                sim::simulate_timed(self.spec, k)
+            }),
         }
     }
 
@@ -244,6 +275,7 @@ impl<'a> Session<'a> {
         &self,
         trace: &[KernelInvocation],
         timing: bool,
+        fault: Option<&crate::exec::FaultInjector>,
         simulate_kernel: &(dyn Fn(&KernelDesc) -> (CounterSet, CycleBreakdown) + Sync),
     ) -> Result<Profile, SessionError> {
         let metric_refs: Vec<&str> = self.config.metrics.iter().map(|s| s.as_str()).collect();
@@ -281,9 +313,39 @@ impl<'a> Session<'a> {
                 baseline_of.push(i);
             }
         }
+        // The baseline fan-out runs supervised: a panic inside one
+        // kernel's simulation (or an injected fault) becomes a
+        // structured `SessionError::Exec` instead of unwinding through
+        // the whole session — the isolation boundary matrix cells rely
+        // on. With no faults armed the work function is infallible, so
+        // the output (and thus the profile) is bit-identical to the old
+        // `parallel_map` path (test-asserted).
         let sim_workers = self.workers_for(unique.len());
-        let baselines: Vec<(CounterSet, CycleBreakdown)> =
-            crate::exec::parallel_map(unique, sim_workers, simulate_kernel);
+        let policy = crate::exec::SupervisePolicy {
+            retry: self.config.retry,
+            ..Default::default()
+        };
+        // Cheap Vec-of-refs clone, kept for error attribution by index.
+        let kernel_of = unique.clone();
+        let sim_results = crate::exec::parallel_try_map(unique, sim_workers, &policy, |k| {
+            if let Some(inj) = fault {
+                inj.apply(&format!("kernel:{}", k.name))?;
+            }
+            Ok(simulate_kernel(k))
+        });
+        let mut baselines: Vec<(CounterSet, CycleBreakdown)> =
+            Vec::with_capacity(sim_results.len());
+        for (idx, result) in sim_results.into_iter().enumerate() {
+            match result {
+                Ok(b) => baselines.push(b),
+                Err(error) => {
+                    return Err(SessionError::Exec {
+                        kernel: kernel_of[idx].name.clone(),
+                        error,
+                    })
+                }
+            }
+        }
 
         // 2. Merge each entry's replay passes (pure per entry; with the
         // nondeterminism hook armed, `baseline = None` forces per-pass
@@ -622,6 +684,62 @@ mod tests {
         let err =
             Session::new(&spec, cfg).run(&ProfileRequest::new(&trace())).unwrap_err();
         assert!(matches!(err, SessionError::Metric(_)));
+    }
+
+    #[test]
+    fn injected_kernel_panic_becomes_structured_error() {
+        let spec = GpuSpec::v100();
+        let session = Session::standard(&spec);
+        let t = trace();
+        let inj =
+            crate::exec::FaultInjector::new(crate::exec::FaultPlan::new(0).panic_on("kernel:cast"));
+        let err = session.run(&ProfileRequest::new(&t).fault_injector(&inj)).unwrap_err();
+        match &err {
+            SessionError::Exec { kernel, error } => {
+                assert_eq!(kernel, "cast");
+                assert_eq!(error.kind(), "panicked");
+            }
+            other => panic!("expected Exec error, got {other:?}"),
+        }
+        assert!(err.to_string().contains("cast"), "{err}");
+    }
+
+    #[test]
+    fn retry_budget_rides_out_transient_kernel_faults() {
+        let spec = GpuSpec::v100();
+        let t = trace();
+        let clean = profiled(&Session::standard(&spec), &t);
+        // Fail the first simulation attempt of every kernel; with no
+        // retry budget the session fails...
+        let inj =
+            crate::exec::FaultInjector::new(crate::exec::FaultPlan::new(0).fail_first("kernel:", 1));
+        let session = Session::standard(&spec);
+        let err = session.run(&ProfileRequest::new(&t).fault_injector(&inj)).unwrap_err();
+        assert!(matches!(err, SessionError::Exec { .. }), "{err}");
+        // ...and with two attempts the retry clears the fault and the
+        // profile is identical to a fault-free run.
+        let inj =
+            crate::exec::FaultInjector::new(crate::exec::FaultPlan::new(0).fail_first("kernel:", 1));
+        let cfg =
+            SessionConfig { retry: crate::exec::RetryPolicy::attempts(2), ..Default::default() };
+        let retried = Session::new(&spec, cfg)
+            .run(&ProfileRequest::new(&t).fault_injector(&inj))
+            .unwrap();
+        assert_eq!(retried, clean);
+    }
+
+    #[test]
+    fn armed_but_non_matching_injector_changes_nothing() {
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let session = Session::standard(&spec);
+        let clean = profiled(&session, &t);
+        let inj = crate::exec::FaultInjector::new(
+            crate::exec::FaultPlan::new(7).panic_on("kernel:no-such-kernel"),
+        );
+        let supervised =
+            session.run(&ProfileRequest::new(&t).fault_injector(&inj)).unwrap();
+        assert_eq!(supervised, clean);
     }
 
     #[test]

@@ -85,7 +85,7 @@ impl Ceilings {
             if let Some(top) = own
                 .compute
                 .iter()
-                .max_by(|a, b| a.flops_per_sec.partial_cmp(&b.flops_per_sec).unwrap())
+                .max_by(|a, b| a.flops_per_sec.total_cmp(&b.flops_per_sec))
             {
                 compute.push(ComputeCeiling {
                     label: format!("{} {}", spec.name, top.label),
@@ -175,6 +175,16 @@ impl KernelPoint {
     }
 }
 
+/// Sort chart points longest-running first (big circles render under
+/// small ones). NaN-safe: a NaN-seconds point — possible once real
+/// ingested traces feed the chart — lands at a deterministic position
+/// under [`f64::total_cmp`]'s total order instead of panicking the
+/// render the way `partial_cmp(..).unwrap()` did. For the ordinary
+/// all-finite case the ordering is identical to the historical one.
+pub fn sort_points_hot_first(points: &mut [KernelPoint]) {
+    points.sort_by(|a, b| b.seconds.total_cmp(&a.seconds));
+}
+
 /// A complete hierarchical Roofline dataset: ceilings + kernel points.
 #[derive(Clone, Debug)]
 pub struct RooflineModel {
@@ -190,8 +200,7 @@ impl RooflineModel {
             .kernels()
             .filter_map(KernelPoint::from_profile)
             .collect();
-        // Longest-running first so big circles render under small ones.
-        points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
+        sort_points_hot_first(&mut points);
         RooflineModel {
             ceilings: Ceilings::from_spec(spec),
             points,
@@ -316,6 +325,36 @@ mod tests {
         // `bound` keeps working (first matching level wins — the
         // first-listed device, which is the comparison baseline).
         assert!(m.bound(MemLevel::Hbm, 0.1) > 0.0);
+    }
+
+    #[test]
+    fn sort_points_survives_nan_seconds() {
+        // Regression: the hot-first sort used partial_cmp().unwrap()
+        // and panicked on NaN seconds; total_cmp must not.
+        let point = |name: &str, seconds: f64| KernelPoint {
+            name: name.into(),
+            seconds,
+            flops_per_sec: 1e12,
+            ai: vec![(MemLevel::Hbm, 1.0)],
+            tensor_dominated: false,
+            invocations: 1,
+        };
+        let mut points = vec![
+            point("fast", 1e-6),
+            point("broken", f64::NAN),
+            point("slow", 2e-3),
+            point("mid", 4e-5),
+        ];
+        sort_points_hot_first(&mut points);
+        // Finite points keep the descending order; the NaN point lands
+        // deterministically (total order) rather than panicking.
+        let finite: Vec<&str> = points
+            .iter()
+            .filter(|p| p.seconds.is_finite())
+            .map(|p| p.name.as_str())
+            .collect();
+        assert_eq!(finite, ["slow", "mid", "fast"]);
+        assert_eq!(points.len(), 4);
     }
 
     #[test]

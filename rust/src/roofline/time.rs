@@ -92,7 +92,9 @@ pub fn kernel_time_table(profile: &Profile) -> Table {
     let mut tb = Table::new(&["kernel", "time", "share", "bound", "compute", "memory", "ramp"]);
     let total: f64 = profile.kernels().map(|k| k.duration_s()).sum();
     let mut kernels: Vec<_> = profile.kernels().collect();
-    kernels.sort_by(|a, b| b.duration_s().partial_cmp(&a.duration_s()).unwrap());
+    // total_cmp: NaN durations (conceivable from ingested traces) must
+    // not panic the report; identical to partial_cmp on finite values.
+    kernels.sort_by(|a, b| b.duration_s().total_cmp(&a.duration_s()));
     for k in kernels {
         let (bound, compute, memory, ramp) = match &k.timing {
             Some(t) => (

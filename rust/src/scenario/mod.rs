@@ -15,9 +15,14 @@
 //!   full matrix crosses every registered device;
 //! * [`ScenarioMatrix::run`] builds each workload graph once, lowers
 //!   each (workload, device, framework, policy) combination once, then
-//!   fans per-scenario profiling through [`crate::exec::parallel_map`]
-//!   with one [`SharedSimCache`] *per device* — duplicate kernels
-//!   *across* scenarios simulate once for the whole sweep;
+//!   fans per-scenario profiling through the supervised
+//!   [`crate::exec::parallel_try_map`] with one [`SharedSimCache`]
+//!   *per device* — duplicate kernels *across* scenarios simulate once
+//!   for the whole sweep, and a cell that panics / times out / errors
+//!   degrades into a structured [`CellFailure`] instead of aborting
+//!   its siblings ([`ScenarioMatrix::run_with`] exposes the
+//!   supervision policy and deterministic fault injection;
+//!   [`errors_manifest`] is the `matrix.errors.json` payload);
 //! * [`ScenarioResult`] exposes per-scenario hierarchical Roofline
 //!   data for every [`MemLevel`] and renders per-scenario artifacts
 //!   (kernel-table text, summary JSON, paper-style SVG, Nsight-style
@@ -229,9 +234,35 @@ impl ScenarioMatrix {
     /// 3. profile every scenario through [`Session::run`] with a
     ///    [`ProfileRequest`] carrying one [`SharedSimCache`] *per
     ///    device* (the cache is keyed by descriptor, so each device
-    ///    needs its own), fanned out with [`crate::exec::parallel_map`]
-    ///    (results in enumeration order).
+    ///    needs its own), fanned out with the supervised
+    ///    [`crate::exec::parallel_try_map`] (results in enumeration
+    ///    order).
+    ///
+    /// Equivalent to [`ScenarioMatrix::run_with`] with default options:
+    /// no fault injection, no retries, no failure budget. A default
+    /// supervised run over healthy cells produces byte-identical
+    /// artifacts to the historical unsupervised pipeline
+    /// (test-asserted).
     pub fn run(&self) -> MatrixRun {
+        self.run_with(&MatrixRunOptions::default())
+    }
+
+    /// [`ScenarioMatrix::run`] with explicit supervision options: a
+    /// [`crate::exec::SupervisePolicy`] (retries, soft deadline,
+    /// fail-fast budget) and an optional deterministic
+    /// [`crate::exec::FaultInjector`].
+    ///
+    /// Cells degrade gracefully: a cell that panics, times out, or
+    /// errors becomes a [`CellFailure`] in [`MatrixRun::failures`]
+    /// while every other cell keeps profiling. Cell labels for fault
+    /// targeting are `cell#<index>:<scenario-id>`; the injector is
+    /// also threaded into each cell's session, where kernels apply it
+    /// under `kernel:<name>` labels.
+    ///
+    /// Panic isolation across cells is sound because the shared
+    /// per-device [`SharedSimCache`] simulates *outside* its lock — an
+    /// unwinding cell never poisons state its siblings need.
+    pub fn run_with(&self, options: &MatrixRunOptions<'_>) -> MatrixRun {
         let scenarios = self.enumerate();
 
         let widx: HashMap<&str, usize> =
@@ -271,42 +302,130 @@ impl ScenarioMatrix {
         // the profile (bit-identity is test-asserted by the session).
         let inner_threads =
             (crate::exec::default_workers(usize::MAX) / prof_workers.max(1)).max(1);
-        let session_cfg = SessionConfig { threads: Some(inner_threads), ..Default::default() };
+        // The cell-level retry budget also applies inside each session,
+        // so a transient per-kernel fault is retried at the kernel
+        // grain instead of re-profiling the whole cell.
+        let session_cfg = SessionConfig {
+            threads: Some(inner_threads),
+            retry: options.policy.retry,
+            ..Default::default()
+        };
         let sessions: Vec<Session> =
             specs.iter().map(|spec| Session::new(spec, session_cfg.clone())).collect();
-        let profiles: Vec<Profile> =
-            crate::exec::parallel_map(scenarios.clone(), prof_workers, |sc| {
+        let cells: Vec<(usize, Scenario)> = scenarios.iter().copied().enumerate().collect();
+        let outcomes = crate::exec::parallel_try_map(
+            cells,
+            prof_workers,
+            &options.policy,
+            |&(index, sc)| {
+                if let Some(inj) = options.fault {
+                    inj.apply(&format!("cell#{index}:{}", sc.id()))?;
+                }
                 let di = didx[sc.device.name];
                 let key = (widx[sc.workload.name], di, sc.framework, sc.policy);
                 let trace = traces[combo_of[&key]].phase(sc.phase);
+                let mut req = ProfileRequest::new(trace).shared_cache(&caches[di]);
+                if let Some(inj) = options.fault {
+                    req = req.fault_injector(inj);
+                }
+                // Session-level errors already exhausted the kernel-
+                // grain retry budget — at the cell grain they are final.
                 sessions[di]
-                    .run(&ProfileRequest::new(trace).shared_cache(&caches[di]))
-                    .expect("standard session on a lowered trace cannot fail")
-            });
+                    .run(&req)
+                    .map_err(|e| crate::exec::TaskError::fatal(e.to_string()))
+            },
+        );
 
-        let results = scenarios
-            .into_iter()
-            .zip(profiles)
-            .map(|(scenario, profile)| ScenarioResult { scenario, profile })
-            .collect();
+        let mut results = Vec::with_capacity(scenarios.len());
+        let mut failures = Vec::new();
+        for ((index, scenario), outcome) in scenarios.into_iter().enumerate().zip(outcomes) {
+            match outcome {
+                Ok(profile) => results.push(ScenarioResult { scenario, profile }),
+                Err(error) => failures.push(CellFailure { index, scenario, error }),
+            }
+        }
         let sim_stats = caches.iter().fold((0, 0), |(h, s), c| {
             let (hits, sims) = c.stats();
             (h + hits, s + sims)
         });
-        MatrixRun { results, sim_stats }
+        MatrixRun { results, failures, sim_stats }
     }
 }
 
-/// The sweep output: per-scenario results in enumeration order plus
-/// shared-cache statistics.
+/// Supervision options for [`ScenarioMatrix::run_with`]. The default
+/// is the historical behaviour: every cell runs, nothing is injected,
+/// failures are still isolated per cell.
+#[derive(Clone, Copy, Default)]
+pub struct MatrixRunOptions<'a> {
+    pub policy: crate::exec::SupervisePolicy,
+    pub fault: Option<&'a crate::exec::FaultInjector>,
+}
+
+/// One cell that failed to profile: which cell (enumeration index +
+/// scenario) and the structured [`crate::exec::ExecError`] (kind,
+/// attempts, elapsed) describing how.
+pub struct CellFailure {
+    pub index: usize,
+    pub scenario: Scenario,
+    pub error: crate::exec::ExecError,
+}
+
+impl CellFailure {
+    pub fn id(&self) -> String {
+        self.scenario.id()
+    }
+}
+
+/// A cell's outcome in enumeration order — the view over
+/// [`MatrixRun::outcomes`] that interleaves survivors and failures
+/// back into one sequence.
+pub enum CellOutcome<'a> {
+    Success(&'a ScenarioResult),
+    Failed(&'a CellFailure),
+}
+
+/// The sweep output: surviving per-scenario results in enumeration
+/// order, per-cell failures (also enumeration-ordered), and
+/// shared-cache statistics. A fault-free run has `failures.is_empty()`
+/// and is byte-identical to the pre-supervision pipeline.
 pub struct MatrixRun {
     pub results: Vec<ScenarioResult>,
+    /// Cells that failed to profile (panicked / timed out / errored /
+    /// skipped by fail-fast), with structured errors.
+    pub failures: Vec<CellFailure>,
     /// (cache hits, distinct simulations) across the whole sweep,
     /// summed over the per-device caches.
     pub sim_stats: (u64, u64),
 }
 
 impl MatrixRun {
+    /// Total cells attempted (survivors + failures).
+    pub fn n_cells(&self) -> usize {
+        self.results.len() + self.failures.len()
+    }
+
+    /// Every cell's outcome, re-interleaved into enumeration order
+    /// (failures carry their enumeration index; survivors fill the
+    /// gaps in order).
+    pub fn outcomes(&self) -> Vec<CellOutcome<'_>> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        let mut ok = self.results.iter();
+        let mut failed = self.failures.iter().peekable();
+        for index in 0..self.n_cells() {
+            match failed.peek() {
+                Some(f) if f.index == index => {
+                    out.push(CellOutcome::Failed(failed.next().unwrap()));
+                }
+                _ => {
+                    if let Some(r) = ok.next() {
+                        out.push(CellOutcome::Success(r));
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// The distinct devices this run covered, in first-seen order.
     pub fn device_entries(&self) -> Vec<&'static DeviceEntry> {
         let mut out: Vec<&'static DeviceEntry> = Vec::new();
@@ -746,6 +865,57 @@ pub fn cross_device_step_table(run: &MatrixRun) -> Table {
 /// pipeline). Multi-device runs overlay every device's headline
 /// ceilings ([`Ceilings::merged`], repeats dashed) and append the
 /// cross-device pivot table.
+/// The failed-cell table appended to the comparison artifact when any
+/// cell failed: cell id, error kind, attempts, and the full error.
+pub fn failure_table(failures: &[CellFailure]) -> Table {
+    let mut t = Table::new(&["cell", "kind", "attempts", "error"]).aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Left,
+    ]);
+    for f in failures {
+        t.row(&[
+            f.id(),
+            f.error.kind().to_string(),
+            f.error.attempts().to_string(),
+            f.error.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The machine-readable failure manifest (`matrix.errors.json`): one
+/// entry per failed cell with its id, enumeration index, error kind,
+/// attempt count, elapsed seconds, and the rendered error. Written by
+/// `repro matrix` only when at least one cell failed, so fault-free
+/// runs keep the historical artifact layout exactly.
+///
+/// `elapsed_s` is wall time and therefore varies across reruns;
+/// everything else is deterministic for a fixed
+/// [`crate::exec::FaultPlan`] (test-asserted).
+pub fn errors_manifest(run: &MatrixRun) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("hroofline-matrix-errors-v1")),
+        ("n_cells", Json::num(run.n_cells() as f64)),
+        ("n_ok", Json::num(run.results.len() as f64)),
+        ("n_failed", Json::num(run.failures.len() as f64)),
+        (
+            "failures",
+            Json::arr(run.failures.iter().map(|f| {
+                Json::obj(vec![
+                    ("cell", Json::str(f.id())),
+                    ("index", Json::num(f.index as f64)),
+                    ("kind", Json::str(f.error.kind())),
+                    ("attempts", Json::num(f.error.attempts() as f64)),
+                    ("elapsed_s", Json::num(f.error.elapsed_s())),
+                    ("error", Json::str(f.error.to_string())),
+                ])
+            })),
+        ),
+    ])
+}
+
 pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
     let entries = run.device_entries();
     let specs: Vec<GpuSpec> = if entries.is_empty() {
@@ -757,7 +927,7 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
     let table = comparison_table(&run.results);
     let mut points: Vec<KernelPoint> =
         run.results.iter().filter_map(ScenarioResult::aggregate_point).collect();
-    points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
+    crate::roofline::model::sort_points_hot_first(&mut points);
     let (ceilings, device_name) = if multi_device {
         let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
         (Ceilings::merged(specs.iter()), names.join(" vs "))
@@ -785,7 +955,17 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
             cross_device_table(run).render()
         ));
     }
-    let json = Json::obj(vec![
+    // The failure section exists only on degraded runs, keeping
+    // fault-free output byte-identical to the historical artifact.
+    if !run.failures.is_empty() {
+        text.push_str(&format!(
+            "\nfailed cells ({} of {}):\n{}",
+            run.failures.len(),
+            run.n_cells(),
+            failure_table(&run.failures).render()
+        ));
+    }
+    let mut json_fields = vec![
         ("n_scenarios", Json::num(run.results.len() as f64)),
         ("n_non_empty", Json::num(non_empty as f64)),
         ("shared_sim_count", Json::num(sims as f64)),
@@ -808,7 +988,15 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
                 ])
             })),
         ),
-    ]);
+    ];
+    if !run.failures.is_empty() {
+        json_fields.push(("n_failed", Json::num(run.failures.len() as f64)));
+        json_fields.push((
+            "failed_cells",
+            Json::arr(run.failures.iter().map(|f| Json::str(f.id()))),
+        ));
+    }
+    let json = Json::obj(json_fields);
     let mut timeline_lane = format!(
         "cross-scenario step-time pivot (time-based Roofline):\n{}",
         step_time_pivot(&run.results).render()
@@ -839,7 +1027,7 @@ pub fn device_comparison_artifact(run: &MatrixRun, device: &DeviceEntry) -> Arti
     let results = run.results_for(device);
     let mut points: Vec<KernelPoint> =
         results.iter().filter_map(|r| r.aggregate_point()).collect();
-    points.sort_by(|a, b| b.seconds.partial_cmp(&a.seconds).unwrap());
+    crate::roofline::model::sort_points_hot_first(&mut points);
     let model = RooflineModel {
         ceilings: Ceilings::from_spec(&spec),
         points,
@@ -1102,6 +1290,76 @@ mod tests {
         let c_tl = c.lanes.iter().find(|(k, _)| k == "timeline.txt").unwrap();
         assert!(c_tl.1.contains("cross-device step-time pivot"), "{}", c_tl.1);
         assert!(c_tl.1.contains("c/m/o(a100)"), "{}", c_tl.1);
+    }
+
+    #[test]
+    fn injected_cell_panic_degrades_gracefully() {
+        let plan = crate::exec::FaultPlan::new(0).panic_on("deepcam-lite-pt-optimizer-O1");
+        let inj = crate::exec::FaultInjector::new(plan);
+        let run = tiny_matrix()
+            .run_with(&MatrixRunOptions { fault: Some(&inj), ..Default::default() });
+        assert_eq!(run.n_cells(), 2);
+        assert_eq!(run.results.len(), 1, "the sibling cell survives");
+        assert_eq!(run.results[0].id(), "deepcam-lite-pt-forward-O1");
+        assert_eq!(run.failures.len(), 1);
+        let f = &run.failures[0];
+        assert_eq!(f.id(), "deepcam-lite-pt-optimizer-O1");
+        assert_eq!(f.index, 1);
+        assert_eq!(f.error.kind(), "panicked");
+        // The surviving cell still renders its full artifact.
+        assert!(run.results[0].to_artifact().svg.is_some());
+        // outcomes() re-interleaves enumeration order.
+        let outcomes = run.outcomes();
+        assert!(matches!(outcomes[0], CellOutcome::Success(_)));
+        assert!(matches!(outcomes[1], CellOutcome::Failed(_)));
+        // The manifest names exactly the failed cell.
+        let manifest = errors_manifest(&run);
+        assert_eq!(manifest.get("n_failed").unwrap().as_f64().unwrap() as usize, 1);
+        let failures = manifest.get("failures").unwrap().as_arr().unwrap();
+        assert_eq!(
+            failures[0].get("cell").unwrap().as_str().unwrap(),
+            "deepcam-lite-pt-optimizer-O1"
+        );
+        assert_eq!(failures[0].get("kind").unwrap().as_str().unwrap(), "panicked");
+        // The comparison artifact gains the failure section.
+        let a = comparison_artifact(&run);
+        assert!(a.text.contains("failed cells (1 of 2)"), "{}", a.text);
+        assert!(a.text.contains("deepcam-lite-pt-optimizer-O1"), "{}", a.text);
+        assert_eq!(a.json.get("n_failed").unwrap().as_f64().unwrap() as usize, 1);
+    }
+
+    #[test]
+    fn kernel_grain_transient_fault_rides_retry_budget() {
+        // A kernel-level FailFirst(1) fault inside one cell's session is
+        // absorbed by a 2-attempt retry policy: the run is clean and
+        // byte-identical to a fault-free sweep.
+        let clean = tiny_matrix().run();
+        let inj = crate::exec::FaultInjector::new(
+            crate::exec::FaultPlan::new(0).fail_first("kernel:", 1),
+        );
+        let policy = crate::exec::SupervisePolicy {
+            retry: crate::exec::RetryPolicy::attempts(2),
+            ..Default::default()
+        };
+        let run = tiny_matrix().run_with(&MatrixRunOptions { policy, fault: Some(&inj) });
+        assert!(run.failures.is_empty(), "retries must absorb the transient fault");
+        assert_eq!(run.results.len(), clean.results.len());
+        for (a, b) in run.results.iter().zip(&clean.results) {
+            assert_eq!(a.profile, b.profile, "{}", a.id());
+        }
+    }
+
+    #[test]
+    fn clean_run_has_no_failure_surface() {
+        let run = tiny_matrix().run();
+        assert!(run.failures.is_empty());
+        assert_eq!(run.n_cells(), run.results.len());
+        assert!(run.outcomes().iter().all(|o| matches!(o, CellOutcome::Success(_))));
+        let a = comparison_artifact(&run);
+        assert!(!a.text.contains("failed cells"), "{}", a.text);
+        assert!(a.json.opt("n_failed").is_none());
+        let manifest = errors_manifest(&run);
+        assert_eq!(manifest.get("n_failed").unwrap().as_f64().unwrap() as usize, 0);
     }
 
     #[test]

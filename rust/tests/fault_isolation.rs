@@ -1,0 +1,176 @@
+//! Fault-isolated execution, end to end: deterministic fault injection
+//! into the scenario matrix, graceful degradation (survivors keep
+//! profiling, failures land in the error manifest), rerun determinism
+//! for a fixed `FaultPlan`, and the zero-perturbation guarantee — an
+//! armed-but-idle supervised run is byte-identical to the default one.
+
+use hroofline::exec::{FaultInjector, FaultPlan, RetryPolicy, SupervisePolicy};
+use hroofline::scenario::{
+    comparison_artifact, comparison_csv, errors_manifest, MatrixRunOptions, ScenarioMatrix,
+};
+
+/// The 8-cell quick transformer sweep: tf/pt × forward/backward × O0/O1
+/// on the default device. Small enough for CI, big enough to leave
+/// survivors around any injected fault.
+fn matrix() -> ScenarioMatrix {
+    ScenarioMatrix::quick().with_workloads("transformer").unwrap()
+}
+
+const TF_FWD_O0: &str = "transformer-tf-forward-O0";
+const PT_BWD_O1: &str = "transformer-pt-backward-O1";
+
+#[test]
+fn injected_faults_fell_exactly_the_targeted_cells() {
+    let plan = FaultPlan::new(7).panic_on(TF_FWD_O0).panic_on(PT_BWD_O1);
+    let injector = FaultInjector::new(plan);
+    let options = MatrixRunOptions { policy: SupervisePolicy::default(), fault: Some(&injector) };
+    let run = matrix().run_with(&options);
+
+    // k = 2 faults: n - k survivors, every cell accounted for.
+    assert_eq!(run.n_cells(), 8);
+    assert_eq!(run.results.len(), 6);
+    assert_eq!(run.failures.len(), 2);
+    let failed: Vec<String> = run.failures.iter().map(|f| f.id()).collect();
+    assert_eq!(failed, [TF_FWD_O0, PT_BWD_O1]);
+    // tf-forward-O0 enumerates first, pt-backward-O1 last.
+    assert_eq!(run.failures[0].index, 0);
+    assert_eq!(run.failures[1].index, 7);
+
+    // Every surviving cell still renders its full artifact.
+    for r in &run.results {
+        assert!(!r.id().contains("tf-forward-O0") && !r.id().contains("pt-backward-O1"));
+        let a = r.to_artifact();
+        assert!(!a.text.is_empty(), "{}", r.id());
+        assert!(a.svg.is_some(), "{}", r.id());
+        assert!(a.csv.is_some(), "{}", r.id());
+    }
+
+    // The manifest lists exactly the k injected cells, as panics.
+    let m = errors_manifest(&run);
+    assert_eq!(m.get("schema").unwrap().as_str().unwrap(), "hroofline-matrix-errors-v1");
+    assert_eq!(m.get("n_cells").unwrap().as_f64().unwrap(), 8.0);
+    assert_eq!(m.get("n_ok").unwrap().as_f64().unwrap(), 6.0);
+    assert_eq!(m.get("n_failed").unwrap().as_f64().unwrap(), 2.0);
+    let entries = m.get("failures").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 2);
+    for (entry, want) in entries.iter().zip([TF_FWD_O0, PT_BWD_O1]) {
+        assert_eq!(entry.get("cell").unwrap().as_str().unwrap(), want);
+        assert_eq!(entry.get("kind").unwrap().as_str().unwrap(), "panicked");
+        assert!(entry.get("error").unwrap().as_str().unwrap().contains("fault injected"));
+    }
+
+    // The comparison artifact carries the failure table and counts.
+    let comparison = comparison_artifact(&run);
+    assert!(comparison.text.contains("failed cells (2 of 8):"), "{}", comparison.text);
+    assert!(comparison.text.contains(TF_FWD_O0), "{}", comparison.text);
+    assert_eq!(comparison.json.get("n_failed").unwrap().as_f64().unwrap(), 2.0);
+}
+
+#[test]
+fn fixed_fault_plan_reruns_identically() {
+    // Chaos faults flip a per-label deterministic coin: two fresh
+    // injectors built from the same plan must fell the same cells and
+    // leave byte-identical survivor output. The plan mixes a guaranteed
+    // panic (so there is always a failure to compare) with chaos scoped
+    // to the four tf cells (so the four pt cells always survive).
+    let sweep = || {
+        let injector =
+            FaultInjector::new(FaultPlan::new(42).panic_on(TF_FWD_O0).chaos("-tf-", 0.5));
+        let options =
+            MatrixRunOptions { policy: SupervisePolicy::default(), fault: Some(&injector) };
+        matrix().run_with(&options)
+    };
+    let (a, b) = (sweep(), sweep());
+    let ids = |run: &hroofline::scenario::MatrixRun| -> Vec<(usize, String, String)> {
+        run.failures
+            .iter()
+            .map(|f| (f.index, f.id(), f.error.kind().to_string()))
+            .collect()
+    };
+    assert_eq!(ids(&a), ids(&b));
+    assert!(!a.failures.is_empty());
+    assert!(a.results.len() >= 4, "the pt cells are outside the chaos blast radius");
+    assert_eq!(comparison_csv(&a.results), comparison_csv(&b.results));
+    // The manifests agree on everything except wall time.
+    let (ma, mb) = (errors_manifest(&a), errors_manifest(&b));
+    let ea = ma.get("failures").unwrap().as_arr().unwrap();
+    let eb = mb.get("failures").unwrap().as_arr().unwrap();
+    assert_eq!(ea.len(), eb.len());
+    for (fa, fb) in ea.iter().zip(eb) {
+        for key in ["cell", "index", "kind", "attempts", "error"] {
+            assert_eq!(
+                fa.get(key).unwrap().to_string_pretty(),
+                fb.get(key).unwrap().to_string_pretty(),
+                "{key}"
+            );
+        }
+    }
+}
+
+#[test]
+fn armed_but_idle_supervision_is_byte_identical_to_the_default_run() {
+    // An injector whose plan matches nothing, plus an explicit policy,
+    // must not perturb a single byte of the sweep's artifacts.
+    let injector = FaultInjector::new(FaultPlan::new(7).panic_on("no-such-cell"));
+    let options = MatrixRunOptions {
+        policy: SupervisePolicy { retry: RetryPolicy::attempts(2), ..Default::default() },
+        fault: Some(&injector),
+    };
+    let supervised = matrix().run_with(&options);
+    let plain = matrix().run();
+    assert!(supervised.failures.is_empty());
+    assert_eq!(supervised.results.len(), plain.results.len());
+
+    let (a, b) = (comparison_artifact(&supervised), comparison_artifact(&plain));
+    assert_eq!(a.text, b.text);
+    assert_eq!(a.json.to_string_pretty(), b.json.to_string_pretty());
+    assert_eq!(a.svg, b.svg);
+    assert_eq!(a.csv, b.csv);
+    for (ra, rb) in supervised.results.iter().zip(&plain.results) {
+        let (aa, ab) = (ra.to_artifact(), rb.to_artifact());
+        assert_eq!(aa.text, ab.text, "{}", ra.id());
+        assert_eq!(aa.csv, ab.csv, "{}", ra.id());
+    }
+}
+
+#[test]
+fn transient_kernel_faults_ride_the_retry_budget_cleanly() {
+    // Kernel-grain FailFirst faults are transient; a retry budget of 2
+    // absorbs them and the sweep completes as if nothing happened.
+    let injector = FaultInjector::new(FaultPlan::new(7).fail_first("kernel:", 1));
+    let options = MatrixRunOptions {
+        policy: SupervisePolicy { retry: RetryPolicy::attempts(2), ..Default::default() },
+        fault: Some(&injector),
+    };
+    let healed = matrix().run_with(&options);
+    assert!(healed.failures.is_empty(), "retries should absorb every transient fault");
+    assert_eq!(comparison_csv(&healed.results), comparison_csv(&matrix().run().results));
+}
+
+#[test]
+fn fail_fast_still_accounts_for_every_cell() {
+    let injector = FaultInjector::new(FaultPlan::new(7).panic_on(TF_FWD_O0));
+    let options = MatrixRunOptions {
+        policy: SupervisePolicy { stop_after_failures: Some(1), ..Default::default() },
+        fault: Some(&injector),
+    };
+    let run = matrix().run_with(&options);
+    // Every cell lands somewhere; the injected cell panicked, and any
+    // cell the budget cut off is reported as skipped, not lost.
+    assert_eq!(run.n_cells(), 8);
+    assert_eq!(run.results.len() + run.failures.len(), 8);
+    assert!(run.failures.iter().any(|f| f.error.kind() == "panicked" && f.id() == TF_FWD_O0));
+    for f in &run.failures {
+        assert!(
+            matches!(f.error.kind(), "panicked" | "skipped"),
+            "{}: {}",
+            f.id(),
+            f.error.kind()
+        );
+    }
+    let manifest = errors_manifest(&run);
+    assert_eq!(
+        manifest.get("n_failed").unwrap().as_f64().unwrap(),
+        run.failures.len() as f64
+    );
+}
