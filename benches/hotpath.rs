@@ -121,6 +121,69 @@ fn main() {
         run.results.len() as u64
     });
 
+    // the same sweep served entirely from a pre-warmed cell store: the
+    // `--incremental` CI path (graph builds + lowering + key hashing +
+    // store decode, zero simulations). The gap to matrix_quick_sweep is
+    // what incrementality buys per warm cell.
+    let incr_dir =
+        std::env::temp_dir().join(format!("hroofline-bench-incr-{}", std::process::id()));
+    {
+        let _ = std::fs::remove_dir_all(&incr_dir);
+        let store = hroofline::scenario::store::CellStore::open(&incr_dir).expect("store dir");
+        let smoke_matrix = || {
+            hroofline::scenario::ScenarioMatrix::quick()
+                .with_workloads("deepcam-lite,transformer")
+                .expect("registered workloads")
+        };
+        // Pre-warm outside the timed loop.
+        let warm_opts = hroofline::scenario::MatrixRunOptions {
+            store: Some(&store),
+            incremental: true,
+            ..Default::default()
+        };
+        let cold = smoke_matrix().run_with(&warm_opts);
+        assert_eq!(cold.cache_stats.hits, 0, "pre-warm run starts cold");
+        b.case("matrix_quick_incremental_warm", move || {
+            let options = hroofline::scenario::MatrixRunOptions {
+                store: Some(&store),
+                incremental: true,
+                ..Default::default()
+            };
+            let run = smoke_matrix().run_with(&options);
+            assert_eq!(run.sim_stats.1, 0, "warm run must simulate nothing");
+            black_box(run.cache_stats.hits);
+            run.results.len() as u64
+        });
+    }
+
+    // cell-store round-trip cost: 1k save + load pairs of a small
+    // profile (JSON encode, tmp+rename publish, strict decode)
+    let store_dir =
+        std::env::temp_dir().join(format!("hroofline-bench-store-{}", std::process::id()));
+    {
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let store = hroofline::scenario::store::CellStore::open(&store_dir).expect("store dir");
+        let spec2 = GpuSpec::v100();
+        let small_trace = vec![hroofline::sim::kernel::KernelInvocation::once(
+            KernelDesc::streaming_elementwise("store-bench", 1 << 14, Precision::Fp32, 1),
+        )];
+        let profile =
+            Session::standard(&spec2).run(&ProfileRequest::new(&small_trace)).unwrap();
+        b.case("cell_store_roundtrip_1k", move || {
+            let mut acc = 0usize;
+            for i in 0..1000u32 {
+                let key = hroofline::scenario::store::CellKey::new(format!("{i:032x}"));
+                store.save(&key, "bench", &profile).unwrap();
+                match store.load(&key) {
+                    hroofline::scenario::store::Lookup::Hit(p) => acc += p.n_kernels(),
+                    other => panic!("expected a hit, got {other:?}"),
+                }
+            }
+            black_box(acc as u64);
+            1000
+        });
+    }
+
     // one DeepCAM training step per registered device (quick scale so
     // the bench stays CI-sized): BENCH_hotpath.json tracks the
     // simulator's per-device cost as the registry grows
@@ -199,6 +262,8 @@ fn main() {
     });
 
     b.run();
+    let _ = std::fs::remove_dir_all(&incr_dir);
+    let _ = std::fs::remove_dir_all(&store_dir);
 
     // Real PJRT hot path (separate group; skipped without artifacts).
     if let Ok(store) = hroofline::runtime::ArtifactStore::open_default() {

@@ -127,6 +127,20 @@ pub fn parse_device_list(
     Ok(selected)
 }
 
+/// Parse the `--shard i/N` syntax shared by `repro matrix` and its CI
+/// sharding topology: a 0-based shard index and the total shard count,
+/// `i < N`, `N ≥ 1`. Returns `(index, count)`.
+pub fn parse_shard(s: &str) -> Result<(usize, usize), CliError> {
+    let err = || CliError(format!("--shard expects 'i/N' with 0 <= i < N, got '{s}'"));
+    let (i, n) = s.split_once('/').ok_or_else(err)?;
+    let index: usize = i.trim().parse().map_err(|_| err())?;
+    let count: usize = n.trim().parse().map_err(|_| err())?;
+    if count == 0 || index >= count {
+        return Err(err());
+    }
+    Ok((index, count))
+}
+
 impl Cmd {
     pub fn new(name: &str, about: &str) -> Cmd {
         Cmd {
@@ -428,6 +442,18 @@ mod tests {
         assert!(err.0.contains("did you mean 't4'?"), "{}", err.0);
         // Empty selections are rejected.
         assert!(parse_device_list(" , ").is_err());
+    }
+
+    #[test]
+    fn shard_syntax() {
+        assert_eq!(parse_shard("0/3").unwrap(), (0, 3));
+        assert_eq!(parse_shard("2/3").unwrap(), (2, 3));
+        assert_eq!(parse_shard(" 1 / 2 ").unwrap(), (1, 2));
+        assert_eq!(parse_shard("0/1").unwrap(), (0, 1));
+        for bad in ["", "3", "3/3", "4/3", "-1/3", "0/0", "a/b", "1/2/3"] {
+            let err = parse_shard(bad).unwrap_err();
+            assert!(err.0.contains("i/N"), "{bad}: {}", err.0);
+        }
     }
 
     #[test]

@@ -384,6 +384,13 @@ pub const EXIT_MATRIX_CELLS_FAILED: i32 = 3;
 /// `matrix.errors.json` + the comparison report. Returns the process
 /// exit code: `0` for a clean sweep, [`EXIT_MATRIX_CELLS_FAILED`]
 /// when any cell failed.
+///
+/// Incremental mode (`--incremental --store DIR`) replays clean cells
+/// from the content-addressed cell store with zero simulations;
+/// `--shard i/N` partitions the cell enumeration across CI jobs and
+/// `--merge DIR,...` unions finished shard stores into one report.
+/// Cache stats land in `matrix.cache.json` (never in the comparison
+/// report, which stays byte-identical across cold/warm/merged runs).
 pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     let matrix = if p.has("quick") {
         crate::scenario::ScenarioMatrix::quick()
@@ -398,6 +405,32 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     let device_flag = p.get("device");
     if device_flag != "default" {
         matrix = matrix.with_devices(device_flag)?;
+    }
+    // --shard i/N: deterministically own every Nth cell of the global
+    // enumeration (cell index % N == i), so N CI jobs cover the matrix
+    // disjointly and a later --merge can union their stores.
+    let shard = match p.get("shard") {
+        "" => None,
+        s => {
+            let (index, count) = crate::cli::parse_shard(s)?;
+            Some(crate::scenario::Shard { index, count })
+        }
+    };
+    // --print-keys: emit "<32-hex cell key> <scenario id>" per owned
+    // cell (enumeration order) and exit without profiling or writing
+    // anything. rust/tests/incremental_matrix.rs pins this output to
+    // prove keys are stable across processes.
+    if p.has("print-keys") {
+        for (i, (key, id)) in matrix.cell_keys().into_iter().enumerate() {
+            let owned = match shard {
+                Some(s) => s.owns(i),
+                None => true,
+            };
+            if owned {
+                println!("{} {id}", key.as_hex());
+            }
+        }
+        return Ok(0);
     }
     let out_dir = p.get("out").to_string();
     let scenario_dir = Path::new(&out_dir).join("scenarios");
@@ -429,7 +462,38 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     } else {
         Some(crate::exec::FaultInjector::new(crate::exec::FaultPlan::parse(fault_spec)?))
     };
-    let options = crate::scenario::MatrixRunOptions { policy, fault: injector.as_ref() };
+    // Cell-store wiring. `--merge` opens a read-only union over
+    // finished shard stores (every cell must hit; a miss is a cell
+    // failure); `--incremental` opens a read-write store, replays
+    // clean cells from it and re-runs + persists dirty ones. Fault-
+    // armed runs bypass the store entirely (run_with enforces this).
+    let merge_dirs = p.get("merge");
+    let store: Option<crate::scenario::store::CellStore> = if !merge_dirs.is_empty() {
+        if shard.is_some() {
+            anyhow::bail!("--merge unions finished shard stores; it cannot be combined with --shard");
+        }
+        if !fault_spec.is_empty() {
+            anyhow::bail!("--merge replays cached cells; it cannot be combined with --inject-fault");
+        }
+        if p.has("incremental") {
+            anyhow::bail!("--merge opens a read-only store union; drop --incremental");
+        }
+        let dirs: Vec<std::path::PathBuf> =
+            merge_dirs.split(',').map(|d| std::path::PathBuf::from(d.trim())).collect();
+        Some(crate::scenario::store::CellStore::open_union(dirs))
+    } else if p.has("incremental") {
+        Some(crate::scenario::store::CellStore::open(p.get("store"))?)
+    } else {
+        None
+    };
+    let options = crate::scenario::MatrixRunOptions {
+        policy,
+        fault: injector.as_ref(),
+        store: store.as_ref(),
+        incremental: p.has("incremental"),
+        merge_only: !merge_dirs.is_empty(),
+        shard,
+    };
 
     let run = matrix.run_with(&options);
 
@@ -440,6 +504,11 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     }
     let comparison = crate::scenario::comparison_artifact(&run);
     comparison.write_all(Path::new(&out_dir))?;
+    // Cache and simulation stats live in their own artifact, not the
+    // comparison report — the report must stay byte-identical across
+    // cold, warm and merged runs while these numbers vary.
+    let cache_path = Path::new(&out_dir).join("matrix.cache.json");
+    std::fs::write(&cache_path, crate::scenario::cache_manifest(&run).to_string_pretty())?;
     // Multi-device sweeps additionally get one overlay per device
     // (each against its own full ceiling set).
     let run_devices = run.device_entries();
@@ -459,9 +528,20 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     }
 
     println!("== {} ==\n{}", comparison.title, comparison.text);
+    let cache = run.cache_stats;
+    let (sim_hits, sims) = run.sim_stats;
+    println!(
+        "store: {} hits, {} misses, {} evictions | simulations: {sims} \
+         (shared-cache hits {sim_hits}) -> {}",
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+        cache_path.display()
+    );
     println!(
         "wrote {written} scenario artifacts (each with timeline lanes) under {}/ and the \
-         comparison report (matrix.{{txt,json,svg,csv,timeline.txt}}) under {out_dir}/",
+         comparison report (matrix.{{txt,json,svg,csv,timeline.txt}} + matrix.cache.json) \
+         under {out_dir}/",
         scenario_dir.display()
     );
     if run.failures.is_empty() {
@@ -702,8 +782,13 @@ mod tests {
             .flag("out", out, "h")
             .flag("max-failures", "unlimited", "h")
             .flag("inject-fault", "", "h")
+            .flag("store", ".hroofline-cache", "h")
+            .flag("shard", "", "h")
+            .flag("merge", "", "h")
             .switch("fail-fast", "h")
             .switch("quick", "h")
+            .switch("incremental", "h")
+            .switch("print-keys", "h")
     }
 
     #[test]
@@ -809,6 +894,137 @@ mod tests {
         assert!(manifest.contains("transformer-tf-forward-O0"), "{manifest}");
         assert!(manifest.contains("panicked"), "{manifest}");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn matrix_incremental_warm_run_is_byte_identical_with_zero_sims() {
+        let base =
+            std::env::temp_dir().join(format!("hroofline-matrixinc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let store = base.join("store");
+        let run = |out: &std::path::Path| {
+            let cmd = matrix_cmd(out.to_str().unwrap());
+            cmd_matrix(&parsed(
+                cmd,
+                &[
+                    "--quick",
+                    "--workloads",
+                    "transformer",
+                    "--incremental",
+                    "--store",
+                    store.to_str().unwrap(),
+                ],
+            ))
+            .unwrap()
+        };
+        let cold_out = base.join("cold");
+        let warm_out = base.join("warm");
+        assert_eq!(run(&cold_out), 0);
+        assert_eq!(run(&warm_out), 0);
+        // The warm run served every cell from the store: no misses,
+        // zero simulations — the numbers the CI warm-store smoke greps.
+        let cache = std::fs::read_to_string(warm_out.join("matrix.cache.json")).unwrap();
+        assert!(cache.contains("hroofline-matrix-cache-v1"), "{cache}");
+        assert!(cache.contains("\"misses\": 0"), "{cache}");
+        assert!(cache.contains("\"simulations\": 0"), "{cache}");
+        // And the comparison artifacts are byte-identical to the cold run.
+        for name in ["matrix.txt", "matrix.json", "matrix.svg", "matrix.csv"] {
+            assert_eq!(
+                std::fs::read(cold_out.join(name)).unwrap(),
+                std::fs::read(warm_out.join(name)).unwrap(),
+                "cold and warm {name} must be byte-identical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn matrix_print_keys_runs_nothing() {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-matrixkeys-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cmd = matrix_cmd(dir.to_str().unwrap());
+        let code = cmd_matrix(&parsed(cmd, &["--quick", "--print-keys"])).unwrap();
+        assert_eq!(code, 0);
+        assert!(!dir.exists(), "--print-keys must not write artifacts");
+    }
+
+    #[test]
+    fn matrix_merge_unions_shard_stores_into_one_report() {
+        let base =
+            std::env::temp_dir().join(format!("hroofline-matrixmerge-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        // Two incremental shard runs fill two disjoint stores...
+        for shard in 0..2usize {
+            let store = base.join(format!("store-{shard}"));
+            let out = base.join(format!("shard-{shard}"));
+            let cmd = matrix_cmd(out.to_str().unwrap());
+            let code = cmd_matrix(&parsed(
+                cmd,
+                &[
+                    "--quick",
+                    "--workloads",
+                    "transformer",
+                    "--incremental",
+                    "--store",
+                    store.to_str().unwrap(),
+                    "--shard",
+                    &format!("{shard}/2"),
+                ],
+            ))
+            .unwrap();
+            assert_eq!(code, 0);
+        }
+        // ...and --merge replays their union with zero simulations.
+        let merged = base.join("merged");
+        let merge_arg =
+            format!("{},{}", base.join("store-0").display(), base.join("store-1").display());
+        let cmd = matrix_cmd(merged.to_str().unwrap());
+        let code = cmd_matrix(&parsed(
+            cmd,
+            &["--quick", "--workloads", "transformer", "--merge", &merge_arg],
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+        let cache = std::fs::read_to_string(merged.join("matrix.cache.json")).unwrap();
+        assert!(cache.contains("\"simulations\": 0"), "{cache}");
+        // Reference: a plain unsharded run of the same selection.
+        let direct = base.join("direct");
+        let cmd = matrix_cmd(direct.to_str().unwrap());
+        assert_eq!(
+            cmd_matrix(&parsed(cmd, &["--quick", "--workloads", "transformer"])).unwrap(),
+            0
+        );
+        for name in ["matrix.txt", "matrix.json", "matrix.svg", "matrix.csv"] {
+            assert_eq!(
+                std::fs::read(merged.join(name)).unwrap(),
+                std::fs::read(direct.join(name)).unwrap(),
+                "merged and direct {name} must be byte-identical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn matrix_rejects_bad_shard_and_merge_combinations() {
+        let cmd = matrix_cmd("/tmp/x");
+        let err = cmd_matrix(&parsed(cmd, &["--quick", "--shard", "3/3"])).unwrap_err();
+        assert!(format!("{err:#}").contains("i/N"), "{err:#}");
+        let cmd = matrix_cmd("/tmp/x");
+        let err = cmd_matrix(&parsed(cmd, &["--quick", "--merge", "/tmp/a", "--shard", "0/2"]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--shard"), "{err:#}");
+        let cmd = matrix_cmd("/tmp/x");
+        let err = cmd_matrix(&parsed(
+            cmd,
+            &["--quick", "--merge", "/tmp/a", "--inject-fault", "panic:x"],
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--inject-fault"), "{err:#}");
+        let cmd = matrix_cmd("/tmp/x");
+        let err = cmd_matrix(&parsed(cmd, &["--quick", "--merge", "/tmp/a", "--incremental"]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("read-only"), "{err:#}");
     }
 
     #[test]

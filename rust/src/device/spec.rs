@@ -1,6 +1,7 @@
 //! GPU hardware specification and derived theoretical peaks.
 
 use crate::device::pipeline::{Pipeline, PipelineKind};
+use crate::util::digest::StableHasher;
 
 /// Data precision of a floating-point operation stream. `Fp16` means
 /// FP16 on the general-purpose (CUDA) core; Tensor Core traffic is
@@ -66,6 +67,17 @@ pub struct CacheLevel {
     pub peak_bytes_per_sec: f64,
 }
 
+impl CacheLevel {
+    /// Feed every field, in declaration order, into a process-stable
+    /// digest (cell-store keying; see [`crate::util::digest`]).
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        h.write_u64(self.capacity_bytes);
+        h.write_u64(self.line_bytes);
+        h.write_u32(self.ways);
+        h.write_f64(self.peak_bytes_per_sec);
+    }
+}
+
 /// Full GPU specification. All modelled quantities derive from these
 /// fields — there are no hidden constants in the simulator.
 #[derive(Clone, Debug)]
@@ -125,6 +137,14 @@ impl AchievableFrac {
             Precision::Fp32 => self.fp32,
             Precision::Fp16 => self.fp16,
         }
+    }
+
+    /// Feed every field, bitwise, into a process-stable digest.
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        h.write_f64(self.fp64);
+        h.write_f64(self.fp32);
+        h.write_f64(self.fp16);
+        h.write_f64(self.tensor);
     }
 }
 
@@ -341,6 +361,29 @@ impl GpuSpec {
     pub fn cycles_per_second(&self) -> f64 {
         self.clock_hz
     }
+
+    /// Feed every field, in declaration order, into a process-stable
+    /// digest. Any spec change — even a bandwidth recalibration — moves
+    /// the cell key, which is what makes the incremental matrix store
+    /// safe to trust across builds.
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        h.write_str(&self.name);
+        h.write_u32(self.sms);
+        h.write_f64(self.clock_hz);
+        h.write_f64(self.tc_clock_hz);
+        h.write_u32(self.fp32_lanes_per_sm);
+        h.write_u32(self.fp64_lanes_per_sm);
+        h.write_u32(self.tensor_cores_per_sm);
+        h.write_u64(self.flops_per_tensor_inst);
+        h.write_u64(self.flops_per_tc_per_cycle);
+        self.l1.digest_into(h);
+        self.l2.digest_into(h);
+        h.write_f64(self.hbm_bytes_per_sec);
+        h.write_u64(self.hbm_capacity_bytes);
+        h.write_f64(self.launch_latency_s);
+        self.achievable.digest_into(h);
+        h.write_u32(self.warp_size);
+    }
 }
 
 #[cfg(test)]
@@ -416,6 +459,30 @@ mod tests {
         assert!((t.theoretical_flops(Precision::Fp32) / 1e12 - 8.14).abs() < 0.05);
         assert!((t.theoretical_flops(Precision::Fp16) / 1e12 - 16.28).abs() < 0.1);
         assert!((t.theoretical_flops(Precision::Fp64) / 1e9 - 254.4).abs() < 2.0);
+    }
+
+    #[test]
+    fn spec_digest_tracks_every_field() {
+        let digest = |s: &GpuSpec| {
+            let mut h = StableHasher::new();
+            s.digest_into(&mut h);
+            h.finish_hex()
+        };
+        let base = GpuSpec::v100();
+        assert_eq!(digest(&base), digest(&base.clone()), "digest is deterministic");
+        assert_ne!(digest(&GpuSpec::v100()), digest(&GpuSpec::a100()));
+
+        let mut bw = GpuSpec::v100();
+        bw.hbm_bytes_per_sec *= 2.0;
+        assert_ne!(digest(&base), digest(&bw), "bandwidth recalibration moves the digest");
+
+        let mut frac = GpuSpec::v100();
+        frac.achievable.tensor = 0.99;
+        assert_ne!(digest(&base), digest(&frac), "achievable-frac change moves the digest");
+
+        let mut l2 = GpuSpec::v100();
+        l2.l2.ways = 8;
+        assert_ne!(digest(&base), digest(&l2), "cache geometry change moves the digest");
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! [`supervise`] sibling instead, which isolates panics, enforces soft
 //! deadlines, retries transient failures, and reports a structured
 //! [`ExecError`] per item. [`fault`] provides the deterministic fault
-//! injection that makes every one of those paths testable.
+//! injection that makes every one of those paths testable. One
+//! interaction rule to know: a fault-armed matrix run bypasses the
+//! scenario cell store entirely — profiles built under injection are
+//! never persisted, so drills can't poison incremental caches.
 
 pub mod fault;
 pub mod supervise;

@@ -29,6 +29,10 @@
 //!   crossed with the [`device::registry`] × framework × phase × AMP
 //!   policy, profiled through per-device shared simulation caches and
 //!   compared on one overlay Roofline (plus a cross-device pivot).
+//!   Cells are content-addressed ([`util::digest`]) into an on-disk
+//!   store ([`scenario::store`]): incremental re-runs replay clean
+//!   cells byte-identically with zero simulations, and shard runs
+//!   merge back into one artifact set.
 //! * [`coordinator`] — job orchestration: sweeps, output layout, the
 //!   end-to-end train driver.
 //!

@@ -9,7 +9,10 @@
 //!               print the kernel table, write the hierarchical roofline
 //!   matrix      scenario-matrix sweep: workload registry × device
 //!               registry × framework × phase × AMP policy,
-//!               per-scenario artifacts + comparison (+ cross-device)
+//!               per-scenario artifacts + comparison (+ cross-device);
+//!               --incremental replays clean cells from a content-
+//!               addressed store, --shard/--merge split the sweep
+//!               across CI jobs and union the results
 //!   report      regenerate paper artifacts (figures/tables) into out/
 //!   train       end-to-end: run the AOT-compiled DeepCAM-lite training
 //!               loop through PJRT, logging the loss curve
@@ -83,8 +86,24 @@ fn main() {
                 "",
                 "deterministic fault plan for drills, e.g. 'panic:<cell-id>;seed=7'",
             )
+            .flag(
+                "store",
+                ".hroofline-cache",
+                "cell-store directory for --incremental (content-addressed profiles)",
+            )
+            .flag("shard", "", "own every Nth cell of the enumeration, as 'i/N'")
+            .flag(
+                "merge",
+                "",
+                "comma-separated shard store dirs: replay their union into one report",
+            )
             .switch("fail-fast", "stop the sweep at the first failed cell")
-            .switch("quick", "reduced matrix at smoke scale (the CI gate)"),
+            .switch("quick", "reduced matrix at smoke scale (the CI gate)")
+            .switch(
+                "incremental",
+                "serve clean cells from --store, re-run and persist dirty ones",
+            )
+            .switch("print-keys", "print '<cell key> <scenario id>' per cell and exit"),
         )
         .command(
             Cmd::new("report", "Regenerate paper tables/figures into out/report")

@@ -9,12 +9,19 @@
 //!
 //! Format: one row per (kernel, metric):
 //! `"Kernel Name","Metric Name","Metric Value","Invocations"`
+//!
+//! A second, JSON-valued form ([`profile_to_json`]/[`profile_from_json`])
+//! serializes *every* profile field — timing, passes, overhead — with an
+//! exact (`Profile::eq`) round-trip guarantee; it is the wire format of
+//! the scenario matrix cell store ([`crate::scenario::store`]), where a
+//! decoded profile must regenerate byte-identical artifacts.
 
 use std::collections::BTreeMap;
 
 use crate::device::GpuSpec;
 use crate::util::error::{bail, Context, Result};
-use crate::profiler::profile::Profile;
+use crate::util::json::Json;
+use crate::profiler::profile::{KernelProfile, KernelTiming, Profile};
 use crate::sim::counters::CounterSet;
 
 /// Comment prefix carrying the device the profile was collected on —
@@ -214,6 +221,92 @@ pub fn from_csv_lenient(text: &str, spec: &GpuSpec) -> Result<(Profile, RowDiagn
         }
     }
     Ok((profile_from(per_kernel, device, spec), diagnostics))
+}
+
+/// Serialize a profile to a JSON document carrying every field — unlike
+/// [`to_csv`] (counters only), this is a lossless encoding: device,
+/// passes, overhead, per-kernel invocations, `flops_per_tensor_inst`,
+/// all counters (dense and fallback lane), and timing when collected.
+pub fn profile_to_json(profile: &Profile) -> Json {
+    let kernels = profile.kernels().map(|k| {
+        let counters = Json::Obj(
+            k.counters
+                .metrics()
+                .map(|(metric, value)| (metric.to_string(), Json::num(value)))
+                .collect(),
+        );
+        let timing = match &k.timing {
+            None => Json::Null,
+            Some(t) => Json::obj(vec![
+                ("compute_s", Json::num(t.compute_s)),
+                ("memory_s", Json::num(t.memory_s)),
+                ("ramp_s", Json::num(t.ramp_s)),
+                ("total_s", Json::num(t.total_s)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(k.name.clone())),
+            ("invocations", Json::num(k.invocations as f64)),
+            ("flops_per_tensor_inst", Json::num(k.flops_per_tensor_inst)),
+            ("counters", counters),
+            ("timing", timing),
+        ])
+    });
+    Json::obj(vec![
+        ("device", Json::str(profile.device.clone())),
+        ("passes", Json::num(profile.passes as f64)),
+        ("profiling_overhead_s", Json::num(profile.profiling_overhead_s)),
+        ("kernels", Json::arr(kernels)),
+    ])
+}
+
+/// Decode a [`profile_to_json`] document back into a [`Profile`] that
+/// compares *exactly equal* (`Profile`'s bitwise `PartialEq`) to the
+/// original: kernels are restored verbatim via [`Profile::insert`], not
+/// re-recorded, so nothing gets re-stamped from a spec or dropped.
+/// Every f64 survives the JSON layer exactly — the emitter prints
+/// shortest-round-trip decimal and `str::parse::<f64>` restores the
+/// original bits.
+pub fn profile_from_json(doc: &Json) -> Result<Profile> {
+    let mut profile = Profile::new();
+    profile.device = doc.get("device")?.as_str()?.to_string();
+    profile.passes = json_u64(doc.get("passes")?).context("profile passes")?;
+    profile.profiling_overhead_s = doc.get("profiling_overhead_s")?.as_f64()?;
+    for k in doc.get("kernels")?.as_arr()? {
+        let name = k.get("name")?.as_str()?.to_string();
+        let mut counters = CounterSet::new();
+        for (metric, value) in k.get("counters")?.as_obj()? {
+            counters.set(metric, value.as_f64()?);
+        }
+        let timing = match k.get("timing")? {
+            Json::Null => None,
+            t => Some(KernelTiming {
+                compute_s: t.get("compute_s")?.as_f64()?,
+                memory_s: t.get("memory_s")?.as_f64()?,
+                ramp_s: t.get("ramp_s")?.as_f64()?,
+                total_s: t.get("total_s")?.as_f64()?,
+            }),
+        };
+        profile.insert(KernelProfile {
+            invocations: json_u64(k.get("invocations")?)
+                .with_context(|| format!("kernel '{name}' invocations"))?,
+            counters,
+            flops_per_tensor_inst: k.get("flops_per_tensor_inst")?.as_f64()?,
+            timing,
+            name,
+        });
+    }
+    Ok(profile)
+}
+
+/// A JSON number that must be a non-negative integer (u64 counts).
+fn json_u64(v: &Json) -> Result<u64> {
+    let f = v.as_f64()?;
+    // NaN/inf land in the fract() arm (their fract is NaN).
+    if f < 0.0 || f.fract() != 0.0 {
+        bail!("expected a non-negative integer, got {f}");
+    }
+    Ok(f as u64)
 }
 
 fn escape(s: &str) -> String {
@@ -468,6 +561,35 @@ mod tests {
         // Header errors stay fatal even in lenient mode.
         assert!(from_csv_lenient("", &spec).is_err());
         assert!(from_csv_lenient("bogus header\n", &spec).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let (_spec, p) = sample_profile();
+        assert!(p.kernels().any(|k| k.timing.is_some()), "sample must carry timing");
+        assert!(p.passes > 0 && p.profiling_overhead_s > 0.0);
+        let text = profile_to_json(&p).to_string_pretty();
+        let back = profile_from_json(&Json::parse(&text).unwrap()).unwrap();
+        // Profile's PartialEq is exact/bitwise — this is the cell-store
+        // byte-identity guarantee in one assert.
+        assert_eq!(back, p);
+        assert_eq!(back.profiling_overhead_s.to_bits(), p.profiling_overhead_s.to_bits());
+    }
+
+    #[test]
+    fn json_decode_rejects_malformed_documents() {
+        assert!(profile_from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(profile_from_json(&Json::parse("[1,2]").unwrap()).is_err());
+        let fractional = Json::parse(
+            r#"{"device":"d","passes":1.5,"profiling_overhead_s":0,"kernels":[]}"#,
+        )
+        .unwrap();
+        assert!(profile_from_json(&fractional).is_err(), "fractional passes rejected");
+        let bad_kernel = Json::parse(
+            r#"{"device":"d","passes":1,"profiling_overhead_s":0,"kernels":[{"name":"k"}]}"#,
+        )
+        .unwrap();
+        assert!(profile_from_json(&bad_kernel).is_err(), "kernel missing fields rejected");
     }
 
     #[test]

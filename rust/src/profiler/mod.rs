@@ -17,7 +17,10 @@
 //!   and derived quantities (time via Eq. 5, FLOPs via add+2·fma+mul,
 //!   TC FLOPs via Eq. 6, AI per level) are exposed per kernel;
 //! * **step timelines** ([`timeline`]): per-phase profiles folded into
-//!   the time-based Roofline's step-time breakdown (arXiv 2009.04598).
+//!   the time-based Roofline's step-time breakdown (arXiv 2009.04598);
+//! * **serialization** ([`export`]): CSV in the `nv-nsight-cu-cli --csv`
+//!   idiom for external tooling, plus a lossless JSON form used by the
+//!   scenario matrix's incremental cell store.
 
 pub mod export;
 pub mod metrics;
@@ -25,7 +28,7 @@ pub mod profile;
 pub mod session;
 pub mod timeline;
 
-pub use export::{RowDiagnostic, RowDiagnostics};
+pub use export::{profile_from_json, profile_to_json, RowDiagnostic, RowDiagnostics};
 pub use metrics::{Metric, MetricRegistry};
 pub use profile::{KernelProfile, KernelTiming, Profile};
 pub use session::{ProfileRequest, Session, SessionConfig, SessionError};

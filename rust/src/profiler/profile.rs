@@ -238,6 +238,15 @@ impl Profile {
             .accumulate(b, invocations, clock_hz);
     }
 
+    /// Insert a fully-built kernel aggregate verbatim, keyed by its
+    /// name. This is the deserialization entry point (cell-store and
+    /// JSON round-trips): unlike [`Profile::record`] it does not stamp
+    /// `flops_per_tensor_inst` from a spec or drop `timing`, so a
+    /// decoded profile compares exactly equal to the original.
+    pub fn insert(&mut self, kernel: KernelProfile) {
+        self.kernels.insert(kernel.name.clone(), kernel);
+    }
+
     pub fn kernel(&self, name: &str) -> Option<&KernelProfile> {
         self.kernels.get(name)
     }

@@ -32,12 +32,27 @@
 //!   scenario as a labelled aggregate point
 //!   ([`RooflineChart::overlay`]); multi-device runs additionally get
 //!   the cross-device pivot table and merged per-device ceilings, and
-//!   [`device_comparison_artifact`] renders one overlay per device.
+//!   [`device_comparison_artifact`] renders one overlay per device;
+//! * the matrix is **incremental** ([`store`]): every cell has a
+//!   content-addressed [`Scenario::cell_key`] over (lowered trace ×
+//!   [`GpuSpec`] × AMP policy × workload spec × store format), and
+//!   [`MatrixRunOptions::incremental`] serves clean cells from the
+//!   on-disk [`store::CellStore`] with zero simulations while dirty
+//!   cells re-run and are written back; [`MatrixRunOptions::shard`]
+//!   deterministically partitions the cell list across N processes and
+//!   merge runs union shard stores back into the single artifact set.
+//!   Store traffic is instrumented by [`CacheStats`] and surfaced via
+//!   [`cache_manifest`] (`matrix.cache.json`) — deliberately *outside*
+//!   the comparison artifact, which stays byte-identical across cold,
+//!   warm, sharded and merged runs.
 //!
 //! `repro matrix` is the CLI front-end; its `--quick` mode doubles as
 //! the CI smoke for the whole stack.
 
 use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub mod store;
 
 use crate::cli::CliError;
 use crate::device::registry::{self as devices, DeviceEntry};
@@ -50,7 +65,9 @@ use crate::report::Artifact;
 use crate::roofline::chart::RooflineChart;
 use crate::roofline::model::{Ceilings, KernelPoint, RooflineModel};
 use crate::roofline::time as rtime;
+use crate::sim::kernel::KernelInvocation;
 use crate::sim::SharedSimCache;
+use crate::util::digest::StableHasher;
 use crate::util::table::Align;
 use crate::util::{fmt, Json, Table};
 
@@ -88,6 +105,34 @@ impl Scenario {
         } else {
             format!("{}@{}", self.base_id(), self.device.short)
         }
+    }
+
+    /// The content-address of this cell: a process-stable digest over
+    /// *everything its profile is a function of* — the store format
+    /// version ([`store::CELL_SCHEMA`]), the workload spec (name +
+    /// scale; the graph is a pure function of those, and any structural
+    /// change shows up in the trace anyway), framework, phase, AMP
+    /// policy, every field of the device spec, and the full lowered
+    /// kernel trace (every descriptor field, invocation count and
+    /// stream). Equal keys therefore mean bit-identical profiles, which
+    /// is what lets [`MatrixRunOptions::incremental`] serve a hit with
+    /// zero simulations and byte-identical artifacts.
+    pub fn cell_key(&self, trace: &[KernelInvocation], spec: &GpuSpec) -> store::CellKey {
+        let mut h = StableHasher::new();
+        h.write_str(store::CELL_SCHEMA);
+        h.write_str(self.workload.name);
+        h.write_str(self.scale.name());
+        h.write_str(self.framework.short());
+        h.write_str(self.phase.name());
+        h.write_str(self.policy.name());
+        spec.digest_into(&mut h);
+        h.write_u64(trace.len() as u64);
+        for inv in trace {
+            inv.kernel.digest_into(&mut h);
+            h.write_u64(inv.invocations);
+            h.write_u32(inv.stream);
+        }
+        store::CellKey::new(h.finish_hex())
     }
 
     /// Human title for charts and report headers.
@@ -263,11 +308,153 @@ impl ScenarioMatrix {
     /// per-device [`SharedSimCache`] simulates *outside* its lock — an
     /// unwinding cell never poisons state its siblings need.
     pub fn run_with(&self, options: &MatrixRunOptions<'_>) -> MatrixRun {
-        let scenarios = self.enumerate();
+        let prep = self.prepare();
 
-        let widx: HashMap<&str, usize> =
+        let caches: Vec<SharedSimCache> =
+            self.devices.iter().map(|_| SharedSimCache::new()).collect();
+        // Shard selection partitions on the *global* enumeration index,
+        // so the union over shards 0..N of `--shard i/N` runs is exactly
+        // the unsharded cell list (test-asserted). Fault labels keep the
+        // global index too, so a fault plan targets the same cell no
+        // matter how the matrix is sharded.
+        let cells: Vec<(usize, Scenario)> = prep
+            .scenarios
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(i, _)| match options.shard {
+                Some(s) => s.owns(i),
+                None => true,
+            })
+            .collect();
+        let prof_workers = crate::exec::default_workers(cells.len());
+        // Split the worker budget between the two fan-out levels: the
+        // outer scenario map already uses up to `prof_workers` cores,
+        // so each session gets the remaining share (1 when the sweep
+        // alone saturates the machine) instead of spawning its own
+        // machine-sized pools per scenario. Thread count cannot change
+        // the profile (bit-identity is test-asserted by the session).
+        let inner_threads =
+            (crate::exec::default_workers(usize::MAX) / prof_workers.max(1)).max(1);
+        // The cell-level retry budget also applies inside each session,
+        // so a transient per-kernel fault is retried at the kernel
+        // grain instead of re-profiling the whole cell.
+        let session_cfg = SessionConfig {
+            threads: Some(inner_threads),
+            retry: options.policy.retry,
+            ..Default::default()
+        };
+        let sessions: Vec<Session> =
+            prep.specs.iter().map(|spec| Session::new(spec, session_cfg.clone())).collect();
+
+        let hits = AtomicU64::new(0);
+        let misses = AtomicU64::new(0);
+        let evictions = AtomicU64::new(0);
+        let outcomes = crate::exec::parallel_try_map(
+            cells.clone(),
+            prof_workers,
+            &options.policy,
+            |&(index, sc)| {
+                if let Some(inj) = options.fault {
+                    inj.apply(&format!("cell#{index}:{}", sc.id()))?;
+                }
+                let di = prep.didx[sc.device.name];
+                let trace = prep.trace_for(&sc);
+                // Fault-armed runs bypass the store entirely (no reads,
+                // no writes): a profile built under injection must never
+                // be served to — or persisted for — a clean run.
+                let store_key = if options.fault.is_none()
+                    && (options.incremental || options.merge_only)
+                {
+                    options.store.map(|st| (st, sc.cell_key(trace, &prep.specs[di])))
+                } else {
+                    None
+                };
+                if let Some((st, key)) = &store_key {
+                    match st.load(key) {
+                        store::Lookup::Hit(profile) => {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                            return Ok(profile);
+                        }
+                        // A corrupt entry is a miss that also counts as
+                        // an eviction — the re-run overwrites it below.
+                        store::Lookup::Corrupt => {
+                            evictions.fetch_add(1, Ordering::Relaxed);
+                            misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                        store::Lookup::Miss => {
+                            misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    if options.merge_only {
+                        // A merge run has no simulation budget: every
+                        // cell must come out of the shard-store union.
+                        return Err(crate::exec::TaskError::fatal(format!(
+                            "cell {} missing from the merged store union",
+                            sc.id()
+                        )));
+                    }
+                }
+                let mut req = ProfileRequest::new(trace).shared_cache(&caches[di]);
+                if let Some(inj) = options.fault {
+                    req = req.fault_injector(inj);
+                }
+                // Session-level errors already exhausted the kernel-
+                // grain retry budget — at the cell grain they are final.
+                let profile = sessions[di]
+                    .run(&req)
+                    .map_err(|e| crate::exec::TaskError::fatal(e.to_string()))?;
+                if let Some((st, key)) = &store_key {
+                    // Best-effort write-back: a full disk degrades the
+                    // store to pass-through, never the run to a failure.
+                    if let Err(e) = st.save(key, &sc.id(), &profile) {
+                        eprintln!("warning: cell store write failed for {}: {e:#}", sc.id());
+                    }
+                }
+                Ok(profile)
+            },
+        );
+
+        let mut results = Vec::with_capacity(cells.len());
+        let mut failures = Vec::new();
+        for ((index, (_, scenario)), outcome) in cells.into_iter().enumerate().zip(outcomes) {
+            match outcome {
+                Ok(profile) => results.push(ScenarioResult { scenario, profile }),
+                Err(error) => failures.push(CellFailure { index, scenario, error }),
+            }
+        }
+        let sim_stats = caches.iter().fold((0, 0), |(h, s), c| {
+            let (hits, sims) = c.stats();
+            (h + hits, s + sims)
+        });
+        let cache_stats = CacheStats {
+            hits: hits.load(Ordering::Relaxed),
+            misses: misses.load(Ordering::Relaxed),
+            evictions: evictions.load(Ordering::Relaxed),
+        };
+        MatrixRun { results, failures, sim_stats, cache_stats }
+    }
+
+    /// The content-address of every enumerated cell, in enumeration
+    /// order, paired with its scenario id. Builds graphs and lowers
+    /// traces (keys cover the lowered kernels) but simulates nothing.
+    /// `repro matrix --print-keys` exposes this, which is how the
+    /// integration tests pin key stability **across processes**.
+    pub fn cell_keys(&self) -> Vec<(store::CellKey, String)> {
+        let prep = self.prepare();
+        prep.scenarios
+            .iter()
+            .map(|sc| (sc.cell_key(prep.trace_for(sc), prep.spec_for(sc)), sc.id()))
+            .collect()
+    }
+
+    /// Steps 1 and 2 of the sweep (graph builds + lowering), shared by
+    /// [`ScenarioMatrix::run_with`] and [`ScenarioMatrix::cell_keys`].
+    fn prepare(&self) -> Prepared {
+        let scenarios = self.enumerate();
+        let widx: HashMap<&'static str, usize> =
             self.workloads.iter().enumerate().map(|(i, w)| (w.name, i)).collect();
-        let didx: HashMap<&str, usize> =
+        let didx: HashMap<&'static str, usize> =
             self.devices.iter().enumerate().map(|(i, d)| (d.name, i)).collect();
         let build_workers = crate::exec::default_workers(self.workloads.len());
         let graphs: Vec<Graph> =
@@ -290,66 +477,68 @@ impl ScenarioMatrix {
             crate::exec::parallel_map(combos, lower_workers, |(wi, di, fw, policy)| {
                 lower(&graphs[wi], fw, policy, &specs[di])
             });
-
-        let caches: Vec<SharedSimCache> =
-            self.devices.iter().map(|_| SharedSimCache::new()).collect();
-        let prof_workers = crate::exec::default_workers(scenarios.len());
-        // Split the worker budget between the two fan-out levels: the
-        // outer scenario map already uses up to `prof_workers` cores,
-        // so each session gets the remaining share (1 when the sweep
-        // alone saturates the machine) instead of spawning its own
-        // machine-sized pools per scenario. Thread count cannot change
-        // the profile (bit-identity is test-asserted by the session).
-        let inner_threads =
-            (crate::exec::default_workers(usize::MAX) / prof_workers.max(1)).max(1);
-        // The cell-level retry budget also applies inside each session,
-        // so a transient per-kernel fault is retried at the kernel
-        // grain instead of re-profiling the whole cell.
-        let session_cfg = SessionConfig {
-            threads: Some(inner_threads),
-            retry: options.policy.retry,
-            ..Default::default()
-        };
-        let sessions: Vec<Session> =
-            specs.iter().map(|spec| Session::new(spec, session_cfg.clone())).collect();
-        let cells: Vec<(usize, Scenario)> = scenarios.iter().copied().enumerate().collect();
-        let outcomes = crate::exec::parallel_try_map(
-            cells,
-            prof_workers,
-            &options.policy,
-            |&(index, sc)| {
-                if let Some(inj) = options.fault {
-                    inj.apply(&format!("cell#{index}:{}", sc.id()))?;
-                }
-                let di = didx[sc.device.name];
-                let key = (widx[sc.workload.name], di, sc.framework, sc.policy);
-                let trace = traces[combo_of[&key]].phase(sc.phase);
-                let mut req = ProfileRequest::new(trace).shared_cache(&caches[di]);
-                if let Some(inj) = options.fault {
-                    req = req.fault_injector(inj);
-                }
-                // Session-level errors already exhausted the kernel-
-                // grain retry budget — at the cell grain they are final.
-                sessions[di]
-                    .run(&req)
-                    .map_err(|e| crate::exec::TaskError::fatal(e.to_string()))
-            },
-        );
-
-        let mut results = Vec::with_capacity(scenarios.len());
-        let mut failures = Vec::new();
-        for ((index, scenario), outcome) in scenarios.into_iter().enumerate().zip(outcomes) {
-            match outcome {
-                Ok(profile) => results.push(ScenarioResult { scenario, profile }),
-                Err(error) => failures.push(CellFailure { index, scenario, error }),
-            }
-        }
-        let sim_stats = caches.iter().fold((0, 0), |(h, s), c| {
-            let (hits, sims) = c.stats();
-            (h + hits, s + sims)
-        });
-        MatrixRun { results, failures, sim_stats }
+        Prepared { scenarios, specs, widx, didx, combo_of, traces }
     }
+}
+
+/// The prepared (built + lowered, not yet simulated) sweep state.
+struct Prepared {
+    scenarios: Vec<Scenario>,
+    specs: Vec<GpuSpec>,
+    widx: HashMap<&'static str, usize>,
+    didx: HashMap<&'static str, usize>,
+    combo_of: HashMap<(usize, usize, Framework, Policy), usize>,
+    traces: Vec<FrameworkTrace>,
+}
+
+impl Prepared {
+    fn trace_for(&self, sc: &Scenario) -> &[KernelInvocation] {
+        let key = (
+            self.widx[sc.workload.name],
+            self.didx[sc.device.name],
+            sc.framework,
+            sc.policy,
+        );
+        self.traces[self.combo_of[&key]].phase(sc.phase)
+    }
+
+    fn spec_for(&self, sc: &Scenario) -> &GpuSpec {
+        &self.specs[self.didx[sc.device.name]]
+    }
+}
+
+/// A deterministic 1-of-N partition of the enumerated cell list
+/// (`--shard i/N`): shard `index` owns every cell whose **global**
+/// enumeration index is congruent to `index` mod `count`. Round-robin
+/// (rather than contiguous ranges) keeps shard wall-times balanced even
+/// though cost varies along the enumeration order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// 0-based shard index, `< count`.
+    pub index: usize,
+    /// Total number of shards, ≥ 1.
+    pub count: usize,
+}
+
+impl Shard {
+    pub fn owns(&self, cell_index: usize) -> bool {
+        self.count != 0 && cell_index % self.count == self.index
+    }
+}
+
+/// Cell-store traffic counters for one matrix run, surfaced through
+/// [`cache_manifest`] (`matrix.cache.json`). A fully warm incremental
+/// run reports `misses == 0 && evictions == 0` — together with zero
+/// simulations in [`MatrixRun::sim_stats`], the CI warm-store gate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Cells served from the store without profiling.
+    pub hits: u64,
+    /// Cells that had to profile (absent or corrupt entries).
+    pub misses: u64,
+    /// Corrupt or version-mismatched entries discarded (each eviction
+    /// is also counted as a miss).
+    pub evictions: u64,
 }
 
 /// Supervision options for [`ScenarioMatrix::run_with`]. The default
@@ -359,12 +548,27 @@ impl ScenarioMatrix {
 pub struct MatrixRunOptions<'a> {
     pub policy: crate::exec::SupervisePolicy,
     pub fault: Option<&'a crate::exec::FaultInjector>,
+    /// The cell store probed (and, for incremental runs, filled) by
+    /// this run. Ignored unless `incremental` or `merge_only` is set.
+    pub store: Option<&'a store::CellStore>,
+    /// `--incremental`: serve clean cells from the store (zero
+    /// simulations, byte-identical artifacts), re-run dirty cells and
+    /// write them back. Fault-armed runs bypass the store entirely.
+    pub incremental: bool,
+    /// `repro matrix --merge`: every cell must come out of the store
+    /// union — a miss is a cell failure, and nothing is written back.
+    pub merge_only: bool,
+    /// `--shard i/N`: run only the cells this shard owns.
+    pub shard: Option<Shard>,
 }
 
-/// One cell that failed to profile: which cell (enumeration index +
+/// One cell that failed to profile: which cell (attempt-order index +
 /// scenario) and the structured [`crate::exec::ExecError`] (kind,
 /// attempts, elapsed) describing how.
 pub struct CellFailure {
+    /// Index into the *attempted* cell list — equal to the global
+    /// enumeration index for unsharded runs (sharded runs attempt a
+    /// subsequence, and [`MatrixRun::outcomes`] interleaves over it).
     pub index: usize,
     pub scenario: Scenario,
     pub error: crate::exec::ExecError,
@@ -396,6 +600,8 @@ pub struct MatrixRun {
     /// (cache hits, distinct simulations) across the whole sweep,
     /// summed over the per-device caches.
     pub sim_stats: (u64, u64),
+    /// Cell-store traffic (all zeros for non-incremental runs).
+    pub cache_stats: CacheStats,
 }
 
 impl MatrixRun {
@@ -856,15 +1062,6 @@ pub fn cross_device_step_table(run: &MatrixRun) -> Table {
     t
 }
 
-/// The cross-scenario report: comparison table + combined overlay
-/// Roofline chart (every scenario as one labelled aggregate triplet)
-/// + machine-readable JSON/CSV.
-///
-/// Single-device runs get that device's full ceiling set (the
-/// historical `matrix` artifact, byte-compatible with the pre-registry
-/// pipeline). Multi-device runs overlay every device's headline
-/// ceilings ([`Ceilings::merged`], repeats dashed) and append the
-/// cross-device pivot table.
 /// The failed-cell table appended to the comparison artifact when any
 /// cell failed: cell id, error kind, attempts, and the full error.
 pub fn failure_table(failures: &[CellFailure]) -> Table {
@@ -916,6 +1113,47 @@ pub fn errors_manifest(run: &MatrixRun) -> Json {
     ])
 }
 
+/// The cache/simulation statistics manifest (`matrix.cache.json`),
+/// written on *every* `repro matrix` run. These numbers are volatile
+/// by design — store hits depend on what previous runs left on disk,
+/// simulation counts on the shared-cache interleaving — which is
+/// exactly why they live in their own artifact and not in the
+/// comparison set: `matrix.{txt,json,svg,csv}` must stay byte-identical
+/// across cold, warm, sharded and merged runs over the same cells.
+///
+/// The CI warm-store gate greps this file: a second `--incremental`
+/// run against a warm store must report `"misses": 0` and
+/// `"simulations": 0`.
+pub fn cache_manifest(run: &MatrixRun) -> Json {
+    let (sim_hits, sims) = run.sim_stats;
+    Json::obj(vec![
+        ("schema", Json::str("hroofline-matrix-cache-v1")),
+        ("n_cells", Json::num(run.n_cells() as f64)),
+        (
+            "store",
+            Json::obj(vec![
+                ("hits", Json::num(run.cache_stats.hits as f64)),
+                ("misses", Json::num(run.cache_stats.misses as f64)),
+                ("evictions", Json::num(run.cache_stats.evictions as f64)),
+            ]),
+        ),
+        ("simulations", Json::num(sims as f64)),
+        ("sim_cache_hits", Json::num(sim_hits as f64)),
+    ])
+}
+
+/// The cross-scenario report: comparison table + combined overlay
+/// Roofline chart (every scenario as one labelled aggregate triplet)
+/// + machine-readable JSON/CSV.
+///
+/// Single-device runs get that device's full ceiling set (the
+/// historical `matrix` artifact, byte-compatible with the pre-registry
+/// pipeline). Multi-device runs overlay every device's headline
+/// ceilings ([`Ceilings::merged`], repeats dashed) and append the
+/// cross-device pivot table. Volatile cache/simulation stats are NOT
+/// part of this artifact (see [`cache_manifest`]): the report is a
+/// pure function of the surviving profiles, byte-identical across
+/// cold, warm, sharded and merged runs.
 pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
     let entries = run.device_entries();
     let specs: Vec<GpuSpec> = if entries.is_empty() {
@@ -937,15 +1175,15 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
     let model = RooflineModel { ceilings, points, device_name };
     let chart =
         RooflineChart::overlay(&model, "Scenario matrix — aggregate hierarchical Roofline");
-    let (hits, sims) = run.sim_stats;
     let non_empty = run.results.iter().filter(|r| !r.is_empty()).count();
+    // Simulation/cache statistics deliberately do NOT appear here: they
+    // vary with store state (cold vs warm vs merged) while this
+    // artifact is required to be byte-identical across all of those.
+    // They live in `matrix.cache.json` ([`cache_manifest`]) instead.
     let mut text = format!(
-        "scenario matrix: {} scenarios ({} with kernels) | \
-         shared-cache simulations {} (cache hits {})\n\n{}",
+        "scenario matrix: {} scenarios ({} with kernels)\n\n{}",
         run.results.len(),
         non_empty,
-        sims,
-        hits,
         table.render()
     );
     if multi_device {
@@ -968,8 +1206,6 @@ pub fn comparison_artifact(run: &MatrixRun) -> Artifact {
     let mut json_fields = vec![
         ("n_scenarios", Json::num(run.results.len() as f64)),
         ("n_non_empty", Json::num(non_empty as f64)),
-        ("shared_sim_count", Json::num(sims as f64)),
-        ("shared_sim_hits", Json::num(hits as f64)),
         (
             "devices",
             Json::arr(entries.iter().map(|d| Json::str(d.name))),
@@ -1341,7 +1577,8 @@ mod tests {
             retry: crate::exec::RetryPolicy::attempts(2),
             ..Default::default()
         };
-        let run = tiny_matrix().run_with(&MatrixRunOptions { policy, fault: Some(&inj) });
+        let run = tiny_matrix()
+            .run_with(&MatrixRunOptions { policy, fault: Some(&inj), ..Default::default() });
         assert!(run.failures.is_empty(), "retries must absorb the transient fault");
         assert_eq!(run.results.len(), clean.results.len());
         for (a, b) in run.results.iter().zip(&clean.results) {
@@ -1360,6 +1597,167 @@ mod tests {
         assert!(a.json.opt("n_failed").is_none());
         let manifest = errors_manifest(&run);
         assert_eq!(manifest.get("n_failed").unwrap().as_f64().unwrap() as usize, 0);
+    }
+
+    fn store_tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("hroofline-matrix-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn cell_keys_are_stable_distinct_and_spec_sensitive() {
+        let keys = tiny_matrix().cell_keys();
+        assert_eq!(keys.len(), 2);
+        assert_eq!(keys, tiny_matrix().cell_keys(), "same spec → same keys");
+        assert_ne!(keys[0].0, keys[1].0, "distinct cells → distinct keys");
+        assert_eq!(keys[0].1, "deepcam-lite-pt-forward-O1");
+
+        // Dirty-cell invalidation: any GpuSpec field change moves the key.
+        let sc = tiny_matrix().enumerate()[0];
+        let spec = sc.device.spec();
+        let g = sc.workload.build(sc.scale);
+        let trace = lower(&g, sc.framework, sc.policy, &spec);
+        let base = sc.cell_key(trace.phase(sc.phase), &spec);
+        let mut dirty = spec.clone();
+        dirty.hbm_bytes_per_sec *= 2.0;
+        assert_ne!(base, sc.cell_key(trace.phase(sc.phase), &dirty));
+
+        // An AMP policy change moves the key even before the trace
+        // differences are hashed (the policy is keyed directly).
+        let mut o0 = sc;
+        o0.policy = Policy::O0;
+        assert_ne!(base, o0.cell_key(trace.phase(sc.phase), &spec));
+    }
+
+    #[test]
+    fn shard_union_equals_unsharded_enumeration() {
+        let scenarios = ScenarioMatrix::quick().enumerate();
+        let mut owned: Vec<usize> = Vec::new();
+        for index in 0..3 {
+            let shard = Shard { index, count: 3 };
+            let mine: Vec<usize> =
+                (0..scenarios.len()).filter(|&i| shard.owns(i)).collect();
+            // 32 quick cells round-robin into 11/11/10.
+            assert_eq!(mine.len(), if index < 2 { 11 } else { 10 });
+            owned.extend(mine);
+        }
+        owned.sort();
+        assert_eq!(owned, (0..scenarios.len()).collect::<Vec<_>>(), "disjoint + complete");
+
+        // A sharded run profiles exactly its slice, in enumeration order.
+        let run = tiny_matrix()
+            .run_with(&MatrixRunOptions { shard: Some(Shard { index: 1, count: 2 }), ..Default::default() });
+        assert_eq!(run.results.len(), 1);
+        assert_eq!(run.results[0].id(), "deepcam-lite-pt-optimizer-O1");
+    }
+
+    #[test]
+    fn incremental_warm_run_serves_hits_with_zero_simulations() {
+        let dir = store_tmpdir("warm");
+        let st = store::CellStore::open(&dir).unwrap();
+        let cold = tiny_matrix().run_with(&MatrixRunOptions {
+            store: Some(&st),
+            incremental: true,
+            ..Default::default()
+        });
+        assert_eq!(cold.cache_stats, CacheStats { hits: 0, misses: 2, evictions: 0 });
+        assert!(cold.sim_stats.1 > 0);
+        assert_eq!(st.n_entries(), 2);
+
+        let warm = tiny_matrix().run_with(&MatrixRunOptions {
+            store: Some(&st),
+            incremental: true,
+            ..Default::default()
+        });
+        assert_eq!(warm.cache_stats, CacheStats { hits: 2, misses: 0, evictions: 0 });
+        assert_eq!(warm.sim_stats.1, 0, "a warm run simulates nothing");
+        for (c, w) in cold.results.iter().zip(&warm.results) {
+            assert_eq!(c.profile, w.profile, "{}", c.id());
+        }
+        // Byte-identical comparison artifact — the tentpole guarantee.
+        let a = comparison_artifact(&cold);
+        let b = comparison_artifact(&warm);
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.json.to_string_pretty(), b.json.to_string_pretty());
+        assert_eq!(a.csv, b.csv);
+        assert_eq!(a.svg, b.svg);
+        // The volatile counters land in the cache manifest instead.
+        let m = cache_manifest(&warm);
+        assert_eq!(m.get("schema").unwrap().as_str().unwrap(), "hroofline-matrix-cache-v1");
+        assert_eq!(m.get("simulations").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(m.get("store").unwrap().get("misses").unwrap().as_f64().unwrap(), 0.0);
+        assert!(!a.text.contains("simulations"), "{}", a.text);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_only_unions_shard_stores_and_misses_fail_cleanly() {
+        let dir_a = store_tmpdir("merge-a");
+        let dir_b = store_tmpdir("merge-b");
+        // Two sharded incremental runs fill two disjoint stores.
+        for (index, dir) in [(0, &dir_a), (1, &dir_b)] {
+            let st = store::CellStore::open(dir).unwrap();
+            let run = tiny_matrix().run_with(&MatrixRunOptions {
+                store: Some(&st),
+                incremental: true,
+                shard: Some(Shard { index, count: 2 }),
+                ..Default::default()
+            });
+            assert_eq!(run.results.len(), 1);
+            assert_eq!(st.n_entries(), 1);
+        }
+        // The merge run serves every cell from the union, runs nothing.
+        let union = store::CellStore::open_union(vec![dir_a.clone(), dir_b.clone()]);
+        let merged = tiny_matrix().run_with(&MatrixRunOptions {
+            store: Some(&union),
+            merge_only: true,
+            ..Default::default()
+        });
+        assert!(merged.failures.is_empty());
+        assert_eq!(merged.cache_stats.hits, 2);
+        assert_eq!(merged.sim_stats.1, 0);
+        let direct = tiny_matrix().run();
+        assert_eq!(
+            comparison_artifact(&merged).text,
+            comparison_artifact(&direct).text,
+            "merged output byte-identical to an unsharded run"
+        );
+        // A union missing a shard degrades the absent cells, not the run.
+        let partial = store::CellStore::open_union(vec![dir_a.clone()]);
+        let degraded = tiny_matrix().run_with(&MatrixRunOptions {
+            store: Some(&partial),
+            merge_only: true,
+            ..Default::default()
+        });
+        assert_eq!(degraded.results.len(), 1);
+        assert_eq!(degraded.failures.len(), 1);
+        assert!(
+            degraded.failures[0].error.to_string().contains("missing from the merged store"),
+            "{}",
+            degraded.failures[0].error
+        );
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn fault_armed_runs_never_touch_the_store() {
+        let dir = store_tmpdir("faulted");
+        let st = store::CellStore::open(&dir).unwrap();
+        let plan = crate::exec::FaultPlan::new(0).panic_on("deepcam-lite-pt-optimizer-O1");
+        let inj = crate::exec::FaultInjector::new(plan);
+        let run = tiny_matrix().run_with(&MatrixRunOptions {
+            fault: Some(&inj),
+            store: Some(&st),
+            incremental: true,
+            ..Default::default()
+        });
+        assert_eq!(run.results.len(), 1, "the surviving cell still profiles");
+        assert_eq!(run.cache_stats, CacheStats::default(), "no store traffic under faults");
+        assert_eq!(st.n_entries(), 0, "fault-armed cells are never persisted");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

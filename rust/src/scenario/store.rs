@@ -1,0 +1,283 @@
+//! On-disk, content-addressed cell store for the incremental scenario
+//! matrix.
+//!
+//! One JSON blob per cell, named `<key>.json` under the store directory
+//! (default `.hroofline-cache/`), where `<key>` is the 32-hex-char
+//! [`CellKey`] computed by [`crate::scenario::Scenario::cell_key`] over
+//! everything the cell's profile is a function of: the lowered kernel
+//! trace, the [`crate::device::GpuSpec`], the AMP policy, the workload
+//! spec, and [`CELL_SCHEMA`] itself. Because the profiler is
+//! deterministic and artifacts are pure functions of the profile, a key
+//! hit can replay a cell with **zero simulations** and byte-identical
+//! artifacts — the contract `rust/tests/incremental_matrix.rs` pins.
+//!
+//! Robustness rule (the store is a cache, never a source of truth): any
+//! defect in an entry — unreadable file, truncated JSON, schema or key
+//! mismatch, undecodable profile — is reported as [`Lookup::Corrupt`]
+//! and treated by the matrix as a miss; the cell re-runs and the entry
+//! is overwritten. A store can therefore never turn a clean matrix run
+//! into a hard error.
+//!
+//! Entry schema (`hroofline-cell-v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "hroofline-cell-v1",
+//!   "key": "<32 hex chars>",
+//!   "cell": "<human-readable scenario id>",
+//!   "profile": { ... lossless profile encoding ... }
+//! }
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::profiler::export::{profile_from_json, profile_to_json};
+use crate::profiler::Profile;
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
+
+/// Store-format version, hashed into every [`CellKey`] (a format bump
+/// invalidates all prior entries by construction) and stamped into
+/// every entry file.
+pub const CELL_SCHEMA: &str = "hroofline-cell-v1";
+
+/// A content hash addressing one matrix cell: 32 lowercase hex chars
+/// from [`crate::util::digest::StableHasher::finish_hex`]. Equal keys
+/// mean bit-identical cell inputs (trace, spec, policy, workload,
+/// store format) — the store never has to compare anything else.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CellKey(String);
+
+impl CellKey {
+    pub fn new(hex: String) -> CellKey {
+        CellKey(hex)
+    }
+
+    /// The filesystem/wire form (the entry's file stem).
+    pub fn as_hex(&self) -> &str {
+        &self.0
+    }
+}
+
+/// Outcome of a store probe. There is deliberately no error variant —
+/// see the module docs.
+#[derive(Debug)]
+pub enum Lookup {
+    /// A well-formed entry decoded to this profile.
+    Hit(Profile),
+    /// No entry on disk for this key.
+    Miss,
+    /// An entry exists but is unusable (truncated, wrong schema, wrong
+    /// key, undecodable). Callers treat this as a miss and overwrite.
+    Corrupt,
+}
+
+/// The on-disk cell store. Opened read-write on one directory for
+/// `--incremental` runs, or as a read-only union over several shard
+/// directories for `repro matrix --merge`.
+#[derive(Clone, Debug)]
+pub struct CellStore {
+    /// Where [`CellStore::save`] writes; `None` for a merge union.
+    write_dir: Option<PathBuf>,
+    /// Probed in order by [`CellStore::load`]; the first existing entry
+    /// file decides (hit or corrupt).
+    read_dirs: Vec<PathBuf>,
+}
+
+impl CellStore {
+    /// Open (creating if needed) a read-write store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<CellStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cell store dir {}", dir.display()))?;
+        Ok(CellStore {
+            read_dirs: vec![dir.clone()],
+            write_dir: Some(dir),
+        })
+    }
+
+    /// A read-only union over shard store directories, probed in the
+    /// given order. Directories need not exist (an absent dir simply
+    /// never hits).
+    pub fn open_union(dirs: Vec<PathBuf>) -> CellStore {
+        CellStore {
+            write_dir: None,
+            read_dirs: dirs,
+        }
+    }
+
+    /// The write directory, when this store has one.
+    pub fn dir(&self) -> Option<&Path> {
+        self.write_dir.as_deref()
+    }
+
+    fn entry_path(dir: &Path, key: &CellKey) -> PathBuf {
+        dir.join(format!("{}.json", key.as_hex()))
+    }
+
+    /// Probe the store for a key. Infallible by design: every failure
+    /// mode maps to [`Lookup::Miss`] or [`Lookup::Corrupt`].
+    pub fn load(&self, key: &CellKey) -> Lookup {
+        for dir in &self.read_dirs {
+            let path = Self::entry_path(dir, key);
+            if !path.exists() {
+                continue;
+            }
+            return match Self::decode(&path, key) {
+                Some(profile) => Lookup::Hit(profile),
+                None => Lookup::Corrupt,
+            };
+        }
+        Lookup::Miss
+    }
+
+    /// Strict decode of one entry file; any defect is `None` (and the
+    /// caller maps it to [`Lookup::Corrupt`]).
+    fn decode(path: &Path, key: &CellKey) -> Option<Profile> {
+        let text = fs::read_to_string(path).ok()?;
+        // Json::parse is strict (trailing data / truncation are parse
+        // errors), so a half-written or truncated entry lands here.
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("schema").ok()?.as_str().ok()? != CELL_SCHEMA {
+            return None;
+        }
+        if doc.get("key").ok()?.as_str().ok()? != key.as_hex() {
+            return None;
+        }
+        profile_from_json(doc.get("profile").ok()?).ok()
+    }
+
+    /// Persist a cell's profile under its key: write-to-temp + rename,
+    /// so a crashed or concurrent writer can leave at worst a stale
+    /// `.tmp` turd, never a half-written entry under the final name.
+    pub fn save(&self, key: &CellKey, cell: &str, profile: &Profile) -> Result<()> {
+        let Some(dir) = &self.write_dir else {
+            bail!("cell store opened as a read-only merge union");
+        };
+        let doc = Json::obj(vec![
+            ("schema", Json::str(CELL_SCHEMA)),
+            ("key", Json::str(key.as_hex())),
+            ("cell", Json::str(cell)),
+            ("profile", profile_to_json(profile)),
+        ]);
+        let path = Self::entry_path(dir, key);
+        let tmp = dir.join(format!("{}.json.tmp", key.as_hex()));
+        fs::write(&tmp, doc.to_string_pretty())
+            .with_context(|| format!("writing cell entry {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing cell entry {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Number of committed entries on disk (tests and CLI reporting).
+    pub fn n_entries(&self) -> usize {
+        let mut n = 0;
+        for dir in &self.read_dirs {
+            let Ok(rd) = fs::read_dir(dir) else { continue };
+            n += rd
+                .flatten()
+                .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                .count();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{GpuSpec, Precision};
+    use crate::profiler::{ProfileRequest, Session};
+    use crate::sim::kernel::{KernelDesc, KernelInvocation};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample() -> (CellKey, Profile) {
+        let spec = GpuSpec::v100();
+        let trace = vec![KernelInvocation::once(KernelDesc::streaming_elementwise(
+            "relu",
+            1 << 16,
+            Precision::Fp32,
+            1,
+        ))];
+        let p = Session::standard(&spec).run(&ProfileRequest::new(&trace)).unwrap();
+        (CellKey::new("00112233445566778899aabbccddeeff".into()), p)
+    }
+
+    #[test]
+    fn roundtrip_is_exact_and_missing_key_is_a_miss() {
+        let dir = tmpdir("roundtrip");
+        let store = CellStore::open(&dir).unwrap();
+        let (key, profile) = sample();
+        assert!(matches!(store.load(&key), Lookup::Miss));
+        store.save(&key, "deepcam-lite-pt-forward-O1", &profile).unwrap();
+        assert_eq!(store.n_entries(), 1);
+        match store.load(&key) {
+            Lookup::Hit(back) => assert_eq!(back, profile, "store round-trip must be exact"),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        // No .tmp turd left behind.
+        assert!(!dir.join(format!("{}.json.tmp", key.as_hex())).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_entry_is_corrupt_and_can_be_overwritten() {
+        let dir = tmpdir("truncate");
+        let store = CellStore::open(&dir).unwrap();
+        let (key, profile) = sample();
+        store.save(&key, "cell", &profile).unwrap();
+        // Truncate the entry mid-JSON — the regression the satellite
+        // task pins: this must read as Corrupt, never a hard error.
+        let path = dir.join(format!("{}.json", key.as_hex()));
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(matches!(store.load(&key), Lookup::Corrupt));
+        // Overwrite repairs it in place.
+        store.save(&key, "cell", &profile).unwrap();
+        assert!(matches!(store.load(&key), Lookup::Hit(_)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_and_key_mismatches_are_corrupt() {
+        let dir = tmpdir("mismatch");
+        let store = CellStore::open(&dir).unwrap();
+        let (key, profile) = sample();
+        store.save(&key, "cell", &profile).unwrap();
+        let path = dir.join(format!("{}.json", key.as_hex()));
+
+        // Version bump: same shape, different schema stamp.
+        let stamped = fs::read_to_string(&path).unwrap().replace(CELL_SCHEMA, "hroofline-cell-v0");
+        fs::write(&path, stamped).unwrap();
+        assert!(matches!(store.load(&key), Lookup::Corrupt));
+
+        // A well-formed entry filed under the wrong name (key mismatch).
+        store.save(&key, "cell", &profile).unwrap();
+        let other = CellKey::new("ffeeddccbbaa99887766554433221100".into());
+        fs::copy(&path, dir.join(format!("{}.json", other.as_hex()))).unwrap();
+        assert!(matches!(store.load(&other), Lookup::Corrupt));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn union_probes_shards_in_order_and_rejects_save() {
+        let a = tmpdir("union-a");
+        let b = tmpdir("union-b");
+        let (key, profile) = sample();
+        CellStore::open(&a).unwrap();
+        CellStore::open(&b).unwrap().save(&key, "cell", &profile).unwrap();
+        let union = CellStore::open_union(vec![a.clone(), b.clone(), tmpdir("union-absent")]);
+        assert!(matches!(union.load(&key), Lookup::Hit(_)), "found in the second shard");
+        assert_eq!(union.n_entries(), 1);
+        assert!(union.save(&key, "cell", &profile).is_err(), "merge unions are read-only");
+        let _ = fs::remove_dir_all(&a);
+        let _ = fs::remove_dir_all(&b);
+    }
+}

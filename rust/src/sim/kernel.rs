@@ -8,6 +8,7 @@
 use std::hash::{Hash, Hasher};
 
 use crate::device::{Precision, GpuSpec};
+use crate::util::digest::StableHasher;
 
 /// Thread-level SASS floating-point instruction counts for one precision.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -25,6 +26,14 @@ impl FpCounts {
 
     pub fn insts(&self) -> u64 {
         self.add + self.mul + self.fma
+    }
+
+    /// Feed every field into a process-stable digest (the cell-store
+    /// content key — see [`crate::util::digest`]).
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        h.write_u64(self.add);
+        h.write_u64(self.mul);
+        h.write_u64(self.fma);
     }
 }
 
@@ -78,6 +87,15 @@ impl InstMix {
     /// all (paper §IV-D: data conversion / layout / transfer kernels).
     pub fn is_zero_ai(&self, spec: &GpuSpec) -> bool {
         self.total_flops(spec) == 0
+    }
+
+    /// Feed every field into a process-stable digest.
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        self.fp64.digest_into(h);
+        self.fp32.digest_into(h);
+        self.fp16.digest_into(h);
+        h.write_u64(self.tensor_insts);
+        h.write_u64(self.int_ops);
     }
 }
 
@@ -153,6 +171,19 @@ impl AccessPattern {
 
     pub fn requested_bytes(&self) -> u64 {
         self.load_bytes + self.store_bytes
+    }
+
+    /// Feed every field into a process-stable digest. Floats go in
+    /// bitwise (`to_bits`), mirroring this type's `Eq`/`Hash` contract:
+    /// digest-equal patterns are exactly the `Eq`-equal ones.
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        h.write_u64(self.load_bytes);
+        h.write_u64(self.store_bytes);
+        h.write_u64(self.footprint_bytes);
+        h.write_f64(self.l1_reuse);
+        h.write_f64(self.l2_reuse);
+        h.write_opt_u64(self.l1_resident_bytes);
+        h.write_opt_u64(self.l2_resident_bytes);
     }
 }
 
@@ -232,6 +263,21 @@ impl KernelDesc {
     /// Total threads launched.
     pub fn threads(&self) -> u64 {
         self.grid as u64 * self.block as u64
+    }
+
+    /// Feed the whole descriptor into a process-stable digest — the
+    /// serialized counterpart of this type's bitwise `Hash`: two
+    /// descriptors digest equal iff they compare `Eq`, but unlike
+    /// `std::hash` the digest is identical across processes and
+    /// machines, making it usable as a persistent cache key.
+    pub fn digest_into(&self, h: &mut StableHasher) {
+        h.write_str(&self.name);
+        h.write_u32(self.grid);
+        h.write_u32(self.block);
+        self.mix.digest_into(h);
+        self.access.digest_into(h);
+        h.write_f64(self.occupancy);
+        h.write_f64(self.efficiency);
     }
 
     /// Constructor used across tests & the ERT driver: an elementwise
@@ -423,6 +469,28 @@ mod tests {
         map.insert(c, 2);
         assert_eq!(map.len(), 2);
         assert_eq!(map.values().copied().max(), Some(11));
+    }
+
+    #[test]
+    fn stable_digest_tracks_descriptor_equality() {
+        let spec = GpuSpec::v100();
+        let digest = |k: &KernelDesc| {
+            let mut h = StableHasher::new();
+            k.digest_into(&mut h);
+            h.finish_hex()
+        };
+        let a = KernelDesc::gemm("g", 512, 512, 512, Precision::Fp16, true, 64, &spec);
+        let b = KernelDesc::gemm("g", 512, 512, 512, Precision::Fp16, true, 64, &spec);
+        let c = KernelDesc::gemm("g", 512, 512, 256, Precision::Fp16, true, 64, &spec);
+        assert_eq!(digest(&a), digest(&b), "Eq descriptors digest equal");
+        assert_ne!(digest(&a), digest(&c));
+        // Any single field change moves the digest.
+        let mut d = a.clone();
+        d.occupancy += 0.01;
+        assert_ne!(digest(&a), digest(&d));
+        let mut e = a.clone();
+        e.access.l2_resident_bytes = None;
+        assert_ne!(digest(&a), digest(&e));
     }
 
     #[test]

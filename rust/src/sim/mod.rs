@@ -19,7 +19,10 @@
 //!
 //! [`simulate`] runs all three for one kernel; [`SimCache`] memoizes it
 //! over identical descriptors (simulation is pure, so cached results
-//! are bit-identical).
+//! are bit-identical). That purity also makes simulations cacheable
+//! *across processes*: [`KernelDesc::digest_into`] feeds every field
+//! of a descriptor into the process-stable [`crate::util::digest`]
+//! hash behind the scenario matrix's content-addressed cell store.
 
 pub mod cache;
 pub mod cache_sim;

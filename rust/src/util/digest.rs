@@ -1,0 +1,206 @@
+//! Process-stable content hashing for the cell store.
+//!
+//! `std::hash` is explicitly *not* stable across processes (SipHash
+//! with a random per-process key), so content-addressed storage — the
+//! scenario matrix's [`crate::scenario::store::CellStore`], where a key
+//! computed today must match the key computed on another machine
+//! tomorrow — needs its own hasher. [`StableHasher`] runs two parallel
+//! FNV-1a-64 streams (distinct offset bases, the second stream
+//! decorrelated by a byte mask) for a 128-bit hex digest.
+//!
+//! Why FNV-1a: the offline vendor set has no hashing crate, the
+//! algorithm is a dozen lines with published known-answer vectors
+//! (tested below), and the keys are not adversarial — they address a
+//! build's own simulation outputs, so collision resistance only has to
+//! beat "different scenario specs hashing together by accident".
+//!
+//! Framing rules callers must keep to (and the digest methods on
+//! [`crate::sim::kernel::KernelDesc`] / [`crate::device::GpuSpec`] do):
+//!
+//! * strings and byte slices are **length-prefixed** via [`StableHasher::write_str`]
+//!   / the explicit `write_u64(len)` idiom, so `("ab","c")` never
+//!   collides with `("a","bc")`;
+//! * floats are hashed **bitwise** ([`f64::to_bits`]), matching the
+//!   bitwise `Eq`/`Hash` the simulator's descriptors already use —
+//!   equal keys mean bit-identical inputs, which is exactly the
+//!   contract the byte-identical-artifact guarantee needs;
+//! * `Option`s are tag-prefixed ([`StableHasher::write_opt_u64`]).
+
+/// The FNV-1a-64 offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// The FNV-1a-64 prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// One-shot FNV-1a-64 over a byte slice (the reference stream of
+/// [`StableHasher`], exposed for the known-answer tests and for small
+/// standalone keys).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Decorrelation constant for the second stream: the 64-bit golden
+/// ratio, the usual choice for splitting one seed into two.
+const HI_OFFSET: u64 = FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15;
+/// Byte mask applied to the second stream so the two streams never see
+/// the same input sequence.
+const HI_MASK: u8 = 0xa5;
+
+/// A process-stable 128-bit content hasher (two FNV-1a-64 streams).
+///
+/// Unlike `std::hash::Hasher` this has no random state: the same write
+/// sequence yields the same [`StableHasher::finish_hex`] digest in
+/// every process, on every platform, in every build of the same store
+/// format version.
+#[derive(Clone, Debug)]
+pub struct StableHasher {
+    lo: u64,
+    hi: u64,
+}
+
+impl Default for StableHasher {
+    fn default() -> StableHasher {
+        StableHasher::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        StableHasher { lo: FNV_OFFSET, hi: HI_OFFSET }
+    }
+
+    /// Feed raw bytes (unframed — prefer the typed writers, which
+    /// frame their input).
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.lo = (self.lo ^ b as u64).wrapping_mul(FNV_PRIME);
+            self.hi = (self.hi ^ (b ^ HI_MASK) as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    /// Bitwise float hashing (`to_bits`), consistent with the bitwise
+    /// `Eq` on the simulator's descriptors: `0.0` and `-0.0` hash
+    /// differently, NaN payloads are distinguished.
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_bytes(&[v as u8]);
+    }
+
+    /// Length-prefixed string framing (see module docs).
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    /// Tag-prefixed `Option<u64>` framing: `None` and `Some(0)` differ.
+    pub fn write_opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            None => self.write_bytes(&[0]),
+            Some(x) => {
+                self.write_bytes(&[1]);
+                self.write_u64(x);
+            }
+        }
+    }
+
+    /// The 128-bit digest as 32 lowercase hex characters — filesystem-
+    /// and JSON-safe, the [`crate::scenario::store::CellKey`] wire form.
+    pub fn finish_hex(&self) -> String {
+        format!("{:016x}{:016x}", self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_answer_vectors() {
+        // Published FNV-1a 64-bit test vectors (Fowler/Noll/Vo).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn hasher_lo_stream_is_reference_fnv1a() {
+        let mut h = StableHasher::new();
+        h.write_bytes(b"foobar");
+        assert!(h.finish_hex().starts_with(&format!("{:016x}", fnv1a64(b"foobar"))));
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_well_formed() {
+        let digest = |f: &dyn Fn(&mut StableHasher)| {
+            let mut h = StableHasher::new();
+            f(&mut h);
+            h.finish_hex()
+        };
+        let a = digest(&|h| {
+            h.write_str("scenario");
+            h.write_u64(42);
+            h.write_f64(1.5);
+        });
+        let b = digest(&|h| {
+            h.write_str("scenario");
+            h.write_u64(42);
+            h.write_f64(1.5);
+        });
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase()));
+    }
+
+    #[test]
+    fn string_framing_prevents_concatenation_collisions() {
+        let mut a = StableHasher::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = StableHasher::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish_hex(), b.finish_hex());
+    }
+
+    #[test]
+    fn floats_hash_bitwise() {
+        let mut pos = StableHasher::new();
+        pos.write_f64(0.0);
+        let mut neg = StableHasher::new();
+        neg.write_f64(-0.0);
+        assert_ne!(pos.finish_hex(), neg.finish_hex(), "0.0 vs -0.0 are distinct bit patterns");
+    }
+
+    #[test]
+    fn option_framing_distinguishes_none_from_zero() {
+        let mut none = StableHasher::new();
+        none.write_opt_u64(None);
+        let mut zero = StableHasher::new();
+        zero.write_opt_u64(Some(0));
+        assert_ne!(none.finish_hex(), zero.finish_hex());
+    }
+
+    #[test]
+    fn single_bit_input_changes_flip_the_digest() {
+        let mut a = StableHasher::new();
+        a.write_u64(1 << 17);
+        let mut b = StableHasher::new();
+        b.write_u64(1 << 18);
+        assert_ne!(a.finish_hex(), b.finish_hex());
+    }
+}

@@ -1,10 +1,11 @@
 //! Shared substrate utilities: deterministic PRNG, statistics, JSON,
-//! human-unit formatting, fixed-width text tables, and the
-//! `anyhow`-compatible error type.
+//! human-unit formatting, fixed-width text tables, process-stable
+//! content hashing, and the `anyhow`-compatible error type.
 //!
 //! These exist in-repo because the offline vendor set has no `rand`,
 //! `serde`, `prettytable`, `anyhow` or `thiserror` — see DESIGN.md §1.
 
+pub mod digest;
 pub mod error;
 pub mod fmt;
 pub mod json;
@@ -12,6 +13,7 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use digest::StableHasher;
 pub use error::{Context, Error};
 pub use fmt::{si, si_bytes, si_flops};
 pub use json::Json;

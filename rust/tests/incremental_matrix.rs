@@ -1,0 +1,252 @@
+//! Incremental scenario-matrix integration: the content-addressed cell
+//! store end to end — cross-process key stability, cold-vs-warm byte
+//! identity, dirty-cell invalidation, shard partitioning, corrupt-entry
+//! repair, and the fault/store exclusion rule.
+//!
+//! These are the contracts the sharded CI topology rests on: `--shard
+//! i/N` jobs fill disjoint stores, `--merge` unions them, and the
+//! merged report must be byte-identical to an unsharded run.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use hroofline::scenario::store::{CellStore, Lookup};
+use hroofline::scenario::{
+    cache_manifest, comparison_artifact, CacheStats, MatrixRunOptions, ScenarioMatrix,
+};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hroofline-incr-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `repro matrix --quick --print-keys [extra...]` → stdout lines.
+fn print_keys(extra: &[&str]) -> Vec<String> {
+    let mut args = vec!["matrix", "--quick", "--print-keys"];
+    args.extend_from_slice(extra);
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(&args)
+        .output()
+        .expect("spawning repro");
+    assert!(out.status.success(), "print-keys failed: {out:?}");
+    String::from_utf8(out.stdout).unwrap().lines().map(String::from).collect()
+}
+
+#[test]
+fn cell_keys_are_stable_across_processes() {
+    // Two separate processes and an in-process enumeration must agree
+    // line for line — the property that lets a CI shard trust entries
+    // written by a different job on a different runner.
+    let a = print_keys(&[]);
+    let b = print_keys(&[]);
+    assert_eq!(a, b, "two processes disagree on cell keys");
+    let in_proc: Vec<String> = ScenarioMatrix::quick()
+        .cell_keys()
+        .into_iter()
+        .map(|(key, id)| format!("{} {id}", key.as_hex()))
+        .collect();
+    assert_eq!(a, in_proc, "CLI and library enumerations disagree");
+    assert_eq!(in_proc.len(), 32, "quick catalog is 32 cells");
+
+    // Keys are 32 lowercase hex chars, pairwise distinct.
+    let mut seen = HashSet::new();
+    for line in &in_proc {
+        let hex = line.split_whitespace().next().unwrap();
+        assert_eq!(hex.len(), 32, "{line}");
+        assert!(
+            hex.chars().all(|c| c.is_ascii_digit() || ('a'..='f').contains(&c)),
+            "{hex}"
+        );
+        assert!(seen.insert(hex.to_string()), "duplicate key {hex}");
+    }
+}
+
+#[test]
+fn shard_key_partition_unions_to_the_full_enumeration() {
+    let all = print_keys(&[]);
+    assert_eq!(all.len(), 32);
+    let shards: Vec<Vec<String>> = (0..3)
+        .map(|i| print_keys(&["--shard", &format!("{i}/3")]))
+        .collect();
+    // 32 cells round-robin across 3 shards: 11 / 11 / 10.
+    assert_eq!(
+        shards.iter().map(Vec::len).collect::<Vec<_>>(),
+        vec![11, 11, 10]
+    );
+    // Disjoint, complete, and in global enumeration order: cell i lives
+    // at position i/3 of shard i%3.
+    let rebuilt: Vec<String> = (0..all.len()).map(|i| shards[i % 3][i / 3].clone()).collect();
+    assert_eq!(rebuilt, all, "shards must partition the enumeration round-robin");
+}
+
+#[test]
+fn warm_cli_run_reproduces_every_artifact_byte_for_byte() {
+    let base = tmpdir("cli-warm");
+    let store = base.join("store");
+    let run = |out: &Path| {
+        let status = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args([
+                "matrix",
+                "--quick",
+                "--workloads",
+                "transformer",
+                "--incremental",
+                "--store",
+                store.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+            ])
+            .status()
+            .expect("spawning repro");
+        assert!(status.success());
+    };
+    let cold = base.join("cold");
+    let warm = base.join("warm");
+    run(&cold);
+    run(&warm);
+    // Everything — comparison report, per-scenario artifacts, timeline
+    // lanes, SVGs — must match byte for byte; only matrix.cache.json
+    // (where the volatile stats live) is allowed to differ.
+    assert_trees_identical(&cold, &warm, "matrix.cache.json");
+    let cache = std::fs::read_to_string(warm.join("matrix.cache.json")).unwrap();
+    assert!(cache.contains("\"misses\": 0"), "{cache}");
+    assert!(cache.contains("\"simulations\": 0"), "{cache}");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+fn assert_trees_identical(a: &Path, b: &Path, skip: &str) {
+    let mut names: Vec<_> =
+        std::fs::read_dir(a).unwrap().map(|e| e.unwrap().file_name()).collect();
+    names.sort();
+    assert!(!names.is_empty(), "{} is empty", a.display());
+    for name in names {
+        let (pa, pb) = (a.join(&name), b.join(&name));
+        if pa.is_dir() {
+            assert_trees_identical(&pa, &pb, skip);
+        } else if name.to_str() != Some(skip) {
+            assert_eq!(
+                std::fs::read(&pa).unwrap(),
+                std::fs::read(&pb).unwrap(),
+                "{} differs between runs",
+                pa.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn device_change_dirties_every_cell_key() {
+    let v100 = ScenarioMatrix::quick().with_workloads("transformer").unwrap().cell_keys();
+    let t4 = ScenarioMatrix::quick()
+        .with_workloads("transformer")
+        .unwrap()
+        .with_devices("t4")
+        .unwrap()
+        .cell_keys();
+    assert_eq!(v100.len(), t4.len());
+    let v100_set: HashSet<&str> = v100.iter().map(|(k, _)| k.as_hex()).collect();
+    for (k, id) in &t4 {
+        assert!(!v100_set.contains(k.as_hex()), "{id}: key must move with the GpuSpec");
+    }
+}
+
+#[test]
+fn dirty_cells_re_run_while_clean_cells_stay_cached() {
+    let dir = tmpdir("dirty");
+    let store = CellStore::open(&dir).unwrap();
+    let options = MatrixRunOptions {
+        store: Some(&store),
+        incremental: true,
+        ..Default::default()
+    };
+    let m = ScenarioMatrix::quick().with_workloads("transformer").unwrap();
+    let cold = m.run_with(&options);
+    assert_eq!(cold.cache_stats, CacheStats { hits: 0, misses: 8, evictions: 0 });
+
+    // The same catalog on another device is entirely dirty: the warm
+    // store serves nothing, every cell re-runs (and is persisted under
+    // its new key alongside the old entries).
+    let other = ScenarioMatrix::quick()
+        .with_workloads("transformer")
+        .unwrap()
+        .with_devices("t4")
+        .unwrap();
+    let t4_run = other.run_with(&options);
+    assert_eq!(t4_run.cache_stats, CacheStats { hits: 0, misses: 8, evictions: 0 });
+    assert_eq!(store.n_entries(), 16);
+
+    // The original matrix still hits all 8 of its own entries.
+    let warm = m.run_with(&options);
+    assert_eq!(warm.cache_stats, CacheStats { hits: 8, misses: 0, evictions: 0 });
+    assert_eq!(warm.sim_stats.1, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_store_entry_is_re_run_and_repaired() {
+    let dir = tmpdir("corrupt");
+    let store = CellStore::open(&dir).unwrap();
+    let m = ScenarioMatrix::quick().with_workloads("transformer").unwrap();
+    let options = MatrixRunOptions {
+        store: Some(&store),
+        incremental: true,
+        ..Default::default()
+    };
+    let cold = m.run_with(&options);
+
+    // Truncate one committed entry mid-JSON — a crashed writer, a bad
+    // artifact download, cosmic rays. The contract: a cache miss plus
+    // an eviction, never a hard error.
+    let keys = m.cell_keys();
+    let (key, _) = &keys[0];
+    let path = dir.join(format!("{}.json", key.as_hex()));
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(matches!(store.load(key), Lookup::Corrupt));
+
+    let repaired = m.run_with(&options);
+    assert_eq!(repaired.cache_stats, CacheStats { hits: 7, misses: 1, evictions: 1 });
+    let manifest = cache_manifest(&repaired);
+    assert_eq!(manifest.get("store").unwrap().get("evictions").unwrap().as_f64().unwrap(), 1.0);
+
+    // The re-run overwrote the entry in place, and corruption never
+    // leaked into the artifacts.
+    let healthy = m.run_with(&options);
+    assert_eq!(healthy.cache_stats, CacheStats { hits: 8, misses: 0, evictions: 0 });
+    let a = comparison_artifact(&cold);
+    let b = comparison_artifact(&repaired);
+    assert_eq!(a.text, b.text);
+    assert_eq!(a.csv, b.csv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_armed_cli_run_never_touches_the_store() {
+    let base = tmpdir("fault");
+    let store = base.join("store");
+    let out = base.join("out");
+    let status = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "matrix",
+            "--quick",
+            "--workloads",
+            "transformer",
+            "--incremental",
+            "--store",
+            store.to_str().unwrap(),
+            "--inject-fault",
+            "panic:transformer-tf-forward-O0",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning repro");
+    assert_eq!(status.code(), Some(3), "one failed cell exits 3");
+    // Fault drills bypass the store entirely: nothing was persisted,
+    // not even the surviving cells — a drill must never seed the cache.
+    let n = std::fs::read_dir(&store).map(|rd| rd.count()).unwrap_or(0);
+    assert_eq!(n, 0, "fault-armed runs must not write cell entries");
+    let _ = std::fs::remove_dir_all(&base);
+}

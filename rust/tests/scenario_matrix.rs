@@ -1,6 +1,8 @@
 //! Scenario-matrix integration: the quick-mode sweep (the CI gate)
 //! end to end — deterministic enumeration, golden catalog, artifact
-//! layout, and cross-run reproducibility.
+//! layout, and cross-run reproducibility. Incremental replay, the
+//! on-disk cell store, and `--shard`/`--merge` semantics live in
+//! `rust/tests/incremental_matrix.rs`.
 
 use hroofline::device::registry as devices;
 use hroofline::dl::workloads;
