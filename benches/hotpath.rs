@@ -95,6 +95,29 @@ fn main() {
         });
     }
 
+    // the timed path with span tracing + metrics armed: the delta to
+    // profile_step_timed is the whole observability overhead (span
+    // allocation, clock reads, counter increments) — the layer's
+    // "strictly cheap" claim, kept honest by the trajectory gate
+    {
+        let all = all.clone();
+        b.case("profile_step_traced", move || {
+            let spec = GpuSpec::v100();
+            let tracer = hroofline::obs::Tracer::new();
+            let metrics = hroofline::obs::MetricsRegistry::new();
+            let n = {
+                let root = tracer.span("bench");
+                let p = Session::standard(&spec)
+                    .run(&ProfileRequest::new(&all).with_span(&root).with_metrics(&metrics))
+                    .unwrap();
+                p.n_kernels() as u64
+            };
+            black_box(n);
+            black_box(tracer.records().len() as u64);
+            n_inv
+        });
+    }
+
     // ablation: the same session with memoization off and a single
     // worker — the pre-optimization per-entry behaviour
     {

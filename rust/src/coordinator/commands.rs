@@ -25,6 +25,43 @@ fn resolve_devices(p: &Parsed) -> Result<Vec<&'static devices::DeviceEntry>> {
     crate::cli::parse_device_list(p.get("device")).map_err(Into::into)
 }
 
+/// Resolve the `--trace` opt-in (flag value, else `HROOFLINE_TRACE`)
+/// into an armed monotonic tracer plus the JSONL output path. `None`
+/// keeps the whole pipeline on the disabled no-op path.
+fn arm_tracing(p: &Parsed) -> Option<(crate::obs::Tracer, String)> {
+    crate::obs::trace_path(p.get("trace")).map(|path| (crate::obs::Tracer::new(), path))
+}
+
+/// The command's root telemetry span (`run`, tagged with the command
+/// name), or `None` when tracing is off.
+fn root_span(armed: &Option<(crate::obs::Tracer, String)>, cmd: &str) -> Option<crate::obs::Span> {
+    armed.as_ref().map(|(tracer, _)| {
+        let mut span = tracer.span("run");
+        span.set("cmd", cmd);
+        span
+    })
+}
+
+/// Surface an armed trace: write the span JSONL to the `--trace` path
+/// and snapshot the global metrics registry into `<out>/run.metrics.json`.
+/// Callers must drop their root span first (live spans are not
+/// serialized). A no-op when tracing is off, so untraced runs keep the
+/// historical artifact layout exactly.
+fn finish_tracing(armed: &Option<(crate::obs::Tracer, String)>, out_dir: &str) -> Result<()> {
+    let Some((tracer, path)) = armed else { return Ok(()) };
+    let bytes = tracer.write_jsonl(Path::new(path))?;
+    let metrics_path = Path::new(out_dir).join("run.metrics.json");
+    std::fs::write(
+        &metrics_path,
+        crate::obs::MetricsRegistry::global().snapshot().to_json().to_string_pretty(),
+    )?;
+    crate::obs::log::info(format!(
+        "wrote trace {path} ({bytes} bytes) and {}",
+        metrics_path.display()
+    ));
+    Ok(())
+}
+
 /// Artifact-id suffix for a device within a selection: single-device
 /// selections keep the plain ids (so `--device a100` writes the same
 /// file names as the default run, just on another device), and in
@@ -52,9 +89,16 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
     // did-you-mean even in empirical mode (which characterizes the host
     // CPU and does not use the GPU specs).
     let selected = resolve_devices(p)?;
+    let armed = arm_tracing(p);
+    let root = root_span(&armed, "ert");
 
     if mode == "modeled" || mode == "both" {
         for entry in &selected {
+            let mut dev_span = match &root {
+                Some(r) => r.child("characterize"),
+                None => crate::obs::Span::disabled(),
+            };
+            dev_span.set("device", entry.name);
             let spec = entry.spec();
             // The modeled sweep fans its working-set × intensity grid
             // across the machine's cores via `exec::parallel_map` (see
@@ -81,6 +125,10 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
         // Deliberately serial: the empirical driver measures wall-clock
         // bandwidth on real silicon, and concurrent sweeps would contend
         // for the very cache/memory hierarchy being characterized.
+        let _emp_span = match &root {
+            Some(r) => r.child("empirical"),
+            None => crate::obs::Span::disabled(),
+        };
         println!("== empirical host CPU sweep (this machine) ==");
         for result in empirical::characterize(&config) {
             let peak = result.peak_gflops();
@@ -114,6 +162,8 @@ pub fn cmd_ert(p: &Parsed) -> Result<()> {
         }
         println!("wrote {out_dir}/empirical_*.json");
     }
+    drop(root);
+    finish_tracing(&armed, &out_dir)?;
     Ok(())
 }
 
@@ -144,11 +194,11 @@ fn cmd_profile_from_csv(p: &Parsed, csv_path: &str) -> Result<()> {
     let profile = if p.has("lenient") {
         let (profile, diagnostics) = export::from_csv_lenient(&text, &spec)?;
         if !diagnostics.is_empty() {
-            eprintln!(
+            crate::obs::log::warn(format!(
                 "skipped {} malformed row(s) in '{csv_path}':\n{}",
                 diagnostics.total(),
                 diagnostics.summary()
-            );
+            ));
         }
         profile
     } else {
@@ -207,6 +257,9 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
 
     let selected = resolve_devices(p)?;
+    let armed = arm_tracing(p);
+    let root = root_span(&armed, "profile");
+    let obs_metrics = armed.as_ref().map(|_| crate::obs::MetricsRegistry::global());
     let graph = deepcam(&cfg);
     let phases: Vec<(Phase, &str)> = match p.get("phase") {
         "forward" => vec![(Phase::Forward, "forward")],
@@ -246,8 +299,17 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
             if kernel_trace.is_empty() {
                 return Ok((label, None));
             }
+            let mut phase_span = match &root {
+                Some(r) => r.child("phase"),
+                None => crate::obs::Span::disabled(),
+            };
+            phase_span.set("label", label);
+            let mut req = ProfileRequest::new(kernel_trace).with_span(&phase_span);
+            if let Some(m) = obs_metrics {
+                req = req.with_metrics(m);
+            }
             let profile = session
-                .run(&ProfileRequest::new(kernel_trace))
+                .run(&req)
                 .map_err(|e| crate::exec::TaskError::fatal(e.to_string()))?;
             let model = RooflineModel::from_profile(&spec, &profile);
             let title =
@@ -365,6 +427,8 @@ pub fn cmd_profile(p: &Parsed) -> Result<()> {
             println!("wrote {out_dir}/{}.{{txt,json}}", step_artifact.id);
         }
     }
+    drop(root);
+    finish_tracing(&armed, &out_dir)?;
     Ok(())
 }
 
@@ -435,6 +499,8 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     let out_dir = p.get("out").to_string();
     let scenario_dir = Path::new(&out_dir).join("scenarios");
     std::fs::create_dir_all(&scenario_dir)?;
+    let armed = arm_tracing(p);
+    let root = root_span(&armed, "matrix");
 
     // Failure budget: --fail-fast stops at the first failure;
     // --max-failures N tolerates N and stops at the N+1st (the default
@@ -493,14 +559,22 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
         incremental: p.has("incremental"),
         merge_only: !merge_dirs.is_empty(),
         shard,
+        span: root.as_ref(),
+        metrics: armed.as_ref().map(|_| crate::obs::MetricsRegistry::global()),
     };
 
     let run = matrix.run_with(&options);
 
     let mut written = 0usize;
-    for result in &run.results {
-        result.to_artifact().write_all(&scenario_dir)?;
-        written += 1;
+    {
+        let _render_span = match &root {
+            Some(r) => r.child("render"),
+            None => crate::obs::Span::disabled(),
+        };
+        for result in &run.results {
+            result.to_artifact().write_all(&scenario_dir)?;
+            written += 1;
+        }
     }
     let comparison = crate::scenario::comparison_artifact(&run);
     comparison.write_all(Path::new(&out_dir))?;
@@ -544,6 +618,8 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
          under {out_dir}/",
         scenario_dir.display()
     );
+    drop(root);
+    finish_tracing(&armed, &out_dir)?;
     if run.failures.is_empty() {
         return Ok(0);
     }
@@ -551,13 +627,15 @@ pub fn cmd_matrix(p: &Parsed) -> Result<i32> {
     // to the comparison report and signal via the exit code.
     let manifest_path = Path::new(&out_dir).join("matrix.errors.json");
     std::fs::write(&manifest_path, crate::scenario::errors_manifest(&run).to_string_pretty())?;
-    eprintln!(
+    // Error level: the degraded-run summary must survive `--quiet` (CI
+    // greps this message verbatim).
+    crate::obs::log::error(format!(
         "{} of {} cells failed:\n{}wrote {}",
         run.failures.len(),
         run.n_cells(),
         crate::scenario::failure_table(&run.failures).render(),
         manifest_path.display()
-    );
+    ));
     Ok(EXIT_MATRIX_CELLS_FAILED)
 }
 
@@ -665,6 +743,155 @@ pub fn cmd_train(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// `repro trace report PATH` — digest a `hroofline-trace-v1` JSONL log:
+/// hottest span names by self time, the per-cell breakdown for matrix
+/// runs, the span tree with self times, and a wall-clock attribution
+/// footer (root spans should cover ~all of the trace's wall interval).
+pub fn cmd_trace(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: repro trace report <trace.jsonl>";
+    let Some(sub) = args.first() else {
+        anyhow::bail!("missing trace subcommand\n{USAGE}");
+    };
+    if sub != "report" {
+        anyhow::bail!("unknown trace subcommand '{sub}'\n{USAGE}");
+    }
+    let [path] = &args[1..] else {
+        anyhow::bail!("'trace report' takes exactly one JSONL path\n{USAGE}");
+    };
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading '{path}'"))?;
+    let trace = crate::obs::Trace::parse_jsonl(&text)
+        .with_context(|| format!("parsing '{path}'"))?;
+    trace.validate().with_context(|| format!("validating '{path}'"))?;
+    print!("{}", render_trace_report(&trace, path));
+    Ok(())
+}
+
+/// Render the `trace report` text. A pure function of the parsed trace
+/// so tests can pin its shape on a fixed-clock tracer.
+fn render_trace_report(trace: &crate::obs::Trace, source: &str) -> String {
+    use std::collections::BTreeMap;
+    // Durations are only comparable within one clock kind; label them.
+    let unit = if trace.clock == "fixed-tick" { "ticks" } else { "us" };
+    let wall = trace.wall_us();
+    let self_by_id = trace.self_us();
+    let pct = |part: u64| {
+        if wall == 0 {
+            "100.0".to_string()
+        } else {
+            format!("{:.1}", part as f64 / wall as f64 * 100.0)
+        }
+    };
+    let mut out = format!(
+        "== trace report: {source} ==\nclock {} | {} span(s) | wall {wall} {unit}\n",
+        trace.clock,
+        trace.spans.len()
+    );
+
+    // Hottest span names, ranked by aggregate self time (time spent in
+    // a span minus its direct children — where the run actually went).
+    struct Agg {
+        count: u64,
+        total: u64,
+        self_t: u64,
+    }
+    let mut by_name: BTreeMap<&str, Agg> = BTreeMap::new();
+    for s in &trace.spans {
+        let e = by_name.entry(s.name.as_str()).or_insert(Agg { count: 0, total: 0, self_t: 0 });
+        e.count += 1;
+        e.total += s.dur_us;
+        e.self_t += self_by_id.get(&s.id).copied().unwrap_or(0);
+    }
+    let mut hottest: Vec<(&str, Agg)> = by_name.into_iter().collect();
+    hottest.sort_by(|a, b| b.1.self_t.cmp(&a.1.self_t).then(a.0.cmp(b.0)));
+    let mut t = Table::new(&["span", "count", "total", "self", "self % of wall"]);
+    for (name, a) in &hottest {
+        t.row(&[
+            name.to_string(),
+            a.count.to_string(),
+            a.total.to_string(),
+            a.self_t.to_string(),
+            pct(a.self_t),
+        ]);
+    }
+    out.push_str(&format!("\nhottest spans (by self {unit}):\n{}", t.render()));
+
+    // Matrix runs: one row per `cell` span, hottest first.
+    let mut cells: Vec<&crate::obs::SpanRecord> =
+        trace.spans.iter().filter(|s| s.name == "cell").collect();
+    if !cells.is_empty() {
+        cells.sort_by(|a, b| b.dur_us.cmp(&a.dur_us).then(a.id.cmp(&b.id)));
+        let mut t = Table::new(&["cell", "outcome", "attempt", "dur", "% of wall"]);
+        for s in &cells {
+            t.row(&[
+                s.field("label").unwrap_or("?").to_string(),
+                s.field("outcome").unwrap_or("?").to_string(),
+                s.field("attempt").unwrap_or("?").to_string(),
+                s.dur_us.to_string(),
+                pct(s.dur_us),
+            ]);
+        }
+        out.push_str(&format!("\ncells ({} total, by dur {unit}):\n{}", cells.len(), t.render()));
+    }
+
+    // The span tree, names merged per level, heaviest subtree first.
+    #[derive(Default)]
+    struct Node {
+        count: u64,
+        dur: u64,
+        self_t: u64,
+        children: BTreeMap<String, Node>,
+    }
+    fn insert(
+        node: &mut Node,
+        span: &crate::obs::SpanRecord,
+        by_parent: &BTreeMap<u64, Vec<&crate::obs::SpanRecord>>,
+        self_by_id: &BTreeMap<u64, u64>,
+    ) {
+        let child = node.children.entry(span.name.clone()).or_default();
+        child.count += 1;
+        child.dur += span.dur_us;
+        child.self_t += self_by_id.get(&span.id).copied().unwrap_or(0);
+        for kid in by_parent.get(&span.id).into_iter().flatten() {
+            insert(child, kid, by_parent, self_by_id);
+        }
+    }
+    fn render_nodes(node: &Node, depth: usize, unit: &str, out: &mut String) {
+        let mut kids: Vec<(&String, &Node)> = node.children.iter().collect();
+        kids.sort_by(|a, b| b.1.dur.cmp(&a.1.dur).then(a.0.cmp(b.0)));
+        for (name, kid) in kids {
+            out.push_str(&format!(
+                "{}{name} — {} span(s), total {} {unit}, self {} {unit}\n",
+                "  ".repeat(depth),
+                kid.count,
+                kid.dur,
+                kid.self_t
+            ));
+            render_nodes(kid, depth + 1, unit, out);
+        }
+    }
+    let mut by_parent: BTreeMap<u64, Vec<&crate::obs::SpanRecord>> = BTreeMap::new();
+    for s in &trace.spans {
+        if let Some(p) = s.parent {
+            by_parent.entry(p).or_default().push(s);
+        }
+    }
+    let mut tree = Node::default();
+    for root in trace.roots() {
+        insert(&mut tree, root, &by_parent, &self_by_id);
+    }
+    out.push_str("\nspan tree:\n");
+    render_nodes(&tree, 0, unit, &mut out);
+
+    // Attribution: how much of the trace's wall interval the root spans
+    // cover — the figure of merit for instrumentation completeness.
+    let covered: u64 = trace.roots().iter().map(|s| s.dur_us).sum();
+    out.push_str(&format!(
+        "\nattribution: {covered} of {wall} wall {unit} covered by root spans ({}%)\n",
+        pct(covered)
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -691,6 +918,7 @@ mod tests {
             .flag("from-csv", "", "h")
             .switch("lenient", "h")
             .flag("out", out, "h")
+            .flag("trace", "", "h")
     }
 
     #[test]
@@ -785,6 +1013,7 @@ mod tests {
             .flag("store", ".hroofline-cache", "h")
             .flag("shard", "", "h")
             .flag("merge", "", "h")
+            .flag("trace", "", "h")
             .switch("fail-fast", "h")
             .switch("quick", "h")
             .switch("incremental", "h")
@@ -1111,6 +1340,7 @@ mod tests {
             .flag("mode", "modeled", "h")
             .flag("device", "v100-sxm2-16gb", "h")
             .flag("out", dir.to_str().unwrap(), "h")
+            .flag("trace", "", "h")
             .switch("quick", "h");
         cmd_ert(&parsed(cmd, &["--quick"])).unwrap();
         assert!(dir.join("fig1.svg").exists());
@@ -1126,6 +1356,7 @@ mod tests {
             .flag("mode", "modeled", "h")
             .flag("device", "v100-sxm2-16gb", "h")
             .flag("out", "/tmp/x", "h")
+            .flag("trace", "", "h")
             .switch("quick", "h");
         let err = cmd_ert(&parsed(cmd, &["--mode", "empirical", "--device", "t44"]))
             .unwrap_err();
@@ -1141,6 +1372,7 @@ mod tests {
             .flag("mode", "modeled", "h")
             .flag("device", "v100-sxm2-16gb", "h")
             .flag("out", dir.to_str().unwrap(), "h")
+            .flag("trace", "", "h")
             .switch("quick", "h");
         cmd_ert(&parsed(cmd, &["--quick", "--device", "t4"])).unwrap();
         let txt = std::fs::read_to_string(dir.join("fig1.txt")).unwrap();
@@ -1156,6 +1388,7 @@ mod tests {
             .flag("mode", "modeled", "h")
             .flag("device", "default", "h")
             .flag("out", dir.to_str().unwrap(), "h")
+            .flag("trace", "", "h")
             .switch("quick", "h");
         cmd_ert(&parsed(cmd, &["--quick", "--device", "v100,t4"])).unwrap();
         // Default device stays plain, the T4 gets the @short tag.
@@ -1164,5 +1397,76 @@ mod tests {
         let t4 = std::fs::read_to_string(dir.join("fig1@t4.txt")).unwrap();
         assert!(t4.contains("T4-PCIE-16GB"), "{t4}");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn matrix_trace_writes_versioned_spans_and_metrics_snapshot() {
+        let dir =
+            std::env::temp_dir().join(format!("hroofline-matrixtrace-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let trace_path = dir.join("run.trace.jsonl");
+        let cmd = matrix_cmd(dir.to_str().unwrap());
+        let code = cmd_matrix(&parsed(
+            cmd,
+            &["--quick", "--workloads", "deepcam-lite", "--trace", trace_path.to_str().unwrap()],
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+        // The trace is a parseable, well-formed hroofline-trace-v1 log
+        // with one `cell` span per enumerated cell (1 workload x 2
+        // frameworks x 2 phases x 2 policies = 8).
+        let text = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(text.starts_with("{\"clock\":\"monotonic-us\""), "{text}");
+        let trace = crate::obs::Trace::parse_jsonl(&text).unwrap();
+        trace.validate().unwrap();
+        let cells: Vec<_> = trace.spans.iter().filter(|s| s.name == "cell").collect();
+        assert_eq!(cells.len(), 8, "{text}");
+        assert!(cells.iter().all(|s| s.field("outcome") == Some("ran")), "{text}");
+        // The metrics snapshot landed next to the artifacts. Counters
+        // come from the process-global registry (shared with parallel
+        // tests), so only lower-bound them.
+        let metrics = std::fs::read_to_string(dir.join("run.metrics.json")).unwrap();
+        assert!(metrics.contains("hroofline-metrics-v1"), "{metrics}");
+        let doc = Json::parse(&metrics).unwrap();
+        let ran =
+            doc.get("counters").unwrap().get("matrix.cells.ran").unwrap().as_usize().unwrap();
+        assert!(ran >= 8, "{metrics}");
+        // And the reporter digests the written log end to end.
+        cmd_trace(&["report".to_string(), trace_path.to_str().unwrap().to_string()]).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_report_rejects_bad_usage() {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect::<Vec<String>>();
+        let msg = |args: &[&str]| format!("{:#}", cmd_trace(&s(args)).unwrap_err());
+        assert!(msg(&[]).contains("usage:"), "{}", msg(&[]));
+        assert!(msg(&["digest", "x"]).contains("unknown trace subcommand"));
+        assert!(msg(&["report"]).contains("exactly one"));
+        assert!(msg(&["report", "a", "b"]).contains("exactly one"));
+        assert!(msg(&["report", "/nonexistent/trace.jsonl"]).contains("reading"));
+    }
+
+    #[test]
+    fn trace_report_renders_cells_and_attribution() {
+        // A fixed-tick tracer makes the report fully deterministic:
+        // root [0..3] with one cell child [1..2], wall 3 ticks, all of
+        // it covered by the root span.
+        let tracer = crate::obs::Tracer::fixed();
+        {
+            let root = tracer.span("run");
+            let mut cell = root.child("cell");
+            cell.set("label", "cell#0:deepcam-lite-pt-forward-O1");
+            cell.set("attempt", "1");
+            cell.set("outcome", "ran");
+        }
+        let trace = crate::obs::Trace::parse_jsonl(&tracer.to_jsonl()).unwrap();
+        let report = render_trace_report(&trace, "t.jsonl");
+        assert!(report.contains("clock fixed-tick"), "{report}");
+        assert!(report.contains("2 span(s)"), "{report}");
+        assert!(report.contains("cell#0:deepcam-lite-pt-forward-O1"), "{report}");
+        assert!(report.contains("span tree:"), "{report}");
+        assert!(report.contains("attribution: 3 of 3 wall ticks"), "{report}");
+        assert!(report.contains("(100.0%)"), "{report}");
     }
 }

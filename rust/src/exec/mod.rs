@@ -19,7 +19,10 @@ pub mod fault;
 pub mod supervise;
 
 pub use fault::{Fault, FaultInjector, FaultPlan};
-pub use supervise::{parallel_try_map, ExecError, RetryPolicy, SupervisePolicy, TaskError};
+pub use supervise::{
+    parallel_try_map, parallel_try_map_observed, ExecError, RetryPolicy, SupervisePolicy,
+    TaskError,
+};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};

@@ -218,13 +218,15 @@ fn payload_string(payload: Box<dyn std::any::Any + Send>) -> String {
 
 /// One item end to end: attempts loop + panic capture + deadline
 /// classification. `overdue` is pre-set by the watchdog when the item
-/// went over its deadline mid-flight.
+/// went over its deadline mid-flight. Returns the result plus how many
+/// attempts actually ran (the error variants embed it too; the success
+/// path needs it for the `exec.retries` telemetry counter).
 fn run_attempts<T, R, F>(
     item: &T,
     policy: &SupervisePolicy,
     overdue: &AtomicBool,
     f: &F,
-) -> Result<R, ExecError>
+) -> (Result<R, ExecError>, u32)
 where
     F: Fn(&T) -> Result<R, TaskError>,
 {
@@ -242,9 +244,9 @@ where
                 if over(elapsed) {
                     let deadline_s =
                         policy.soft_deadline.unwrap_or(elapsed).as_secs_f64();
-                    return Err(ExecError::TimedOut { elapsed_s, deadline_s });
+                    return (Err(ExecError::TimedOut { elapsed_s, deadline_s }), attempt);
                 }
-                return Ok(value);
+                return (Ok(value), attempt);
             }
             Ok(Err(task_err)) => {
                 if task_err.transient && attempt < policy.retry.max_attempts && !over(elapsed) {
@@ -255,20 +257,43 @@ where
                     attempt += 1;
                     continue;
                 }
-                return Err(ExecError::Failed {
-                    error: task_err.message,
-                    attempts: attempt,
-                    elapsed_s,
-                });
+                return (
+                    Err(ExecError::Failed {
+                        error: task_err.message,
+                        attempts: attempt,
+                        elapsed_s,
+                    }),
+                    attempt,
+                );
             }
             Err(payload) => {
-                return Err(ExecError::Panicked {
-                    payload: payload_string(payload),
-                    attempts: attempt,
-                    elapsed_s,
-                });
+                return (
+                    Err(ExecError::Panicked {
+                        payload: payload_string(payload),
+                        attempts: attempt,
+                        elapsed_s,
+                    }),
+                    attempt,
+                );
             }
         }
+    }
+}
+
+/// Record one completed item's scheduling telemetry: how long it sat
+/// queued before a worker claimed it, how long it ran, and any attempts
+/// beyond the first.
+fn record_item(
+    metrics: Option<&crate::obs::MetricsRegistry>,
+    queue_wait: Duration,
+    run: Duration,
+    attempts: u32,
+) {
+    let Some(m) = metrics else { return };
+    m.observe_s("exec.queue_wait_s", queue_wait.as_secs_f64());
+    m.observe_s("exec.run_s", run.as_secs_f64());
+    if attempts > 1 {
+        m.add("exec.retries", u64::from(attempts - 1));
     }
 }
 
@@ -292,11 +317,34 @@ where
     R: Send,
     F: Fn(&T) -> Result<R, TaskError> + Sync,
 {
+    parallel_try_map_observed(items, threads, policy, None, f)
+}
+
+/// [`parallel_try_map`] with scheduling telemetry: when a
+/// [`crate::obs::MetricsRegistry`] is supplied, every executed item
+/// records its queue wait (fan-out start → worker claim) and run time
+/// into the `exec.queue_wait_s` / `exec.run_s` histograms, and attempts
+/// beyond the first accumulate into the `exec.retries` counter. With
+/// `metrics = None` this *is* `parallel_try_map` — the plain entry
+/// point is a thin wrapper.
+pub fn parallel_try_map_observed<T, R, F>(
+    items: Vec<T>,
+    threads: usize,
+    policy: &SupervisePolicy,
+    metrics: Option<&crate::obs::MetricsRegistry>,
+    f: F,
+) -> Vec<Result<R, ExecError>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&T) -> Result<R, TaskError> + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
+    let fan_out_start = Instant::now();
 
     if threads == 1 {
         // Serial path: deterministic scheduling (items run in order, so
@@ -312,7 +360,10 @@ where
                     return Err(ExecError::Skipped { after_failures: failures });
                 }
                 overdue.store(false, Ordering::SeqCst);
-                let out = run_attempts(item, policy, &overdue, &f);
+                let queue_wait = fan_out_start.elapsed();
+                let t0 = Instant::now();
+                let (out, attempts) = run_attempts(item, policy, &overdue, &f);
+                record_item(metrics, queue_wait, t0.elapsed(), attempts);
                 if out.is_err() {
                     failures += 1;
                 }
@@ -373,9 +424,12 @@ where
                 {
                     Err(ExecError::Skipped { after_failures: failed_so_far })
                 } else {
-                    *starts[i].lock().unwrap() = Some(Instant::now());
-                    let out = run_attempts(&items[i], policy, &overdue[i], &f);
+                    let queue_wait = fan_out_start.elapsed();
+                    let t0 = Instant::now();
+                    *starts[i].lock().unwrap() = Some(t0);
+                    let (out, attempts) = run_attempts(&items[i], policy, &overdue[i], &f);
                     *starts[i].lock().unwrap() = None;
+                    record_item(metrics, queue_wait, t0.elapsed(), attempts);
                     out
                 };
                 if out.is_err() {
@@ -571,6 +625,37 @@ mod tests {
         assert_eq!(p.backoff_for(3), Duration::from_millis(35), "capped");
         assert_eq!(p.backoff_for(7), Duration::from_millis(35), "capped");
         assert_eq!(RetryPolicy::none().backoff_for(4), Duration::ZERO);
+    }
+
+    #[test]
+    fn observed_fanout_records_waits_runs_and_retries() {
+        let m = crate::obs::MetricsRegistry::new();
+        let seen = counts();
+        let policy = SupervisePolicy { retry: RetryPolicy::attempts(3), ..Default::default() };
+        for threads in [1, 4] {
+            let out = parallel_try_map_observed((0..8i64).collect(), threads, &policy, Some(&m), |&x| {
+                let mut seen = seen.lock().unwrap();
+                let n = seen.entry(x).or_insert(0);
+                *n += 1;
+                // Item 2 fails once per sweep, then succeeds on retry.
+                if x == 2 && *n % 2 == 1 {
+                    Err(TaskError::transient("flaky"))
+                } else {
+                    Ok(x)
+                }
+            });
+            assert!(out.iter().all(|r| r.is_ok()), "threads={threads}");
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("exec.retries"), 2, "one retry per sweep");
+        assert_eq!(snap.histograms["exec.run_s"].count, 16, "every item observed");
+        assert_eq!(snap.histograms["exec.queue_wait_s"].count, 16);
+
+        // The plain wrapper records nothing and behaves identically.
+        let out = parallel_try_map((0..8i64).collect(), 4, &SupervisePolicy::default(), |&x| {
+            Ok::<i64, TaskError>(x * 2)
+        });
+        assert_eq!(out.len(), 8);
     }
 
     #[test]

@@ -43,7 +43,11 @@
 //! Fan-outs that must survive bad cells run through the panic-safe
 //! supervised substrate ([`exec::supervise`]) with deterministic fault
 //! injection ([`exec::fault`]) for drills — a failing matrix cell or
-//! kernel simulation degrades that cell, not the process.
+//! kernel simulation degrades that cell, not the process. The [`obs`]
+//! layer (structured [`obs::trace`] spans, an [`obs::metrics`]
+//! registry, leveled [`obs::log`]) threads run telemetry through every
+//! execution layer behind `--trace`/`HROOFLINE_TRACE`, strictly
+//! additively: tracing on or off, artifact bytes are identical.
 //!
 //! ## Quickstart
 //!
@@ -72,6 +76,7 @@ pub mod device;
 pub mod dl;
 pub mod ert;
 pub mod exec;
+pub mod obs;
 pub mod profiler;
 pub mod prop;
 pub mod report;

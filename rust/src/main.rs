@@ -17,6 +17,15 @@
 //!   train       end-to-end: run the AOT-compiled DeepCAM-lite training
 //!               loop through PJRT, logging the loss curve
 //!   bench-diff  gate the bench trajectory against a committed baseline
+//!   trace       digest a --trace run log: `repro trace report <jsonl>`
+//!
+//! Global stderr verbosity (any command): `--quiet`/`-q` shows errors
+//! only, `-v`/`--verbose` adds debug detail; `HROOFLINE_LOG` sets the
+//! ambient default (an explicit flag beats the env var). The `--trace
+//! PATH` flag on `ert`/`profile`/`matrix` (or `HROOFLINE_TRACE`) arms
+//! span tracing: the run writes a `hroofline-trace-v1` JSONL log to
+//! PATH plus a `run.metrics.json` counter snapshot next to the
+//! artifacts, without perturbing any artifact bytes.
 //!
 //! Exit codes:
 //!   0  success
@@ -28,9 +37,45 @@
 //! Run `repro <cmd> --help` for flags.
 
 use hroofline::cli::{App, Cmd};
+use hroofline::obs::log::{self, Level};
 
 fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // Peel the global verbosity flags off before command parsing so
+    // they work uniformly on every subcommand, then set the level:
+    // binary default Warn < HROOFLINE_LOG < explicit flag.
+    let mut quiet = false;
+    let mut verbose = false;
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| match a.as_str() {
+            "--quiet" | "-q" => {
+                quiet = true;
+                false
+            }
+            "--verbose" | "-v" => {
+                verbose = true;
+                false
+            }
+            _ => true,
+        })
+        .collect();
+    log::init(Level::Warn);
+    if quiet {
+        log::set_level(Level::Error);
+    }
+    if verbose {
+        log::set_level(Level::Debug);
+    }
+    // `trace report <path>` takes a positional subcommand + path, which
+    // the flag-only Cmd grammar can't express — route it directly. The
+    // Cmd registered below only serves the usage listing.
+    if argv.first().is_some_and(|a| a == "trace") {
+        if let Err(e) = hroofline::coordinator::cmd_trace(&argv[1..]) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let app = App::new("repro", "Hierarchical Roofline analysis for deep learning (cs.DC 2020)")
         .command(
             Cmd::new("ert", "Machine characterization sweeps (Fig. 1, Tab. I, Fig. 2)")
@@ -41,6 +86,7 @@ fn main() {
                     "comma-separated registry devices, 'all', or 'default' (the V100 testbed)",
                 )
                 .flag("out", "out/ert", "output directory")
+                .flag("trace", "", "write a span trace (hroofline-trace-v1 JSONL) to this path")
                 .switch("quick", "reduced sweep grid"),
         )
         .command(Cmd::new("metrics", "List the Nsight-analog metric registry (Tab. II)"))
@@ -61,7 +107,8 @@ fn main() {
                     "re-ingest an exported counter CSV instead of simulating",
                 )
                 .switch("lenient", "with --from-csv: skip and report malformed rows")
-                .flag("out", "out/profile", "output directory"),
+                .flag("out", "out/profile", "output directory")
+                .flag("trace", "", "write a span trace (hroofline-trace-v1 JSONL) to this path"),
         )
         .command(
             Cmd::new(
@@ -97,6 +144,7 @@ fn main() {
                 "",
                 "comma-separated shard store dirs: replay their union into one report",
             )
+            .flag("trace", "", "write a span trace (hroofline-trace-v1 JSONL) to this path")
             .switch("fail-fast", "stop the sweep at the first failed cell")
             .switch("quick", "reduced matrix at smoke scale (the CI gate)")
             .switch(
@@ -126,7 +174,9 @@ fn main() {
                 .flag_required("baseline", "committed baseline BENCH_<group>.json")
                 .flag_required("fresh", "freshly generated BENCH_<group>.json")
                 .flag("max-regress", "0.25", "allowed fractional ns/iter slowdown"),
-        );
+        )
+        // Parsed by the early intercept above; listed here for usage.
+        .command(Cmd::new("trace", "Digest a span trace: repro trace report <trace.jsonl>"));
 
     let (cmd, parsed) = match app.dispatch(&argv) {
         Ok(x) => x,

@@ -1,0 +1,125 @@
+//! Leveled stderr logging: the controllable replacement for the bare
+//! `eprintln!` chatter the coordinator used to emit.
+//!
+//! The level is a process-wide atomic. The **library default is
+//! [`Level::Silent`]** so `cargo test` output stays clean; the `repro`
+//! binary raises it at startup ([`init`]): [`Level::Warn`] by default,
+//! overridden by the `HROOFLINE_LOG` environment variable
+//! (`silent|error|warn|info|debug`), overridden in turn by the
+//! `--quiet` (→ [`Level::Error`]) and `-v`/`--verbose`
+//! (→ [`Level::Debug`]) global flags — an explicit flag beats an
+//! ambient env var. Messages print verbatim (no prefix), so existing
+//! grep-based CI gates keep matching.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severities, in ascending verbosity. A message prints when its
+/// level is at or below the configured level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Nothing prints (the library default — test-silent).
+    Silent = 0,
+    /// Failures the user must see even under `--quiet`.
+    Error = 1,
+    /// Degraded-but-continuing conditions (the binary's default).
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Silent as u8);
+
+/// Set the process-wide log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide log level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Silent,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Whether a message at `at` would print.
+pub fn enabled(at: Level) -> bool {
+    at != Level::Silent && at <= level()
+}
+
+/// Parse a level name (`HROOFLINE_LOG` syntax). `quiet` is accepted as
+/// an alias for `error` to match the `--quiet` flag.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "silent" | "off" | "none" => Some(Level::Silent),
+        "error" | "quiet" => Some(Level::Error),
+        "warn" | "warning" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" | "verbose" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// Binary startup: set `default`, letting `HROOFLINE_LOG` override it.
+/// Returns the level that took effect (before any `--quiet`/`-v`).
+pub fn init(default: Level) -> Level {
+    let level = std::env::var("HROOFLINE_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(default);
+    set_level(level);
+    level
+}
+
+fn emit(at: Level, msg: &str) {
+    if enabled(at) {
+        eprintln!("{msg}");
+    }
+}
+
+/// Print at [`Level::Error`] (survives `--quiet`).
+pub fn error(msg: impl AsRef<str>) {
+    emit(Level::Error, msg.as_ref());
+}
+
+/// Print at [`Level::Warn`].
+pub fn warn(msg: impl AsRef<str>) {
+    emit(Level::Warn, msg.as_ref());
+}
+
+/// Print at [`Level::Info`].
+pub fn info(msg: impl AsRef<str>) {
+    emit(Level::Info, msg.as_ref());
+}
+
+/// Print at [`Level::Debug`] (needs `-v`).
+pub fn debug(msg: impl AsRef<str>) {
+    emit(Level::Debug, msg.as_ref());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the level is process-global, so this single test covers all
+    // the threshold arithmetic without racing parallel test threads
+    // against a mutated level.
+    #[test]
+    fn threshold_logic_and_parsing() {
+        assert_eq!(level(), Level::Silent, "library default is silent");
+        assert!(!enabled(Level::Error), "silent mutes even errors");
+        assert!(!enabled(Level::Silent), "Silent is never an emit level");
+
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("WARNING"), Some(Level::Warn));
+        assert_eq!(parse_level("quiet"), Some(Level::Error));
+        assert_eq!(parse_level("verbose"), Some(Level::Debug));
+        assert_eq!(parse_level("off"), Some(Level::Silent));
+        assert_eq!(parse_level("nope"), None);
+
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Debug);
+    }
+}

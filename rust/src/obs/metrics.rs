@@ -1,0 +1,307 @@
+//! Named counters and fixed-bucket duration histograms, snapshotted
+//! into `run.metrics.json`.
+//!
+//! A [`MetricsRegistry`] is instantiable — the scenario matrix records
+//! each run's cache traffic into a run-local registry (so parallel
+//! tests never cross-pollinate) and merges it into the caller's
+//! registry afterwards — while [`MetricsRegistry::global`] gives the
+//! CLI one process-wide sink that also collects cross-cutting counters
+//! like bytes-per-artifact-lane from [`crate::report::Artifact`].
+//!
+//! Counter catalog (the README "Observability" section keeps the
+//! user-facing copy of this list):
+//!
+//! | counter | incremented by |
+//! |---|---|
+//! | `store.hits` / `store.misses` / `store.evictions` | matrix cell-store probes |
+//! | `store.bytes_written` | committed cell-store entries |
+//! | `matrix.cells.replayed` / `matrix.cells.ran` / `matrix.cells.failed` | matrix cell outcomes |
+//! | `sim.kernels.simulated` / `sim.kernels.deduped` | session baseline dedup |
+//! | `exec.retries` | supervised attempts beyond the first |
+//! | `artifact.bytes.<lane>` | [`crate::report::Artifact::write_all`] |
+//!
+//! Histograms (`exec.queue_wait_s`, `exec.run_s`) use the fixed
+//! log-spaced bounds in [`DURATION_BUCKETS_S`] plus an overflow bucket,
+//! so snapshots from different runs merge bucket-for-bucket.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Snapshot-format version, stamped into `run.metrics.json`.
+pub const METRICS_SCHEMA: &str = "hroofline-metrics-v1";
+
+/// Upper bounds (seconds) of the duration histogram buckets; every
+/// histogram gets one extra overflow bucket on top (serialized with a
+/// `null` bound, JSON's spelling of +inf).
+pub const DURATION_BUCKETS_S: [f64; 7] = [1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 60.0];
+
+const N_BUCKETS: usize = DURATION_BUCKETS_S.len() + 1;
+
+#[derive(Clone, Debug, Default)]
+struct Hist {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum_s: f64,
+}
+
+impl Hist {
+    fn observe(&mut self, seconds: f64) {
+        let idx = DURATION_BUCKETS_S
+            .iter()
+            .position(|&le| seconds <= le)
+            .unwrap_or(N_BUCKETS - 1);
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum_s += seconds.max(0.0);
+    }
+
+    fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Hist>,
+}
+
+/// A thread-safe sink of named counters and duration histograms.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The process-wide registry. Library code takes a registry by
+    /// reference; only the `repro` binary (and cross-cutting sinks like
+    /// artifact byte counters) reach for the global.
+    pub fn global() -> &'static MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::new)
+    }
+
+    /// Add `n` to a counter (creating it at 0).
+    pub fn add(&self, name: &str, n: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Increment a counter by 1.
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Record one duration observation into a histogram.
+    pub fn observe_s(&self, name: &str, seconds: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.histograms.entry(name.to_string()).or_default().observe(seconds);
+    }
+
+    /// Current value of a counter (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Fold this registry's contents into `other` (counters add,
+    /// histograms merge bucket-for-bucket). Self is left untouched.
+    pub fn merge_into(&self, other: &MetricsRegistry) {
+        if std::ptr::eq(self, other) {
+            return;
+        }
+        let inner = self.inner.lock().unwrap();
+        let mut dst = other.inner.lock().unwrap();
+        for (k, v) in &inner.counters {
+            *dst.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &inner.histograms {
+            dst.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// An immutable copy of the current state.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: inner.counters.clone(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, h)| {
+                    let buckets = DURATION_BUCKETS_S
+                        .iter()
+                        .copied()
+                        .chain([f64::INFINITY])
+                        .zip(h.counts.iter().copied())
+                        .collect();
+                    (
+                        k.clone(),
+                        HistogramSnapshot { count: h.count, sum_s: h.sum_s, buckets },
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A frozen histogram: total count, summed seconds, and per-bucket
+/// counts keyed by upper bound (the last bound is `+inf`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_s: f64,
+    pub buckets: Vec<(f64, u64)>,
+}
+
+/// A frozen registry, as embedded in [`crate::scenario::MatrixRun`] and
+/// serialized to `run.metrics.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value at snapshot time (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.histograms.is_empty()
+    }
+
+    /// The `run.metrics.json` document ([`METRICS_SCHEMA`]). Overflow
+    /// bucket bounds serialize as `null` (JSON has no infinity).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    let buckets = h.buckets.iter().map(|&(le, n)| {
+                        Json::obj(vec![("le_s", Json::num(le)), ("n", Json::num(n as f64))])
+                    });
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("buckets", Json::arr(buckets)),
+                            ("count", Json::num(h.count as f64)),
+                            ("sum_s", Json::num(h.sum_s)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("histograms", histograms),
+            ("schema", Json::str(METRICS_SCHEMA)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let m = MetricsRegistry::new();
+        assert_eq!(m.counter("store.hits"), 0);
+        m.incr("store.hits");
+        m.add("store.hits", 4);
+        assert_eq!(m.counter("store.hits"), 5);
+        assert_eq!(m.snapshot().counter("store.hits"), 5);
+        assert_eq!(m.snapshot().counter("store.misses"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_fixed_and_cumulative_by_merge() {
+        let m = MetricsRegistry::new();
+        m.observe_s("exec.run_s", 5e-5); // first bucket (<= 1e-4)
+        m.observe_s("exec.run_s", 0.5); // <= 1.0
+        m.observe_s("exec.run_s", 1e6); // overflow
+        let snap = m.snapshot();
+        let h = &snap.histograms["exec.run_s"];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.buckets.len(), DURATION_BUCKETS_S.len() + 1);
+        assert_eq!(h.buckets[0], (1e-4, 1));
+        assert_eq!(h.buckets[4], (1.0, 1));
+        let (last_le, last_n) = h.buckets[h.buckets.len() - 1];
+        assert!(last_le.is_infinite());
+        assert_eq!(last_n, 1);
+
+        let dst = MetricsRegistry::new();
+        dst.observe_s("exec.run_s", 0.5);
+        m.merge_into(&dst);
+        let merged = dst.snapshot();
+        assert_eq!(merged.histograms["exec.run_s"].count, 4);
+        assert_eq!(merged.histograms["exec.run_s"].buckets[4].1, 2);
+    }
+
+    #[test]
+    fn merge_into_adds_counters_and_self_merge_is_a_noop() {
+        let a = MetricsRegistry::new();
+        a.add("x", 2);
+        let b = MetricsRegistry::new();
+        b.add("x", 3);
+        b.add("y", 1);
+        a.merge_into(&b);
+        assert_eq!(b.counter("x"), 5);
+        assert_eq!(b.counter("y"), 1);
+        assert_eq!(a.counter("x"), 2, "source untouched");
+        a.merge_into(&a);
+        assert_eq!(a.counter("x"), 2, "self-merge must not deadlock or double");
+    }
+
+    #[test]
+    fn snapshot_json_is_versioned_and_parses() {
+        let m = MetricsRegistry::new();
+        m.add("store.hits", 7);
+        m.observe_s("exec.queue_wait_s", 0.002);
+        let doc = m.snapshot().to_json();
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str().unwrap(), METRICS_SCHEMA);
+        assert_eq!(
+            back.get("counters").unwrap().get("store.hits").unwrap().as_usize().unwrap(),
+            7
+        );
+        let h = back.get("histograms").unwrap().get("exec.queue_wait_s").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1);
+        // The overflow bound serializes as null.
+        let buckets = h.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.last().unwrap().get("le_s").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn empty_snapshot_is_empty() {
+        assert!(MetricsRegistry::new().snapshot().is_empty());
+        let m = MetricsRegistry::new();
+        m.incr("z");
+        assert!(!m.snapshot().is_empty());
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = MetricsRegistry::global();
+        let b = MetricsRegistry::global();
+        assert!(std::ptr::eq(a, b));
+    }
+}

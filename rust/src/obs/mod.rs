@@ -1,0 +1,53 @@
+//! Run-telemetry substrate: structured tracing, a metrics registry, and
+//! leveled logging — the observability layer the rest of the pipeline
+//! reports through (vendor-free, like [`crate::util::json`] for serde
+//! and [`crate::exec`] for rayon).
+//!
+//! Three pieces, deliberately small:
+//!
+//! * [`trace`] — span-based structured tracing. A [`Tracer`] hands out
+//!   RAII [`Span`] guards (nested via [`Span::child`], annotated via
+//!   [`Span::set`]) and serializes the finished spans as a versioned
+//!   JSONL event log ([`trace::TRACE_SCHEMA`]). A disabled tracer is a
+//!   handful of `Option` checks — the untraced hot path stays the hot
+//!   path.
+//! * [`metrics`] — a [`MetricsRegistry`] of named monotonic counters
+//!   and fixed-bucket duration histograms (cache hits/misses, kernels
+//!   simulated vs deduped, retry attempts, bytes per artifact lane),
+//!   snapshotted into `run.metrics.json` ([`metrics::METRICS_SCHEMA`]).
+//! * [`log`] — leveled stderr logging behind `--quiet`/`-v` and
+//!   `HROOFLINE_LOG`. The library default is [`log::Level::Silent`] so
+//!   tests stay quiet; the `repro` binary raises it at startup.
+//!
+//! The cardinal rule, pinned by `rust/tests/trace_semantics.rs`:
+//! telemetry is **strictly additive**. Wall-clock data lives only in
+//! the trace/metrics lanes, so every txt/json/svg/csv artifact is
+//! byte-identical whether tracing is on or off.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{MetricsRegistry, MetricsSnapshot, METRICS_SCHEMA};
+pub use trace::{Clock, Span, SpanRecord, Trace, Tracer, TRACE_SCHEMA};
+
+/// Resolve the `--trace` opt-in: an explicit flag value wins, else the
+/// `HROOFLINE_TRACE` environment variable, else tracing stays off.
+pub fn trace_path(flag: &str) -> Option<String> {
+    if !flag.is_empty() {
+        return Some(flag.to_string());
+    }
+    match std::env::var("HROOFLINE_TRACE") {
+        Ok(v) if !v.is_empty() => Some(v),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn trace_path_prefers_flag() {
+        // Env-dependent branch is covered in CI; the flag branch is pure.
+        assert_eq!(super::trace_path("out/t.jsonl").as_deref(), Some("out/t.jsonl"));
+    }
+}

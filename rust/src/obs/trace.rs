@@ -1,0 +1,512 @@
+//! Span-based structured tracing with a versioned JSONL event log.
+//!
+//! A [`Tracer`] owns a clock and a thread-safe span sink. Instrumented
+//! code opens RAII [`Span`] guards ([`Tracer::span`] for roots,
+//! [`Span::child`] for nesting — explicit parenting, so spans cross
+//! thread boundaries without thread-local state), annotates them with
+//! string fields ([`Span::set`]), and lets scope exit stamp the
+//! duration. A disabled tracer ([`Tracer::disabled`]) makes every one
+//! of those operations a no-op `Option` check, which is how the
+//! untraced pipeline keeps its perf profile.
+//!
+//! Serialized form ([`TRACE_SCHEMA`], one JSON object per line via
+//! [`crate::util::json::Json`]):
+//!
+//! ```text
+//! {"clock":"monotonic-us","schema":"hroofline-trace-v1","spans":3}
+//! {"dur_us":120,"fields":{},"id":1,"name":"matrix","parent":null,"start_us":0}
+//! {"dur_us":60,"fields":{"label":"cell#0:..."},"id":2,"name":"cell","parent":1,"start_us":10}
+//! ```
+//!
+//! Spans are emitted sorted by id, so a serial run under the
+//! deterministic [`Clock::Fixed`] test clock produces byte-identical
+//! traces across reruns (pinned by `rust/tests/trace_semantics.rs`).
+//! [`Trace::parse_jsonl`] reads the format back for `repro trace
+//! report` and the well-formedness suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
+
+/// Trace-format version, stamped into the JSONL header line.
+pub const TRACE_SCHEMA: &str = "hroofline-trace-v1";
+
+/// Timestamp source for span start/duration stamps.
+#[derive(Debug)]
+pub enum Clock {
+    /// Microseconds elapsed since the tracer was created (production).
+    Monotonic(Instant),
+    /// A deterministic tick counter: every read returns the next
+    /// integer. Tests inject this so trace bytes are reproducible.
+    Fixed(AtomicU64),
+}
+
+impl Clock {
+    fn now_us(&self) -> u64 {
+        match self {
+            Clock::Monotonic(epoch) => epoch.elapsed().as_micros() as u64,
+            Clock::Fixed(tick) => tick.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// The header's `clock` stamp (readers must not compare durations
+    /// across clock kinds).
+    fn label(&self) -> &'static str {
+        match self {
+            Clock::Monotonic(_) => "monotonic-us",
+            Clock::Fixed(_) => "fixed-tick",
+        }
+    }
+}
+
+/// One finished span, as collected and as parsed back from JSONL.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// 1-based, unique within a trace (0 never occurs).
+    pub id: u64,
+    /// Parent span id; `None` for roots.
+    pub parent: Option<u64>,
+    pub name: String,
+    /// Ordered key/value annotations; duplicate keys collapse
+    /// last-wins at serialization (fields emit as a JSON object).
+    pub fields: Vec<(String, String)>,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRecord {
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+
+    /// The value of a field, if set.
+    pub fn field(&self, key: &str) -> Option<&str> {
+        self.fields.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+struct TracerInner {
+    clock: Clock,
+    next_id: AtomicU64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+/// A span collector. Cheap to clone (shared sink); a disabled tracer
+/// never allocates and never locks.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TracerInner>>,
+}
+
+impl Tracer {
+    /// The no-op tracer: every span it (or its children) produce is
+    /// dropped without recording.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// A recording tracer on the monotonic clock.
+    pub fn new() -> Tracer {
+        Tracer::with_clock(Clock::Monotonic(Instant::now()))
+    }
+
+    /// A recording tracer on the deterministic tick clock (tests).
+    pub fn fixed() -> Tracer {
+        Tracer::with_clock(Clock::Fixed(AtomicU64::new(0)))
+    }
+
+    pub fn with_clock(clock: Clock) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(TracerInner {
+                clock,
+                next_id: AtomicU64::new(1),
+                spans: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a root span (no parent). Nested work hangs children off the
+    /// returned guard via [`Span::child`].
+    pub fn span(&self, name: impl Into<String>) -> Span {
+        Span::open(self.inner.clone(), None, name.into())
+    }
+
+    /// Finished spans so far, sorted by id. Live (undropped) spans are
+    /// not included — snapshot after the guards are gone.
+    pub fn records(&self) -> Vec<SpanRecord> {
+        let Some(inner) = &self.inner else { return Vec::new() };
+        let mut spans = inner.spans.lock().unwrap().clone();
+        spans.sort_by_key(|s| s.id);
+        spans
+    }
+
+    /// Serialize the collected spans as versioned JSONL (header line +
+    /// one compact object per span, sorted by id).
+    pub fn to_jsonl(&self) -> String {
+        let spans = self.records();
+        let clock = match &self.inner {
+            Some(inner) => inner.clock.label(),
+            None => "monotonic-us",
+        };
+        let mut out = Json::obj(vec![
+            ("clock", Json::str(clock)),
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("spans", Json::num(spans.len() as f64)),
+        ])
+        .to_string_compact();
+        out.push('\n');
+        for s in &spans {
+            out.push_str(&span_to_json(s).to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL log to `path` (creating parent directories) and
+    /// return the byte count written.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> Result<u64> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating trace dir {}", parent.display()))?;
+            }
+        }
+        let text = self.to_jsonl();
+        std::fs::write(path, &text)
+            .with_context(|| format!("writing trace {}", path.display()))?;
+        Ok(text.len() as u64)
+    }
+}
+
+fn span_to_json(s: &SpanRecord) -> Json {
+    let fields = Json::Obj(
+        s.fields
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("dur_us", Json::num(s.dur_us as f64)),
+        ("fields", fields),
+        ("id", Json::num(s.id as f64)),
+        ("name", Json::str(s.name.clone())),
+        ("parent", s.parent.map(|p| Json::num(p as f64)).unwrap_or(Json::Null)),
+        ("start_us", Json::num(s.start_us as f64)),
+    ])
+}
+
+/// RAII span guard: the duration is stamped when the guard drops.
+/// `&Span` is `Sync`, so a fan-out closure can hang per-item children
+/// off a shared parent from worker threads.
+pub struct Span {
+    tracer: Option<Arc<TracerInner>>,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    fields: Vec<(String, String)>,
+    start_us: u64,
+}
+
+impl Span {
+    /// A span that records nothing — the `Option<&Span>::None` arm for
+    /// call sites threading optional telemetry.
+    pub fn disabled() -> Span {
+        Span {
+            tracer: None,
+            id: 0,
+            parent: None,
+            name: String::new(),
+            fields: Vec::new(),
+            start_us: 0,
+        }
+    }
+
+    fn open(tracer: Option<Arc<TracerInner>>, parent: Option<u64>, name: String) -> Span {
+        let Some(inner) = tracer else { return Span::disabled() };
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let start_us = inner.clock.now_us();
+        Span { tracer: Some(inner), id, parent, name, fields: Vec::new(), start_us }
+    }
+
+    /// Open a child span. Works across threads (the child carries the
+    /// tracer handle and the parent id; nothing is thread-local).
+    pub fn child(&self, name: impl Into<String>) -> Span {
+        Span::open(self.tracer.clone(), (self.id != 0).then_some(self.id), name.into())
+    }
+
+    /// Annotate the span with a string field.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        if self.tracer.is_some() {
+            self.fields.push((key.to_string(), value.into()));
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.tracer.take() else { return };
+        let end_us = inner.clock.now_us();
+        let record = SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            fields: std::mem::take(&mut self.fields),
+            start_us: self.start_us,
+            dur_us: end_us.saturating_sub(self.start_us),
+        };
+        inner.spans.lock().unwrap().push(record);
+    }
+}
+
+/// A parsed trace: the header's clock stamp plus every span record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub clock: String,
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Trace {
+    /// Strict parse of a [`TRACE_SCHEMA`] JSONL log.
+    pub fn parse_jsonl(text: &str) -> Result<Trace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = match lines.next() {
+            Some(l) => l,
+            None => bail!("empty trace"),
+        };
+        let header = Json::parse(header_line).context("trace header")?;
+        let schema = header.get("schema")?.as_str()?.to_string();
+        if schema != TRACE_SCHEMA {
+            bail!("unsupported trace schema '{schema}' (want '{TRACE_SCHEMA}')");
+        }
+        let clock = header.get("clock")?.as_str()?.to_string();
+        let mut spans = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let doc = Json::parse(line).with_context(|| format!("trace span line {}", i + 2))?;
+            let parent = match doc.get("parent")? {
+                Json::Null => None,
+                v => Some(v.as_usize()? as u64),
+            };
+            let mut fields = Vec::new();
+            for (k, v) in doc.get("fields")?.as_obj()? {
+                fields.push((k.clone(), v.as_str()?.to_string()));
+            }
+            spans.push(SpanRecord {
+                id: doc.get("id")?.as_usize()? as u64,
+                parent,
+                name: doc.get("name")?.as_str()?.to_string(),
+                fields,
+                start_us: doc.get("start_us")?.as_usize()? as u64,
+                dur_us: doc.get("dur_us")?.as_usize()? as u64,
+            });
+        }
+        Ok(Trace { clock, spans })
+    }
+
+    /// Well-formedness: ids unique and nonzero, every parent id exists,
+    /// and every child's interval nests inside its parent's.
+    pub fn validate(&self) -> Result<()> {
+        let mut by_id = std::collections::BTreeMap::new();
+        for s in &self.spans {
+            if s.id == 0 {
+                bail!("span id 0 in '{}'", s.name);
+            }
+            if by_id.insert(s.id, s).is_some() {
+                bail!("duplicate span id {}", s.id);
+            }
+        }
+        for s in &self.spans {
+            let Some(pid) = s.parent else { continue };
+            let Some(p) = by_id.get(&pid) else {
+                bail!("span {} '{}' has unknown parent {pid}", s.id, s.name);
+            };
+            if s.start_us < p.start_us || s.end_us() > p.end_us() {
+                bail!(
+                    "span {} '{}' [{}..{}] escapes parent {} '{}' [{}..{}]",
+                    s.id,
+                    s.name,
+                    s.start_us,
+                    s.end_us(),
+                    p.id,
+                    p.name,
+                    p.start_us,
+                    p.end_us()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Spans without a parent.
+    pub fn roots(&self) -> Vec<&SpanRecord> {
+        self.spans.iter().filter(|s| s.parent.is_none()).collect()
+    }
+
+    /// Trace wall-clock: latest end minus earliest start (0 when empty).
+    pub fn wall_us(&self) -> u64 {
+        let start = self.spans.iter().map(|s| s.start_us).min();
+        let end = self.spans.iter().map(|s| s.end_us()).max();
+        match (start, end) {
+            (Some(a), Some(b)) => b.saturating_sub(a),
+            _ => 0,
+        }
+    }
+
+    /// Per-span self time: duration minus the summed durations of
+    /// direct children, keyed by span id.
+    pub fn self_us(&self) -> std::collections::BTreeMap<u64, u64> {
+        let mut child_sum: std::collections::BTreeMap<u64, u64> =
+            std::collections::BTreeMap::new();
+        for s in &self.spans {
+            if let Some(p) = s.parent {
+                *child_sum.entry(p).or_insert(0) += s.dur_us;
+            }
+        }
+        self.spans
+            .iter()
+            .map(|s| {
+                let children = child_sum.get(&s.id).copied().unwrap_or(0);
+                (s.id, s.dur_us.saturating_sub(children))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        {
+            let root = t.span("root");
+            assert!(!root.is_enabled());
+            assert_eq!(root.id(), 0);
+            let mut child = root.child("child");
+            child.set("k", "v");
+        }
+        assert!(t.records().is_empty());
+        // Header-only JSONL still parses.
+        let trace = Trace::parse_jsonl(&t.to_jsonl()).unwrap();
+        assert!(trace.spans.is_empty());
+        assert_eq!(trace.wall_us(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_roundtrip_through_jsonl() {
+        let t = Tracer::fixed();
+        {
+            let mut root = t.span("matrix");
+            root.set("cells", "2");
+            {
+                let mut c = root.child("cell");
+                c.set("label", "cell#0:a");
+                let _g = c.child("store.load");
+            }
+            let _c2 = root.child("cell");
+        }
+        let text = t.to_jsonl();
+        let trace = Trace::parse_jsonl(&text).unwrap();
+        trace.validate().unwrap();
+        assert_eq!(trace.clock, "fixed-tick");
+        assert_eq!(trace.spans.len(), 4);
+        assert_eq!(trace.roots().len(), 1);
+        let root = &trace.spans[0];
+        assert_eq!(root.name, "matrix");
+        assert_eq!(root.field("cells"), Some("2"));
+        assert!(trace.spans.iter().filter(|s| s.name == "cell").count() == 2);
+        assert!(trace
+            .spans
+            .iter()
+            .all(|s| s.parent.is_none() || s.parent.unwrap() < s.id));
+        // Root self-time excludes the children's ticks.
+        let self_us = trace.self_us();
+        let kids: u64 = trace
+            .spans
+            .iter()
+            .filter(|s| s.parent == Some(root.id))
+            .map(|s| s.dur_us)
+            .sum();
+        assert_eq!(self_us[&root.id], root.dur_us - kids);
+    }
+
+    #[test]
+    fn fixed_clock_trace_is_deterministic() {
+        let mk = || {
+            let t = Tracer::fixed();
+            {
+                let root = t.span("run");
+                let _a = root.child("phase-a");
+                let _b = root.child("phase-b");
+            }
+            t.to_jsonl()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn cross_thread_children_attach_to_the_shared_parent() {
+        let t = Tracer::new();
+        {
+            let root = t.span("fanout");
+            std::thread::scope(|scope| {
+                for i in 0..4 {
+                    let root = &root;
+                    scope.spawn(move || {
+                        let mut s = root.child("item");
+                        s.set("i", i.to_string());
+                    });
+                }
+            });
+        }
+        let trace = Trace::parse_jsonl(&t.to_jsonl()).unwrap();
+        trace.validate().unwrap();
+        let root_id = trace.roots()[0].id;
+        let items: Vec<_> = trace.spans.iter().filter(|s| s.name == "item").collect();
+        assert_eq!(items.len(), 4);
+        assert!(items.iter().all(|s| s.parent == Some(root_id)));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_parent_and_duplicate_ids() {
+        let span = |id: u64, parent: Option<u64>| SpanRecord {
+            id,
+            parent,
+            name: "x".into(),
+            fields: Vec::new(),
+            start_us: 0,
+            dur_us: 1,
+        };
+        let t = Trace { clock: "fixed-tick".into(), spans: vec![span(1, Some(9))] };
+        assert!(t.validate().is_err());
+        let t = Trace { clock: "fixed-tick".into(), spans: vec![span(1, None), span(1, None)] };
+        assert!(t.validate().is_err());
+        let t = Trace { clock: "fixed-tick".into(), spans: vec![span(1, None), span(2, Some(1))] };
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::parse_jsonl("").is_err());
+        assert!(Trace::parse_jsonl("{\"schema\":\"other\",\"clock\":\"x\"}").is_err());
+        let good = Tracer::fixed().to_jsonl();
+        assert!(Trace::parse_jsonl(&good).is_ok());
+        assert!(Trace::parse_jsonl(&format!("{good}not json")).is_err());
+    }
+}

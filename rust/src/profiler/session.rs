@@ -45,6 +45,8 @@ pub struct ProfileRequest<'a> {
     cache: Option<&'a sim::SharedSimCache>,
     timing: bool,
     fault: Option<&'a crate::exec::FaultInjector>,
+    span: Option<&'a crate::obs::Span>,
+    metrics: Option<&'a crate::obs::MetricsRegistry>,
 }
 
 impl<'a> ProfileRequest<'a> {
@@ -54,6 +56,8 @@ impl<'a> ProfileRequest<'a> {
             cache: None,
             timing: true,
             fault: None,
+            span: None,
+            metrics: None,
         }
     }
 
@@ -86,6 +90,23 @@ impl<'a> ProfileRequest<'a> {
     /// without real flakiness.
     pub fn fault_injector(mut self, injector: &'a crate::exec::FaultInjector) -> ProfileRequest<'a> {
         self.fault = Some(injector);
+        self
+    }
+
+    /// Attach a parent [`crate::obs::Span`]: the run records a
+    /// `profile` child span with per-phase and per-unique-kernel
+    /// children under it. Telemetry is strictly additive — the profile
+    /// is bit-identical with or without a span (test-asserted).
+    pub fn with_span(mut self, span: &'a crate::obs::Span) -> ProfileRequest<'a> {
+        self.span = Some(span);
+        self
+    }
+
+    /// Attach a [`crate::obs::MetricsRegistry`]: the run counts
+    /// `sim.kernels.simulated` / `sim.kernels.deduped` and the
+    /// supervised fan-out's queue-wait/run-time/retry telemetry.
+    pub fn with_metrics(mut self, metrics: &'a crate::obs::MetricsRegistry) -> ProfileRequest<'a> {
+        self.metrics = Some(metrics);
         self
     }
 }
@@ -239,12 +260,16 @@ impl<'a> Session<'a> {
     ///    the serial path (test-asserted, like PR 1's ERT sweep).
     pub fn run(&self, req: &ProfileRequest<'_>) -> Result<Profile, SessionError> {
         match req.cache {
-            Some(cache) => self.profile_with(req.trace, req.timing, req.fault, &|k| {
-                cache.get_or_simulate_timed(self.spec, k)
-            }),
-            None => self.profile_with(req.trace, req.timing, req.fault, &|k| {
-                sim::simulate_timed(self.spec, k)
-            }),
+            Some(cache) => {
+                self.profile_with(req.trace, req.timing, req.fault, req.span, req.metrics, &|k| {
+                    cache.get_or_simulate_timed(self.spec, k)
+                })
+            }
+            None => {
+                self.profile_with(req.trace, req.timing, req.fault, req.span, req.metrics, &|k| {
+                    sim::simulate_timed(self.spec, k)
+                })
+            }
         }
     }
 
@@ -276,8 +301,19 @@ impl<'a> Session<'a> {
         trace: &[KernelInvocation],
         timing: bool,
         fault: Option<&crate::exec::FaultInjector>,
+        span: Option<&crate::obs::Span>,
+        obs_metrics: Option<&crate::obs::MetricsRegistry>,
         simulate_kernel: &(dyn Fn(&KernelDesc) -> (CounterSet, CycleBreakdown) + Sync),
     ) -> Result<Profile, SessionError> {
+        // Telemetry is observational only: spans and counters must not
+        // influence a single byte of the profile (pinned by
+        // rust/tests/trace_semantics.rs).
+        let mut run_span = match span {
+            Some(s) => s.child("profile"),
+            None => crate::obs::Span::disabled(),
+        };
+        run_span.set("trace_entries", trace.len().to_string());
+
         let metric_refs: Vec<&str> = self.config.metrics.iter().map(|s| s.as_str()).collect();
         let metrics = self.registry.resolve(&metric_refs)?;
         let passes: Vec<Vec<Metric>> = if self.config.one_metric_per_run {
@@ -295,6 +331,7 @@ impl<'a> Session<'a> {
 
         // 1. Baseline simulations, one per distinct kernel descriptor.
         // `baseline_of[i]` maps trace entry i to its slot in `baselines`.
+        let dedup_span = run_span.child("dedup");
         let mut unique: Vec<&KernelDesc> = Vec::new();
         let mut baseline_of: Vec<usize> = Vec::with_capacity(trace.len());
         if deterministic && self.config.memoize {
@@ -313,6 +350,13 @@ impl<'a> Session<'a> {
                 baseline_of.push(i);
             }
         }
+        drop(dedup_span);
+        if let Some(m) = obs_metrics {
+            m.add("sim.kernels.simulated", unique.len() as u64);
+            // `baseline_of` is empty on the nondeterministic path, so
+            // this is 0 there (nothing was deduped — nothing ran yet).
+            m.add("sim.kernels.deduped", (baseline_of.len() - unique.len()) as u64);
+        }
         // The baseline fan-out runs supervised: a panic inside one
         // kernel's simulation (or an injected fault) becomes a
         // structured `SessionError::Exec` instead of unwinding through
@@ -327,12 +371,17 @@ impl<'a> Session<'a> {
         };
         // Cheap Vec-of-refs clone, kept for error attribution by index.
         let kernel_of = unique.clone();
-        let sim_results = crate::exec::parallel_try_map(unique, sim_workers, &policy, |k| {
-            if let Some(inj) = fault {
-                inj.apply(&format!("kernel:{}", k.name))?;
-            }
-            Ok(simulate_kernel(k))
-        });
+        let sim_span = run_span.child("simulate");
+        let sim_results =
+            crate::exec::parallel_try_map_observed(unique, sim_workers, &policy, obs_metrics, |k| {
+                let mut kernel_span = sim_span.child("kernel");
+                kernel_span.set("kernel", k.name.as_str());
+                if let Some(inj) = fault {
+                    inj.apply(&format!("kernel:{}", k.name))?;
+                }
+                Ok(simulate_kernel(k))
+            });
+        drop(sim_span);
         let mut baselines: Vec<(CounterSet, CycleBreakdown)> =
             Vec::with_capacity(sim_results.len());
         for (idx, result) in sim_results.into_iter().enumerate() {
@@ -350,6 +399,7 @@ impl<'a> Session<'a> {
         // 2. Merge each entry's replay passes (pure per entry; with the
         // nondeterminism hook armed, `baseline = None` forces per-pass
         // re-execution plus the cross-pass consistency check).
+        let merge_span = run_span.child("merge");
         let entries: Vec<(usize, &KernelInvocation)> = trace.iter().enumerate().collect();
         let merge_workers = self.workers_for(entries.len());
         let merged: Vec<Result<CounterSet, SessionError>> =
@@ -357,9 +407,11 @@ impl<'a> Session<'a> {
                 let baseline = deterministic.then(|| &baselines[baseline_of[i]].0);
                 self.merge_replay_passes(inv, &passes, baseline)
             });
+        drop(merge_span);
 
         // 3. Aggregate in trace order; the first failing entry (in trace
         // order) wins, exactly as a serial scan would report.
+        let aggregate_span = run_span.child("aggregate");
         for (i, (inv, counters)) in trace.iter().zip(merged).enumerate() {
             // One merged CounterSet scaled by the invocation count
             // (invocations of one kernel are identical in a
@@ -381,6 +433,7 @@ impl<'a> Session<'a> {
             profile.profiling_overhead_s +=
                 passes.len() as f64 * inv.invocations as f64 * self.config.replay_overhead_s;
         }
+        drop(aggregate_span);
         Ok(profile)
     }
 
@@ -650,6 +703,33 @@ mod tests {
         assert_eq!(session.try_profile(&t).unwrap(), reference);
         let cache = sim::SharedSimCache::new();
         assert_eq!(session.try_profile_shared(&t, &cache).unwrap(), reference);
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_well_formed() {
+        let spec = GpuSpec::v100();
+        let t = trace_with_duplicates();
+        let session = Session::standard(&spec);
+        let clean = profiled(&session, &t);
+        let tracer = crate::obs::Tracer::fixed();
+        let metrics = crate::obs::MetricsRegistry::new();
+        let traced = {
+            let root = tracer.span("test");
+            session
+                .run(&ProfileRequest::new(&t).with_span(&root).with_metrics(&metrics))
+                .unwrap()
+        };
+        assert_eq!(traced, clean, "telemetry must not change the profile");
+        let records = tracer.records();
+        assert!(records.iter().any(|s| s.name == "profile"));
+        for phase in ["dedup", "simulate", "merge", "aggregate"] {
+            assert!(records.iter().any(|s| s.name == phase), "missing phase span {phase}");
+        }
+        // 4 trace entries, 3 distinct kernel descriptors (one dup relu).
+        assert_eq!(records.iter().filter(|s| s.name == "kernel").count(), 3);
+        assert_eq!(metrics.counter("sim.kernels.simulated"), 3);
+        assert_eq!(metrics.counter("sim.kernels.deduped"), 1);
+        assert_eq!(metrics.snapshot().histograms["exec.run_s"].count, 3);
     }
 
     #[test]

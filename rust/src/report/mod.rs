@@ -49,22 +49,28 @@ impl Artifact {
 
     /// Write every lane into `dir`: the core text/json[/svg][/csv]
     /// quartet plus all extra lanes. The single emission point for all
-    /// artifact producers (`repro report|profile|matrix`).
+    /// artifact producers (`repro report|profile|matrix`) — and
+    /// therefore the single place bytes-per-lane telemetry is counted
+    /// (`artifact.bytes.<lane>` in the global
+    /// [`crate::obs::MetricsRegistry`]).
     pub fn write_all(&self, dir: &Path) -> Result<()> {
+        let emit = |lane: &str, content: &str| -> Result<()> {
+            std::fs::write(dir.join(format!("{}.{lane}", self.id)), content)?;
+            crate::obs::MetricsRegistry::global()
+                .add(&format!("artifact.bytes.{lane}"), content.len() as u64);
+            Ok(())
+        };
         std::fs::create_dir_all(dir)?;
-        std::fs::write(dir.join(format!("{}.txt", self.id)), &self.text)?;
-        std::fs::write(
-            dir.join(format!("{}.json", self.id)),
-            self.json.to_string_pretty(),
-        )?;
+        emit("txt", &self.text)?;
+        emit("json", &self.json.to_string_pretty())?;
         if let Some(svg) = &self.svg {
-            std::fs::write(dir.join(format!("{}.svg", self.id)), svg)?;
+            emit("svg", svg)?;
         }
         if let Some(csv) = &self.csv {
-            std::fs::write(dir.join(format!("{}.csv", self.id)), csv)?;
+            emit("csv", csv)?;
         }
         for (kind, content) in &self.lanes {
-            std::fs::write(dir.join(format!("{}.{kind}", self.id)), content)?;
+            emit(kind, content)?;
         }
         Ok(())
     }

@@ -307,8 +307,21 @@ impl ScenarioMatrix {
     /// Panic isolation across cells is sound because the shared
     /// per-device [`SharedSimCache`] simulates *outside* its lock — an
     /// unwinding cell never poisons state its siblings need.
+    ///
+    /// When [`MatrixRunOptions::span`] / [`MatrixRunOptions::metrics`]
+    /// are set, the run additionally emits one `cell` child span per
+    /// attempted cell (fields: `label` = `cell#<index>:<id>`,
+    /// `attempt`, and the `outcome` — `replayed` / `ran` / `failed`)
+    /// with `store.load` / `store.save` children around store traffic,
+    /// and counts the [`crate::obs::metrics`] catalog into a run-local
+    /// registry merged into the sink afterwards. Telemetry is strictly
+    /// additive: profiles and artifacts are byte-identical with or
+    /// without it (test-asserted).
     pub fn run_with(&self, options: &MatrixRunOptions<'_>) -> MatrixRun {
-        let prep = self.prepare();
+        let prep = {
+            let _prep_span = child_span(options.span, "prepare");
+            self.prepare()
+        };
 
         let caches: Vec<SharedSimCache> =
             self.devices.iter().map(|_| SharedSimCache::new()).collect();
@@ -347,16 +360,30 @@ impl ScenarioMatrix {
         let sessions: Vec<Session> =
             prep.specs.iter().map(|spec| Session::new(spec, session_cfg.clone())).collect();
 
-        let hits = AtomicU64::new(0);
-        let misses = AtomicU64::new(0);
-        let evictions = AtomicU64::new(0);
-        let outcomes = crate::exec::parallel_try_map(
+        // Run-local telemetry: counters accumulate here (so parallel
+        // callers never cross-pollinate a shared registry) and merge
+        // into `options.metrics` after the sweep. CacheStats is derived
+        // from this registry — the single source of truth.
+        let local = crate::obs::MetricsRegistry::new();
+        // Per-cell attempt counters (keyed by global enumeration index),
+        // so a retried cell's spans are tellable apart.
+        let attempt_counts: HashMap<usize, AtomicU64> =
+            cells.iter().map(|&(i, _)| (i, AtomicU64::new(0))).collect();
+        let outcomes = crate::exec::parallel_try_map_observed(
             cells.clone(),
             prof_workers,
             &options.policy,
+            Some(&local),
             |&(index, sc)| {
+                let mut cell_span = child_span(options.span, "cell");
+                cell_span.set("label", format!("cell#{index}:{}", sc.id()));
+                let attempt = attempt_counts[&index].fetch_add(1, Ordering::Relaxed) + 1;
+                cell_span.set("attempt", attempt.to_string());
                 if let Some(inj) = options.fault {
-                    inj.apply(&format!("cell#{index}:{}", sc.id()))?;
+                    if let Err(e) = inj.apply(&format!("cell#{index}:{}", sc.id())) {
+                        cell_span.set("outcome", "failed");
+                        return Err(e);
+                    }
                 }
                 let di = prep.didx[sc.device.name];
                 let trace = prep.trace_for(&sc);
@@ -371,46 +398,71 @@ impl ScenarioMatrix {
                     None
                 };
                 if let Some((st, key)) = &store_key {
-                    match st.load(key) {
+                    let lookup = {
+                        let _load_span = cell_span.child("store.load");
+                        st.load(key)
+                    };
+                    match lookup {
                         store::Lookup::Hit(profile) => {
-                            hits.fetch_add(1, Ordering::Relaxed);
+                            local.add("store.hits", 1);
+                            local.add("matrix.cells.replayed", 1);
+                            cell_span.set("outcome", "replayed");
                             return Ok(profile);
                         }
                         // A corrupt entry is a miss that also counts as
                         // an eviction — the re-run overwrites it below.
                         store::Lookup::Corrupt => {
-                            evictions.fetch_add(1, Ordering::Relaxed);
-                            misses.fetch_add(1, Ordering::Relaxed);
+                            local.add("store.evictions", 1);
+                            local.add("store.misses", 1);
                         }
                         store::Lookup::Miss => {
-                            misses.fetch_add(1, Ordering::Relaxed);
+                            local.add("store.misses", 1);
                         }
                     }
                     if options.merge_only {
                         // A merge run has no simulation budget: every
                         // cell must come out of the shard-store union.
+                        cell_span.set("outcome", "failed");
                         return Err(crate::exec::TaskError::fatal(format!(
                             "cell {} missing from the merged store union",
                             sc.id()
                         )));
                     }
                 }
-                let mut req = ProfileRequest::new(trace).shared_cache(&caches[di]);
+                let mut req = ProfileRequest::new(trace)
+                    .shared_cache(&caches[di])
+                    .with_span(&cell_span)
+                    .with_metrics(&local);
                 if let Some(inj) = options.fault {
                     req = req.fault_injector(inj);
                 }
                 // Session-level errors already exhausted the kernel-
                 // grain retry budget — at the cell grain they are final.
-                let profile = sessions[di]
-                    .run(&req)
-                    .map_err(|e| crate::exec::TaskError::fatal(e.to_string()))?;
+                let profile = match sessions[di].run(&req) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        cell_span.set("outcome", "failed");
+                        return Err(crate::exec::TaskError::fatal(e.to_string()));
+                    }
+                };
+                local.add("matrix.cells.ran", 1);
                 if let Some((st, key)) = &store_key {
+                    let mut save_span = cell_span.child("store.save");
                     // Best-effort write-back: a full disk degrades the
                     // store to pass-through, never the run to a failure.
-                    if let Err(e) = st.save(key, &sc.id(), &profile) {
-                        eprintln!("warning: cell store write failed for {}: {e:#}", sc.id());
+                    match st.save(key, &sc.id(), &profile) {
+                        Ok(bytes) => {
+                            local.add("store.bytes_written", bytes);
+                            save_span.set("bytes", bytes.to_string());
+                        }
+                        Err(e) => crate::obs::log::warn(format!(
+                            "warning: cell store write failed for {}: {e:#}",
+                            sc.id()
+                        )),
                     }
+                    drop(save_span);
                 }
+                cell_span.set("outcome", "ran");
                 Ok(profile)
             },
         );
@@ -427,12 +479,19 @@ impl ScenarioMatrix {
             let (hits, sims) = c.stats();
             (h + hits, s + sims)
         });
+        if !failures.is_empty() {
+            local.add("matrix.cells.failed", failures.len() as u64);
+        }
+        let metrics = local.snapshot();
         let cache_stats = CacheStats {
-            hits: hits.load(Ordering::Relaxed),
-            misses: misses.load(Ordering::Relaxed),
-            evictions: evictions.load(Ordering::Relaxed),
+            hits: metrics.counter("store.hits"),
+            misses: metrics.counter("store.misses"),
+            evictions: metrics.counter("store.evictions"),
         };
-        MatrixRun { results, failures, sim_stats, cache_stats }
+        if let Some(sink) = options.metrics {
+            local.merge_into(sink);
+        }
+        MatrixRun { results, failures, sim_stats, cache_stats, metrics }
     }
 
     /// The content-address of every enumerated cell, in enumeration
@@ -560,6 +619,20 @@ pub struct MatrixRunOptions<'a> {
     pub merge_only: bool,
     /// `--shard i/N`: run only the cells this shard owns.
     pub shard: Option<Shard>,
+    /// Parent span for run telemetry (`--trace`): the run hangs one
+    /// `cell` child per attempted cell off it. `None` records nothing.
+    pub span: Option<&'a crate::obs::Span>,
+    /// Metrics sink the run-local counters merge into after the sweep
+    /// (the CLI passes [`crate::obs::MetricsRegistry::global`]).
+    pub metrics: Option<&'a crate::obs::MetricsRegistry>,
+}
+
+/// `parent.child(name)` when telemetry is on, a no-op span otherwise.
+fn child_span(parent: Option<&crate::obs::Span>, name: &str) -> crate::obs::Span {
+    match parent {
+        Some(s) => s.child(name),
+        None => crate::obs::Span::disabled(),
+    }
 }
 
 /// One cell that failed to profile: which cell (attempt-order index +
@@ -600,8 +673,16 @@ pub struct MatrixRun {
     /// (cache hits, distinct simulations) across the whole sweep,
     /// summed over the per-device caches.
     pub sim_stats: (u64, u64),
-    /// Cell-store traffic (all zeros for non-incremental runs).
+    /// Cell-store traffic (all zeros for non-incremental runs). Derived
+    /// from [`MatrixRun::metrics`] — the run-local
+    /// [`crate::obs::MetricsRegistry`] is the single source of truth
+    /// for store counters.
     pub cache_stats: CacheStats,
+    /// Frozen run-local telemetry: the store counters behind
+    /// [`MatrixRun::cache_stats`], the per-outcome cell counts
+    /// (`matrix.cells.{replayed,ran,failed}`), dedup counters, and the
+    /// exec queue-wait / run-time histograms.
+    pub metrics: crate::obs::MetricsSnapshot,
 }
 
 impl MatrixRun {
@@ -1740,6 +1821,72 @@ mod tests {
         );
         let _ = std::fs::remove_dir_all(&dir_a);
         let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn run_telemetry_counts_cells_and_emits_well_formed_spans() {
+        let dir = store_tmpdir("telemetry");
+        let st = store::CellStore::open(&dir).unwrap();
+        let tracer = crate::obs::Tracer::fixed();
+        let sink = crate::obs::MetricsRegistry::new();
+        let cold = {
+            let root = tracer.span("matrix");
+            tiny_matrix().run_with(&MatrixRunOptions {
+                store: Some(&st),
+                incremental: true,
+                span: Some(&root),
+                metrics: Some(&sink),
+                ..Default::default()
+            })
+        };
+        // Counter catalog: one miss + one run per cold cell, bytes from
+        // the write-back, and CacheStats derived from the same registry.
+        assert_eq!(cold.metrics.counter("matrix.cells.ran"), 2);
+        assert_eq!(cold.metrics.counter("matrix.cells.replayed"), 0);
+        assert_eq!(cold.metrics.counter("store.misses"), 2);
+        assert!(cold.metrics.counter("store.bytes_written") > 0);
+        assert_eq!(cold.cache_stats, CacheStats { hits: 0, misses: 2, evictions: 0 });
+        assert_eq!(sink.counter("matrix.cells.ran"), 2, "local counters merge into the sink");
+        let trace = crate::obs::Trace::parse_jsonl(&tracer.to_jsonl()).unwrap();
+        trace.validate().unwrap();
+        let cell_spans: Vec<_> = trace.spans.iter().filter(|s| s.name == "cell").collect();
+        assert_eq!(cell_spans.len(), 2, "one cell span per attempted cell");
+        assert!(cell_spans.iter().all(|s| s.field("outcome") == Some("ran")));
+        assert!(cell_spans.iter().all(|s| s.field("attempt") == Some("1")));
+        assert!(cell_spans
+            .iter()
+            .any(|s| s.field("label") == Some("cell#0:deepcam-lite-pt-forward-O1")));
+        assert!(trace.spans.iter().any(|s| s.name == "prepare"));
+        assert!(trace.spans.iter().any(|s| s.name == "store.save"));
+        assert!(trace.spans.iter().any(|s| s.name == "profile"), "session spans nest under cells");
+
+        // Warm replay flips the outcomes and the counters; telemetry
+        // never perturbs the artifacts (byte-identity is pinned by
+        // incremental_warm_run_serves_hits_with_zero_simulations and
+        // rust/tests/trace_semantics.rs).
+        let tracer2 = crate::obs::Tracer::fixed();
+        let warm = {
+            let root = tracer2.span("matrix");
+            tiny_matrix().run_with(&MatrixRunOptions {
+                store: Some(&st),
+                incremental: true,
+                span: Some(&root),
+                ..Default::default()
+            })
+        };
+        assert_eq!(warm.metrics.counter("matrix.cells.replayed"), 2);
+        assert_eq!(warm.metrics.counter("matrix.cells.ran"), 0);
+        assert_eq!(warm.cache_stats, CacheStats { hits: 2, misses: 0, evictions: 0 });
+        let t2 = crate::obs::Trace::parse_jsonl(&tracer2.to_jsonl()).unwrap();
+        t2.validate().unwrap();
+        assert!(t2
+            .spans
+            .iter()
+            .filter(|s| s.name == "cell")
+            .all(|s| s.field("outcome") == Some("replayed")));
+        assert!(t2.spans.iter().any(|s| s.name == "store.load"));
+        assert!(!t2.spans.iter().any(|s| s.name == "store.save"), "hits write nothing back");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -151,7 +151,9 @@ impl CellStore {
     /// Persist a cell's profile under its key: write-to-temp + rename,
     /// so a crashed or concurrent writer can leave at worst a stale
     /// `.tmp` turd, never a half-written entry under the final name.
-    pub fn save(&self, key: &CellKey, cell: &str, profile: &Profile) -> Result<()> {
+    /// Returns the committed entry's byte count (feeds the
+    /// `store.bytes_written` telemetry counter).
+    pub fn save(&self, key: &CellKey, cell: &str, profile: &Profile) -> Result<u64> {
         let Some(dir) = &self.write_dir else {
             bail!("cell store opened as a read-only merge union");
         };
@@ -163,11 +165,12 @@ impl CellStore {
         ]);
         let path = Self::entry_path(dir, key);
         let tmp = dir.join(format!("{}.json.tmp", key.as_hex()));
-        fs::write(&tmp, doc.to_string_pretty())
+        let text = doc.to_string_pretty();
+        fs::write(&tmp, &text)
             .with_context(|| format!("writing cell entry {}", tmp.display()))?;
         fs::rename(&tmp, &path)
             .with_context(|| format!("publishing cell entry {}", path.display()))?;
-        Ok(())
+        Ok(text.len() as u64)
     }
 
     /// Number of committed entries on disk (tests and CLI reporting).
@@ -216,7 +219,8 @@ mod tests {
         let store = CellStore::open(&dir).unwrap();
         let (key, profile) = sample();
         assert!(matches!(store.load(&key), Lookup::Miss));
-        store.save(&key, "deepcam-lite-pt-forward-O1", &profile).unwrap();
+        let bytes = store.save(&key, "deepcam-lite-pt-forward-O1", &profile).unwrap();
+        assert!(bytes > 0, "save reports the committed entry size");
         assert_eq!(store.n_entries(), 1);
         match store.load(&key) {
             Lookup::Hit(back) => assert_eq!(back, profile, "store round-trip must be exact"),

@@ -1,0 +1,214 @@
+//! Run-telemetry integration: the observability layer's two contracts,
+//! end to end.
+//!
+//! 1. **Well-formedness** — an armed run emits a single-root span tree
+//!    that parses, validates (unique ids, parents exist, intervals
+//!    nest), and carries one `cell` span per enumerated matrix cell
+//!    with its outcome/attempt annotations.
+//! 2. **Observational purity** — arming tracing and metrics must not
+//!    change a single artifact byte, and the counters a run reports
+//!    must agree with its `CacheStats` (one source of truth).
+//!
+//! Plus fixed-clock determinism: a serial session traced under the
+//! fixed tick clock produces bit-identical JSONL across runs, which is
+//! what lets tests pin trace bytes at all.
+
+use std::path::{Path, PathBuf};
+
+use hroofline::device::{GpuSpec, Precision};
+use hroofline::obs::{MetricsRegistry, Trace, Tracer};
+use hroofline::profiler::{ProfileRequest, Session, SessionConfig};
+use hroofline::scenario::store::CellStore;
+use hroofline::scenario::{
+    comparison_artifact, CacheStats, MatrixRun, MatrixRunOptions, ScenarioMatrix,
+};
+use hroofline::sim::kernel::{KernelDesc, KernelInvocation};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hroofline-trsem-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The 8-cell smoke matrix (transformer x 2 frameworks x 2 phases x 2
+/// AMP policies on the default device).
+fn small_matrix() -> ScenarioMatrix {
+    ScenarioMatrix::quick().with_workloads("transformer").unwrap()
+}
+
+#[test]
+fn armed_matrix_run_emits_one_well_formed_span_tree() {
+    let tracer = Tracer::new();
+    let sink = MetricsRegistry::new();
+    let m = small_matrix();
+    {
+        let root = tracer.span("matrix");
+        let options = MatrixRunOptions {
+            span: Some(&root),
+            metrics: Some(&sink),
+            ..Default::default()
+        };
+        let run = m.run_with(&options);
+        assert!(run.failures.is_empty());
+    }
+    let trace = Trace::parse_jsonl(&tracer.to_jsonl()).unwrap();
+    trace.validate().expect("armed run must emit a valid span tree");
+    assert_eq!(trace.roots().len(), 1, "exactly one root span");
+
+    // One `cell` span per enumerated cell, each annotated and parented
+    // by the root.
+    let root_id = trace.roots()[0].id;
+    let cells: Vec<_> = trace.spans.iter().filter(|s| s.name == "cell").collect();
+    assert_eq!(cells.len(), 8, "one cell span per matrix cell");
+    for c in &cells {
+        assert_eq!(c.parent, Some(root_id));
+        assert_eq!(c.field("outcome"), Some("ran"));
+        assert_eq!(c.field("attempt"), Some("1"));
+        let label = c.field("label").unwrap();
+        assert!(label.contains(":transformer-"), "{label}");
+    }
+
+    // The session pipeline stages show up beneath the cells.
+    for name in ["prepare", "profile", "dedup", "simulate", "kernel", "merge", "aggregate"] {
+        assert!(trace.spans.iter().any(|s| s.name == name), "missing '{name}' span");
+    }
+    let cell_ids: std::collections::HashSet<u64> = cells.iter().map(|s| s.id).collect();
+    for p in trace.spans.iter().filter(|s| s.name == "profile") {
+        assert!(
+            p.parent.is_some_and(|pid| cell_ids.contains(&pid)),
+            "profile spans hang off cell spans"
+        );
+    }
+
+    // The sink registry saw the run's counters.
+    assert_eq!(sink.snapshot().counter("matrix.cells.ran"), 8);
+    assert!(sink.snapshot().counter("sim.kernels.simulated") > 0);
+}
+
+#[test]
+fn fixed_clock_serial_session_traces_are_bit_identical() {
+    let spec = GpuSpec::v100();
+    let config = SessionConfig { threads: Some(1), ..Default::default() };
+    let session = Session::new(&spec, config);
+    let trace: Vec<KernelInvocation> = ["relu", "bias", "relu"]
+        .iter()
+        .map(|name| {
+            KernelInvocation::once(KernelDesc::streaming_elementwise(
+                name,
+                1 << 14,
+                Precision::Fp32,
+                1,
+            ))
+        })
+        .collect();
+    let run_once = || {
+        let tracer = Tracer::fixed();
+        {
+            let root = tracer.span("run");
+            session.run(&ProfileRequest::new(&trace).with_span(&root)).unwrap();
+        }
+        tracer.to_jsonl()
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a, b, "fixed-tick serial traces must be reproducible");
+    // And the bytes round-trip through the strict parser.
+    let parsed = Trace::parse_jsonl(&a).unwrap();
+    parsed.validate().unwrap();
+    assert_eq!(parsed.clock, "fixed-tick");
+    // Two distinct kernels after dedup -> two `kernel` spans.
+    assert_eq!(parsed.spans.iter().filter(|s| s.name == "kernel").count(), 2);
+}
+
+fn write_artifacts(run: &MatrixRun, dir: &Path) {
+    for result in &run.results {
+        result.to_artifact().write_all(&dir.join("scenarios")).unwrap();
+    }
+    comparison_artifact(run).write_all(dir).unwrap();
+}
+
+fn assert_trees_identical(a: &Path, b: &Path) {
+    let mut names: Vec<_> =
+        std::fs::read_dir(a).unwrap().map(|e| e.unwrap().file_name()).collect();
+    names.sort();
+    assert!(!names.is_empty(), "{} is empty", a.display());
+    for name in names {
+        let (pa, pb) = (a.join(&name), b.join(&name));
+        if pa.is_dir() {
+            assert_trees_identical(&pa, &pb);
+        } else {
+            assert_eq!(
+                std::fs::read(&pa).unwrap(),
+                std::fs::read(&pb).unwrap(),
+                "{} differs between traced and untraced runs",
+                pa.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn arming_telemetry_changes_no_artifact_bytes() {
+    let base = tmpdir("byte-identity");
+    let m = small_matrix();
+
+    let plain_dir = base.join("plain");
+    let plain = m.run_with(&MatrixRunOptions::default());
+    write_artifacts(&plain, &plain_dir);
+
+    let traced_dir = base.join("traced");
+    let tracer = Tracer::new();
+    let sink = MetricsRegistry::new();
+    let traced = {
+        let root = tracer.span("matrix");
+        let options = MatrixRunOptions {
+            span: Some(&root),
+            metrics: Some(&sink),
+            ..Default::default()
+        };
+        m.run_with(&options)
+    };
+    write_artifacts(&traced, &traced_dir);
+
+    // Telemetry actually collected something...
+    assert!(!tracer.records().is_empty());
+    assert!(!sink.snapshot().is_empty());
+    // ...and perturbed nothing: every txt/json/svg/csv/timeline byte
+    // matches the untraced run.
+    assert_trees_identical(&plain_dir, &traced_dir);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn store_counters_agree_with_cache_stats_across_cold_and_warm_runs() {
+    let dir = tmpdir("warm-metrics");
+    let store = CellStore::open(&dir).unwrap();
+    let m = small_matrix();
+    let options = MatrixRunOptions {
+        store: Some(&store),
+        incremental: true,
+        ..Default::default()
+    };
+
+    let cold = m.run_with(&options);
+    assert_eq!(cold.cache_stats, CacheStats { hits: 0, misses: 8, evictions: 0 });
+    assert_eq!(cold.metrics.counter("store.misses"), 8);
+    assert_eq!(cold.metrics.counter("matrix.cells.ran"), 8);
+    assert_eq!(cold.metrics.counter("matrix.cells.replayed"), 0);
+    assert!(cold.metrics.counter("store.bytes_written") > 0);
+
+    let warm = m.run_with(&options);
+    assert_eq!(warm.cache_stats, CacheStats { hits: 8, misses: 0, evictions: 0 });
+    assert_eq!(warm.metrics.counter("matrix.cells.replayed"), 8);
+    assert_eq!(warm.metrics.counter("matrix.cells.ran"), 0);
+    assert_eq!(warm.metrics.counter("store.bytes_written"), 0);
+
+    // CacheStats is *derived* from the registry, so the two views can
+    // never drift — the invariant this assertion pins.
+    for run in [&cold, &warm] {
+        assert_eq!(run.cache_stats.hits, run.metrics.counter("store.hits"));
+        assert_eq!(run.cache_stats.misses, run.metrics.counter("store.misses"));
+        assert_eq!(run.cache_stats.evictions, run.metrics.counter("store.evictions"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
