@@ -8,7 +8,11 @@
 //!   pre-memoization behaviour,
 //! * SVG chart emission,
 //! * the exact set-associative cache simulator (ablation: exact vs
-//!   analytic) — `cache_exact_100k_accesses` is the other headline,
+//!   analytic) — `cache_exact_100k_accesses` is the other headline;
+//!   `cache_sim_soa_stream` tracks the SoA tag-scan on a hit-heavy
+//!   stream,
+//! * streaming CSV ingest throughput (`ingest_100k_rows`: the
+//!   `repro ingest` chunked-parse + dedup-fold hot loop),
 //! * PJRT train-step execution (when artifacts are present) — the only
 //!   real-hardware hot path.
 //!
@@ -264,6 +268,54 @@ fn main() {
         black_box(acc);
         100_000
     });
+    // the SoA tag-scan hot loop under a high-hit-rate looping stream —
+    // the best case for the contiguous tag array (every access walks
+    // the set's tags; most return on the hit path without touching the
+    // victim bookkeeping)
+    b.case("cache_sim_soa_stream", || {
+        let mut h = cache_sim::v100_scaled(64);
+        for i in 0..100_000u64 {
+            // Small-loop reuse with a strided escape every 16th access:
+            // mostly L1 hits, enough misses to exercise eviction.
+            let addr = if i % 16 == 0 { i * 128 } else { (i % 64) * 128 };
+            h.access(addr);
+        }
+        black_box(h.l1.hits);
+        100_000
+    });
+
+    // streaming CSV ingest throughput: 100k (kernel, metric) rows — the
+    // `repro ingest` hot loop (chunked line re-assembly + row parse +
+    // digest-keyed fold), CSV text built outside the timed region
+    {
+        let metric_names = [
+            "sm__cycles_elapsed.avg",
+            "dram__bytes.sum",
+            "lts__t_bytes.sum",
+            "l1tex__t_bytes.sum",
+        ];
+        let mut csv = String::with_capacity(100_000 * 48);
+        csv.push_str("\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n");
+        for _ in 0..100u32 {
+            for k in 0..250u32 {
+                for m in &metric_names {
+                    csv.push_str(&format!("\"kern_{k}\",\"{m}\",{},{}\n", k + 1, 1 + k % 5));
+                }
+            }
+        }
+        b.case("ingest_100k_rows", move || {
+            let spec = GpuSpec::v100();
+            let out = hroofline::profiler::ingest::from_reader(
+                &mut csv.as_bytes(),
+                &spec,
+                &hroofline::profiler::IngestConfig::new(),
+            )
+            .unwrap();
+            assert_eq!(out.stats.unique_kernels, 250);
+            black_box(out.stats.rows);
+            100_000
+        });
+    }
 
     // supervision overhead ablation: the panic-safe fan-out vs the raw
     // one over 10k trivially cheap items — the worst case for per-item

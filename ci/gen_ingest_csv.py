@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Generate a synthetic Nsight-Compute-style counter CSV for the CI
+ingest smoke (`.github/workflows/ci.yml`, job `ingest-smoke`).
+
+Shape: KERNELS distinct kernels x METRICS rows each, repeated REPEATS
+times — repeated launches re-state the same per-kernel aggregates, the
+way consecutive `--csv` exports of a steady-state training loop do. The
+defaults produce 120,000 data rows over 300 unique kernels, so a correct
+streaming ingest reports exactly:
+
+    rows            = KERNELS * len(METRICS) * REPEATS   (120000)
+    unique_kernels  = KERNELS                            (300)
+    dedup ratio     = len(METRICS) * REPEATS             (400.0)
+    peak resident accumulators = unique_kernels          (300)
+
+Usage: gen_ingest_csv.py OUT.csv [KERNELS] [REPEATS]
+"""
+
+import sys
+
+# The paper's Table II time/FLOP/byte counters plus two fallback-lane
+# extras, exercising both CounterSet storage lanes.
+METRICS = [
+    "sm__cycles_elapsed.avg",
+    "sm__cycles_elapsed.avg.per_second",
+    "sm__inst_executed_pipe_tensor.sum",
+    "l1tex__t_bytes.sum",
+    "lts__t_bytes.sum",
+    "dram__bytes.sum",
+    "smsp__warps_active.avg",
+    "launch__occupancy_limit_blocks",
+]
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "ingest-smoke.csv"
+    kernels = int(sys.argv[2]) if len(sys.argv) > 2 else 300
+    repeats = int(sys.argv[3]) if len(sys.argv) > 3 else 50
+    with open(out, "w", newline="") as f:
+        f.write("# device=V100-SXM2-16GB\n")
+        f.write('"Kernel Name","Metric Name","Metric Value","Invocations"\n')
+        for _ in range(repeats):
+            for k in range(kernels):
+                # Commas in every name: the quoted-field parser is part
+                # of what the smoke exercises. Values and invocations
+                # are functions of (kernel, metric) only, so repeats
+                # restate identical aggregates (no conflicts).
+                name = f"void deepcam_kernel_{k}<float, {k % 7}>(float*, int)"
+                inv = 1 + k % 9
+                for m, metric in enumerate(METRICS):
+                    value = (k + 1) * 1000 + m
+                    f.write(f'"{name}","{metric}",{value},{inv}\n')
+    rows = kernels * len(METRICS) * repeats
+    print(f"wrote {out}: {rows} rows, {kernels} unique kernels")
+
+
+if __name__ == "__main__":
+    main()

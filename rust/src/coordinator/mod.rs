@@ -6,7 +6,7 @@ pub mod commands;
 pub mod train;
 
 pub use commands::{
-    cmd_bench_diff, cmd_ert, cmd_matrix, cmd_metrics, cmd_profile, cmd_report, cmd_trace,
-    cmd_train, EXIT_MATRIX_CELLS_FAILED,
+    cmd_bench_diff, cmd_ert, cmd_ingest, cmd_matrix, cmd_metrics, cmd_profile, cmd_report,
+    cmd_trace, cmd_train, ingest_cmd_spec, EXIT_MATRIX_CELLS_FAILED,
 };
 pub use train::{run_training, TrainConfig, TrainResult};

@@ -14,6 +14,9 @@
 //!               addressed store, --shard/--merge split the sweep
 //!               across CI jobs and union the results
 //!   report      regenerate paper artifacts (figures/tables) into out/
+//!   ingest      stream a raw Nsight Compute counter CSV (any size;
+//!               bounded memory) into the same artifact set as a
+//!               simulated profile: `repro ingest <csv>`
 //!   train       end-to-end: run the AOT-compiled DeepCAM-lite training
 //!               loop through PJRT, logging the loss curve
 //!   bench-diff  gate the bench trajectory against a committed baseline
@@ -66,11 +69,19 @@ fn main() {
     if verbose {
         log::set_level(Level::Debug);
     }
-    // `trace report <path>` takes a positional subcommand + path, which
-    // the flag-only Cmd grammar can't express — route it directly. The
-    // Cmd registered below only serves the usage listing.
+    // `trace report <path>` and `ingest <csv>` take positional
+    // operands, which the flag-only Cmd grammar can't express — route
+    // them directly. The Cmds registered below only serve the usage
+    // listing.
     if argv.first().is_some_and(|a| a == "trace") {
         if let Err(e) = hroofline::coordinator::cmd_trace(&argv[1..]) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
+    if argv.first().is_some_and(|a| a == "ingest") {
+        if let Err(e) = hroofline::coordinator::cmd_ingest(&argv[1..]) {
             eprintln!("error: {e:#}");
             std::process::exit(1);
         }
@@ -175,7 +186,8 @@ fn main() {
                 .flag_required("fresh", "freshly generated BENCH_<group>.json")
                 .flag("max-regress", "0.25", "allowed fractional ns/iter slowdown"),
         )
-        // Parsed by the early intercept above; listed here for usage.
+        // Parsed by the early intercepts above; listed here for usage.
+        .command(hroofline::coordinator::ingest_cmd_spec())
         .command(Cmd::new("trace", "Digest a span trace: repro trace report <trace.jsonl>"));
 
     let (cmd, parsed) = match app.dispatch(&argv) {

@@ -16,17 +16,16 @@
 //! the scenario matrix cell store ([`crate::scenario::store`]), where a
 //! decoded profile must regenerate byte-identical artifacts.
 
-use std::collections::BTreeMap;
-
 use crate::device::GpuSpec;
-use crate::util::error::{bail, Context, Result};
-use crate::util::json::Json;
+use crate::profiler::ingest::{self, IngestConfig};
 use crate::profiler::profile::{KernelProfile, KernelTiming, Profile};
 use crate::sim::counters::CounterSet;
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
 
 /// Comment prefix carrying the device the profile was collected on —
 /// skipped (and restored) by [`from_csv`], ignored by plain CSV readers.
-const DEVICE_PREFIX: &str = "# device=";
+pub(crate) const DEVICE_PREFIX: &str = "# device=";
 
 /// Serialize a profile to CSV. Profiles stamped with a device (every
 /// session-produced profile) lead with a `# device=<name>` comment so
@@ -75,7 +74,7 @@ pub struct RowDiagnostics {
 impl RowDiagnostics {
     pub const CAP: usize = 64;
 
-    fn push(&mut self, line: usize, reason: String) {
+    pub(crate) fn push(&mut self, line: usize, reason: String) {
         if self.rows.len() < Self::CAP {
             self.rows.push(RowDiagnostic { line, reason });
         } else {
@@ -93,7 +92,10 @@ impl RowDiagnostics {
     }
 
     /// Human-readable digest for CLI surfacing: one line per diagnostic
-    /// plus an overflow trailer when the cap was hit.
+    /// plus, when the cap was hit, an overflow trailer carrying the
+    /// *total* rejected-row count — at millions of rows the 64 retained
+    /// diagnostics are a sample, and hiding the total would hide the
+    /// real error rate.
     pub fn summary(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
@@ -101,103 +103,29 @@ impl RowDiagnostics {
             let _ = writeln!(out, "line {}: {}", d.line, d.reason);
         }
         if self.suppressed > 0 {
-            let _ = writeln!(out, "... and {} more malformed row(s)", self.suppressed);
+            let _ = writeln!(
+                out,
+                "... and {} more malformed row(s) ({} rejected in total)",
+                self.suppressed,
+                self.total()
+            );
         }
         out
     }
-}
-
-/// Split off the optional `# device=` stamp and the column header.
-/// Returns the resolved device, the 1-based file line number of the
-/// first data row, and the remaining lines. Header problems are fatal
-/// in both strict and lenient ingest — without a recognized header
-/// nothing downstream is trustworthy.
-fn split_header<'a>(
-    text: &'a str,
-    spec: &GpuSpec,
-) -> Result<(String, usize, std::str::Lines<'a>)> {
-    let mut lines = text.lines();
-    let mut header = lines.next().context("empty csv")?;
-    // Optional device stamp ahead of the column header; external Nsight
-    // exports without one fall back to the caller's spec.
-    let mut device = spec.name.clone();
-    let mut first_data_line = 2;
-    if let Some(name) = header.strip_prefix(DEVICE_PREFIX) {
-        device = name.trim().to_string();
-        header = lines.next().context("csv has a device line but no header")?;
-        first_data_line = 3;
-    }
-    if !header.contains("Kernel Name") || !header.contains("Metric Name") {
-        bail!("unrecognized csv header: {header}");
-    }
-    Ok((device, first_data_line, lines))
-}
-
-/// Parse and fold one data row into the per-kernel accumulator —
-/// shared by the strict and lenient ingest paths, so both enforce
-/// identical row semantics (including the invocation-conflict check).
-fn ingest_row(
-    line: &str,
-    lineno: usize,
-    per_kernel: &mut BTreeMap<String, (u64, CounterSet)>,
-) -> Result<()> {
-    let fields =
-        parse_csv_row(line).with_context(|| format!("csv line {lineno}: '{line}'"))?;
-    if fields.len() != 4 {
-        bail!("csv line {lineno}: expected 4 fields, got {}", fields.len());
-    }
-    let value: f64 = fields[2]
-        .parse()
-        .with_context(|| format!("csv line {lineno}: bad value '{}'", fields[2]))?;
-    let invocations: u64 = fields[3]
-        .parse()
-        .with_context(|| format!("csv line {lineno}: bad invocations '{}'", fields[3]))?;
-    let entry = per_kernel
-        .entry(fields[0].clone())
-        .or_insert_with(|| (invocations, CounterSet::new()));
-    // Nsight emits one invocation count per kernel; a disagreement
-    // means a corrupt or spliced export. The old code silently let the
-    // last row win — now it is a structured error naming both values.
-    if entry.0 != invocations {
-        bail!(
-            "csv line {lineno}: conflicting Invocations for kernel '{}': \
-             {} earlier vs {} here",
-            fields[0],
-            entry.0,
-            invocations
-        );
-    }
-    entry.1.set(&fields[1], value);
-    Ok(())
-}
-
-fn profile_from(
-    per_kernel: BTreeMap<String, (u64, CounterSet)>,
-    device: String,
-    spec: &GpuSpec,
-) -> Profile {
-    let mut profile = Profile::new();
-    profile.device = device;
-    for (name, (invocations, counters)) in per_kernel {
-        profile.record(&name, invocations, &counters, spec);
-    }
-    profile
 }
 
 /// Parse a CSV back into a [`Profile`] (aggregated counters per
 /// kernel). Strict: the first malformed row — including rows whose
 /// `Invocations` conflict with an earlier row of the same kernel — is
 /// an error carrying its file line number.
+///
+/// A thin wrapper over the streaming core
+/// ([`crate::profiler::ingest::from_reader`]) with the text as the
+/// reader — one implementation for the in-memory and streaming paths,
+/// byte-identical output (asserted by `rust/tests/ingest_semantics.rs`).
 pub fn from_csv(text: &str, spec: &GpuSpec) -> Result<Profile> {
-    let (device, first_data_line, lines) = split_header(text, spec)?;
-    let mut per_kernel: BTreeMap<String, (u64, CounterSet)> = BTreeMap::new();
-    for (offset, line) in lines.enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        ingest_row(line, first_data_line + offset, &mut per_kernel)?;
-    }
-    Ok(profile_from(per_kernel, device, spec))
+    let mut src = text.as_bytes();
+    Ok(ingest::from_reader(&mut src, spec, &IngestConfig::new())?.profile)
 }
 
 /// Lenient ingest for real-world exports: malformed rows are *skipped*
@@ -206,21 +134,12 @@ pub fn from_csv(text: &str, spec: &GpuSpec) -> Result<Profile> {
 /// lands in the profile. Header problems remain fatal. A conflicting-
 /// invocations row is skipped too — the kernel keeps the first count
 /// it declared. Surfaced on the CLI as `repro profile --from-csv
-/// <file> --lenient`.
+/// <file> --lenient`. Same thin wrapper over the streaming core as
+/// [`from_csv`].
 pub fn from_csv_lenient(text: &str, spec: &GpuSpec) -> Result<(Profile, RowDiagnostics)> {
-    let (device, first_data_line, lines) = split_header(text, spec)?;
-    let mut per_kernel: BTreeMap<String, (u64, CounterSet)> = BTreeMap::new();
-    let mut diagnostics = RowDiagnostics::default();
-    for (offset, line) in lines.enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        let lineno = first_data_line + offset;
-        if let Err(e) = ingest_row(line, lineno, &mut per_kernel) {
-            diagnostics.push(lineno, format!("{e:#}"));
-        }
-    }
-    Ok((profile_from(per_kernel, device, spec), diagnostics))
+    let mut src = text.as_bytes();
+    let out = ingest::from_reader(&mut src, spec, &IngestConfig::new().lenient(true))?;
+    Ok((out.profile, out.diagnostics))
 }
 
 /// Serialize a profile to a JSON document carrying every field — unlike
@@ -314,7 +233,8 @@ fn escape(s: &str) -> String {
 }
 
 /// Minimal RFC-4180-ish row parser (quoted fields, doubled quotes).
-fn parse_csv_row(line: &str) -> Result<Vec<String>> {
+/// Shared with the streaming aggregator in [`crate::profiler::ingest`].
+pub(crate) fn parse_csv_row(line: &str) -> Result<Vec<String>> {
     let mut fields = Vec::new();
     let mut cur = String::new();
     let mut chars = line.chars().peekable();
@@ -549,6 +469,14 @@ mod tests {
         assert_eq!(diags.suppressed, 10);
         assert_eq!(diags.total(), RowDiagnostics::CAP + 10);
         assert!(diags.summary().contains("10 more malformed row(s)"), "{}", diags.summary());
+        // The trailer reports the *total* rejected-row count, not just
+        // the overflow past the cap — the cap must never hide the real
+        // error rate of a large export.
+        assert!(
+            diags.summary().contains(&format!("{} rejected in total", RowDiagnostics::CAP + 10)),
+            "{}",
+            diags.summary()
+        );
     }
 
     #[test]

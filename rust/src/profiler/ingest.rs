@@ -1,0 +1,477 @@
+//! Streaming Nsight CSV ingestion with bounded memory.
+//!
+//! [`crate::profiler::export::from_csv`] historically materialized the
+//! whole export as one `String` plus a row `Vec` — fine at paper scale,
+//! hopeless for real traces with millions of kernel launches. This
+//! module is the production-scale path: a chunked reader over any
+//! `std::io::Read` (fixed-size buffer, lines re-assembled across chunk
+//! boundaries) feeding an online aggregator that dedups launches into
+//! digest-keyed accumulators ([`crate::util::digest::fnv1a64`] over the
+//! kernel name, the same FNV substrate `SimCache`/`CellStore` keys come
+//! from). Resident memory is O(unique kernels) + one chunk + the
+//! longest line — never O(rows).
+//!
+//! The in-memory entry points (`from_csv`/`from_csv_lenient`) are thin
+//! wrappers over [`from_reader`], so the two paths are one
+//! implementation and produce byte-identical [`Profile`]s — asserted by
+//! `rust/tests/ingest_semantics.rs`.
+//!
+//! Telemetry (armed by [`IngestConfig::with_span`]/`with_metrics`, the
+//! PR-9 idiom): an `ingest` span wrapping the run with `ingest.chunk`
+//! children per buffer refill and an `ingest.aggregate` child for the
+//! final profile build, plus `ingest.rows` / `ingest.unique_kernels` /
+//! `ingest.bytes` counters.
+
+use std::collections::HashMap;
+use std::io::Read;
+
+use crate::device::GpuSpec;
+use crate::profiler::export::{parse_csv_row, RowDiagnostics, DEVICE_PREFIX};
+use crate::profiler::profile::Profile;
+use crate::sim::counters::CounterSet;
+use crate::util::digest::fnv1a64;
+use crate::util::error::{anyhow, bail, Context, Result};
+
+/// Knobs for a streaming ingest. Defaults match the strict in-memory
+/// path: `from_csv` is literally `from_reader` with this default.
+pub struct IngestConfig<'a> {
+    lenient: bool,
+    chunk_bytes: usize,
+    span: Option<&'a crate::obs::Span>,
+    metrics: Option<&'a crate::obs::MetricsRegistry>,
+}
+
+impl<'a> IngestConfig<'a> {
+    /// Default streaming read granularity. Small enough to keep the
+    /// resident buffer negligible, large enough that syscall count is
+    /// not the bottleneck on multi-GB exports.
+    pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
+
+    pub fn new() -> IngestConfig<'a> {
+        IngestConfig {
+            lenient: false,
+            chunk_bytes: Self::DEFAULT_CHUNK_BYTES,
+            span: None,
+            metrics: None,
+        }
+    }
+
+    /// Skip-and-report malformed rows instead of failing the file
+    /// (the `from_csv_lenient` semantics).
+    pub fn lenient(mut self, yes: bool) -> IngestConfig<'a> {
+        self.lenient = yes;
+        self
+    }
+
+    /// Streaming read granularity in bytes (clamped to ≥ 1). Output is
+    /// invariant under this knob — tests drive it down to 1 byte to
+    /// force every row across a buffer boundary.
+    pub fn chunk_bytes(mut self, n: usize) -> IngestConfig<'a> {
+        self.chunk_bytes = n.max(1);
+        self
+    }
+
+    /// Hang the `ingest` span (and its chunk/aggregate children) off
+    /// this parent.
+    pub fn with_span(mut self, span: &'a crate::obs::Span) -> IngestConfig<'a> {
+        self.span = Some(span);
+        self
+    }
+
+    /// Sink `ingest.*` counters into this registry.
+    pub fn with_metrics(mut self, m: &'a crate::obs::MetricsRegistry) -> IngestConfig<'a> {
+        self.metrics = Some(m);
+        self
+    }
+}
+
+impl Default for IngestConfig<'_> {
+    fn default() -> Self {
+        IngestConfig::new()
+    }
+}
+
+/// What a streaming ingest observed, alongside the profile itself.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IngestStats {
+    /// Non-blank data rows seen past the header (folded or, in lenient
+    /// mode, rejected).
+    pub rows: u64,
+    /// Distinct kernel names — the accumulator count.
+    pub unique_kernels: usize,
+    /// Raw bytes pulled from the reader.
+    pub bytes_read: u64,
+    /// High-water mark of resident accumulators. Aggregation never
+    /// evicts, so this equals `unique_kernels` — the bounded-memory
+    /// contract in one number, independent of `rows`.
+    pub peak_resident_accumulators: usize,
+}
+
+impl IngestStats {
+    /// Launch-dedup compression: data rows per unique kernel.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.unique_kernels == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.unique_kernels as f64
+        }
+    }
+}
+
+/// A completed streaming ingest: the aggregated profile, the run stats,
+/// and (lenient mode) the per-row diagnostics. Strict runs always carry
+/// empty diagnostics.
+pub struct IngestOutput {
+    pub profile: Profile,
+    pub stats: IngestStats,
+    pub diagnostics: RowDiagnostics,
+}
+
+/// Chunked line reader: pulls fixed-size chunks from the source and
+/// re-assembles `\n`-terminated lines across chunk boundaries, matching
+/// `str::lines` exactly (one trailing `\r` stripped from terminated
+/// lines; an unterminated final line emitted verbatim). Resident memory
+/// is one chunk plus the longest line.
+struct LineReader<'r> {
+    src: &'r mut dyn Read,
+    chunk_bytes: usize,
+    buf: Vec<u8>,
+    start: usize,
+    cur: (usize, usize),
+    eof: bool,
+    bytes_read: u64,
+    span: &'r crate::obs::Span,
+}
+
+impl<'r> LineReader<'r> {
+    fn new(
+        src: &'r mut dyn Read,
+        chunk_bytes: usize,
+        span: &'r crate::obs::Span,
+    ) -> LineReader<'r> {
+        LineReader {
+            src,
+            chunk_bytes,
+            buf: Vec::with_capacity(chunk_bytes),
+            start: 0,
+            cur: (0, 0),
+            eof: false,
+            bytes_read: 0,
+            span,
+        }
+    }
+
+    /// Advance to the next line; `false` at end of input. The line is
+    /// readable via [`LineReader::line`] until the next call.
+    fn advance(&mut self) -> Result<bool> {
+        loop {
+            if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
+                let end = self.start + pos;
+                let line_end =
+                    if end > self.start && self.buf[end - 1] == b'\r' { end - 1 } else { end };
+                self.cur = (self.start, line_end);
+                self.start = end + 1;
+                return Ok(true);
+            }
+            if self.eof {
+                if self.start < self.buf.len() {
+                    // Trailing line without a terminator: emitted as-is
+                    // (str::lines does not strip a bare trailing \r).
+                    self.cur = (self.start, self.buf.len());
+                    self.start = self.buf.len();
+                    return Ok(true);
+                }
+                return Ok(false);
+            }
+            // No terminator buffered: drop consumed bytes and pull the
+            // next chunk. The buffer only outgrows chunk_bytes when one
+            // line does.
+            self.buf.drain(..self.start);
+            self.start = 0;
+            let old_len = self.buf.len();
+            self.buf.resize(old_len + self.chunk_bytes, 0);
+            let mut chunk_span = self.span.child("ingest.chunk");
+            let n = self
+                .src
+                .read(&mut self.buf[old_len..])
+                .context("reading csv chunk")?;
+            self.buf.truncate(old_len + n);
+            self.bytes_read += n as u64;
+            chunk_span.set("bytes", n.to_string());
+            if n == 0 {
+                self.eof = true;
+            }
+        }
+    }
+
+    fn line(&self) -> &[u8] {
+        &self.buf[self.cur.0..self.cur.1]
+    }
+}
+
+/// One resident per-kernel accumulator.
+struct Acc {
+    name: String,
+    invocations: u64,
+    counters: CounterSet,
+}
+
+/// Online launch-dedup: rows fold into accumulators keyed by the FNV
+/// digest of the kernel name (collision chains checked by full name
+/// equality, so a 64-bit collision costs a comparison, never
+/// correctness). Memory is O(unique kernels) regardless of row count.
+#[derive(Default)]
+struct OnlineAggregator {
+    index: HashMap<u64, Vec<usize>>,
+    accs: Vec<Acc>,
+}
+
+impl OnlineAggregator {
+    /// Parse and fold one data row — the single definition of row
+    /// semantics for both strict and lenient, streaming and in-memory
+    /// ingest (field count, value/invocations parses, and the
+    /// conflicting-Invocations check).
+    fn fold_row(&mut self, line: &str, lineno: usize) -> Result<()> {
+        let fields =
+            parse_csv_row(line).with_context(|| format!("csv line {lineno}: '{line}'"))?;
+        if fields.len() != 4 {
+            bail!("csv line {lineno}: expected 4 fields, got {}", fields.len());
+        }
+        let value: f64 = fields[2]
+            .parse()
+            .with_context(|| format!("csv line {lineno}: bad value '{}'", fields[2]))?;
+        let invocations: u64 = fields[3]
+            .parse()
+            .with_context(|| format!("csv line {lineno}: bad invocations '{}'", fields[3]))?;
+        let digest = fnv1a64(fields[0].as_bytes());
+        let chain = self.index.entry(digest).or_default();
+        let idx = match chain.iter().copied().find(|&i| self.accs[i].name == fields[0]) {
+            Some(i) => i,
+            None => {
+                let i = self.accs.len();
+                self.accs.push(Acc {
+                    name: fields[0].clone(),
+                    invocations,
+                    counters: CounterSet::new(),
+                });
+                chain.push(i);
+                i
+            }
+        };
+        let acc = &mut self.accs[idx];
+        // Nsight emits one invocation count per kernel; a disagreement
+        // means a corrupt or spliced export. Structured error naming
+        // both values (lenient mode skips the row; the kernel keeps the
+        // first count it declared).
+        if acc.invocations != invocations {
+            bail!(
+                "csv line {lineno}: conflicting Invocations for kernel '{}': \
+                 {} earlier vs {} here",
+                fields[0],
+                acc.invocations,
+                invocations
+            );
+        }
+        acc.counters.set(&fields[1], value);
+        Ok(())
+    }
+}
+
+/// Stream a Nsight-idiom counter CSV out of any reader into an
+/// aggregated [`Profile`] — the one implementation behind `from_csv`,
+/// `from_csv_lenient`, and `repro ingest`. Header problems (including a
+/// missing header) are fatal in both modes; row handling follows
+/// `cfg.lenient`.
+pub fn from_reader(
+    src: &mut dyn Read,
+    spec: &GpuSpec,
+    cfg: &IngestConfig,
+) -> Result<IngestOutput> {
+    let mut ingest_span = match cfg.span {
+        Some(parent) => parent.child("ingest"),
+        None => crate::obs::Span::disabled(),
+    };
+    let mut reader = LineReader::new(src, cfg.chunk_bytes, &ingest_span);
+
+    // Header: optional `# device=` stamp, then the column header —
+    // identical acceptance to the historical split_header.
+    if !reader.advance()? {
+        bail!("empty csv");
+    }
+    let mut header =
+        std::str::from_utf8(reader.line()).context("csv header is not valid utf-8")?;
+    let mut device = spec.name.clone();
+    let mut first_data_line = 2usize;
+    if let Some(name) = header.strip_prefix(DEVICE_PREFIX) {
+        device = name.trim().to_string();
+        if !reader.advance()? {
+            bail!("csv has a device line but no header");
+        }
+        header =
+            std::str::from_utf8(reader.line()).context("csv header is not valid utf-8")?;
+        first_data_line = 3;
+    }
+    if !header.contains("Kernel Name") || !header.contains("Metric Name") {
+        bail!("unrecognized csv header: {header}");
+    }
+
+    let mut agg = OnlineAggregator::default();
+    let mut diagnostics = RowDiagnostics::default();
+    let mut stats = IngestStats::default();
+    let mut lineno = first_data_line;
+    while reader.advance()? {
+        let current = lineno;
+        lineno += 1;
+        let outcome = match std::str::from_utf8(reader.line()) {
+            Ok(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                stats.rows += 1;
+                agg.fold_row(line, current)
+            }
+            Err(_) => {
+                stats.rows += 1;
+                Err(anyhow!("csv line {current}: not valid utf-8"))
+            }
+        };
+        if let Err(e) = outcome {
+            if cfg.lenient {
+                diagnostics.push(current, format!("{e:#}"));
+            } else {
+                return Err(e);
+            }
+        }
+        stats.peak_resident_accumulators =
+            stats.peak_resident_accumulators.max(agg.accs.len());
+    }
+
+    let profile = {
+        let _agg_span = ingest_span.child("ingest.aggregate");
+        let mut profile = Profile::new();
+        profile.device = device;
+        for acc in &agg.accs {
+            profile.record(&acc.name, acc.invocations, &acc.counters, spec);
+        }
+        profile
+    };
+    stats.unique_kernels = agg.accs.len();
+    stats.bytes_read = reader.bytes_read;
+    drop(reader);
+
+    ingest_span.set("rows", stats.rows.to_string());
+    ingest_span.set("unique_kernels", stats.unique_kernels.to_string());
+    ingest_span.set("bytes", stats.bytes_read.to_string());
+    if let Some(m) = cfg.metrics {
+        m.add("ingest.rows", stats.rows);
+        m.add("ingest.unique_kernels", stats.unique_kernels as u64);
+        m.add("ingest.bytes", stats.bytes_read);
+    }
+    Ok(IngestOutput { profile, stats, diagnostics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HEADER: &str = "\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n";
+
+    fn ingest(text: &str, cfg: IngestConfig) -> IngestOutput {
+        let spec = GpuSpec::v100();
+        let mut src = text.as_bytes();
+        from_reader(&mut src, &spec, &cfg).unwrap()
+    }
+
+    #[test]
+    fn stats_count_rows_uniques_and_bytes() {
+        let csv = format!(
+            "{HEADER}\"a\",\"sm__cycles_elapsed.avg\",1000,1\n\
+             \"a\",\"dram__bytes.sum\",2000,1\n\
+             \"b\",\"sm__cycles_elapsed.avg\",3000,2\n"
+        );
+        let out = ingest(&csv, IngestConfig::new());
+        assert_eq!(out.stats.rows, 3);
+        assert_eq!(out.stats.unique_kernels, 2);
+        assert_eq!(out.stats.peak_resident_accumulators, 2);
+        assert_eq!(out.stats.bytes_read, csv.len() as u64);
+        assert!((out.stats.dedup_ratio() - 1.5).abs() < 1e-12);
+        assert!(out.diagnostics.is_empty());
+        assert_eq!(out.profile.kernel("b").unwrap().invocations, 2);
+    }
+
+    #[test]
+    fn output_is_invariant_under_chunk_size() {
+        // Device stamp + CRLF line endings + no trailing newline, read
+        // at every pathological chunk size including 1 byte.
+        let csv = format!(
+            "# device=V100-SXM2-16GB\r\n{HEADER}\"k, with commas\",\"dram__bytes.sum\",42,1\r\n\
+             \"k2\",\"lts__t_bytes.sum\",7,3"
+        );
+        let reference = ingest(&csv, IngestConfig::new());
+        for chunk in [1usize, 2, 3, 7, 13, 31, 64, 4096] {
+            let out = ingest(&csv, IngestConfig::new().chunk_bytes(chunk));
+            assert_eq!(out.profile, reference.profile, "chunk_bytes={chunk}");
+            assert_eq!(out.stats, reference.stats, "chunk_bytes={chunk}");
+        }
+        assert_eq!(reference.profile.device, "V100-SXM2-16GB");
+        assert!(reference.profile.kernel("k, with commas").is_some());
+        assert_eq!(reference.profile.kernel("k2").unwrap().invocations, 3);
+    }
+
+    #[test]
+    fn digest_chains_disambiguate_by_name() {
+        // Distinct names always land in distinct accumulators even when
+        // folded through the digest index (collision chains compare the
+        // full name; with distinct digests this is the common path).
+        let mut csv = String::from(HEADER);
+        for i in 0..100 {
+            csv.push_str(&format!("\"kernel_{i}\",\"dram__bytes.sum\",{i},1\n"));
+        }
+        let out = ingest(&csv, IngestConfig::new());
+        assert_eq!(out.stats.unique_kernels, 100);
+        for i in 0..100 {
+            let k = out.profile.kernel(&format!("kernel_{i}")).unwrap();
+            assert_eq!(k.counters.get("dram__bytes.sum"), i as f64);
+        }
+    }
+
+    #[test]
+    fn strict_mode_propagates_row_errors_with_line_numbers() {
+        let csv = format!("{HEADER}\"k\",\"m\",notanumber,1\n");
+        let spec = GpuSpec::v100();
+        let err = from_reader(&mut csv.as_bytes(), &spec, &IngestConfig::new()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("bad value"), "{msg}");
+    }
+
+    #[test]
+    fn lenient_rejected_rows_still_count_in_stats() {
+        let csv = format!("{HEADER}garbage,row\n\"k\",\"dram__bytes.sum\",1,1\n");
+        let out = ingest(&csv, IngestConfig::new().lenient(true));
+        assert_eq!(out.stats.rows, 2, "rejected rows are still rows");
+        assert_eq!(out.stats.unique_kernels, 1);
+        assert_eq!(out.diagnostics.total(), 1);
+    }
+
+    #[test]
+    fn telemetry_arming_changes_no_output() {
+        let csv = format!("{HEADER}\"k\",\"dram__bytes.sum\",5,2\n");
+        let plain = ingest(&csv, IngestConfig::new());
+        let tracer = crate::obs::Tracer::fixed();
+        let metrics = crate::obs::MetricsRegistry::new();
+        let armed = {
+            let root = tracer.span("test");
+            ingest(&csv, IngestConfig::new().with_span(&root).with_metrics(&metrics))
+        };
+        assert_eq!(armed.profile, plain.profile);
+        assert_eq!(armed.stats, plain.stats);
+        let names: Vec<String> =
+            tracer.records().into_iter().map(|s| s.name).collect();
+        assert!(names.contains(&"ingest".to_string()), "{names:?}");
+        assert!(names.contains(&"ingest.chunk".to_string()), "{names:?}");
+        assert!(names.contains(&"ingest.aggregate".to_string()), "{names:?}");
+        assert_eq!(metrics.counter("ingest.rows"), 1);
+        assert_eq!(metrics.counter("ingest.unique_kernels"), 1);
+        assert_eq!(metrics.counter("ingest.bytes"), csv.len() as u64);
+    }
+}

@@ -20,15 +20,21 @@
 //!   the time-based Roofline's step-time breakdown (arXiv 2009.04598);
 //! * **serialization** ([`export`]): CSV in the `nv-nsight-cu-cli --csv`
 //!   idiom for external tooling, plus a lossless JSON form used by the
-//!   scenario matrix's incremental cell store.
+//!   scenario matrix's incremental cell store;
+//! * **streaming ingestion** ([`ingest`]): the bounded-memory CSV path
+//!   for real (multi-million-row) Nsight exports — chunked reading with
+//!   online kernel dedup into digest-keyed accumulators; `from_csv` is
+//!   a thin wrapper over it, and `repro ingest` surfaces it on the CLI.
 
 pub mod export;
+pub mod ingest;
 pub mod metrics;
 pub mod profile;
 pub mod session;
 pub mod timeline;
 
 pub use export::{profile_from_json, profile_to_json, RowDiagnostic, RowDiagnostics};
+pub use ingest::{IngestConfig, IngestOutput, IngestStats};
 pub use metrics::{Metric, MetricRegistry};
 pub use profile::{KernelProfile, KernelTiming, Profile};
 pub use session::{ProfileRequest, Session, SessionConfig, SessionError};

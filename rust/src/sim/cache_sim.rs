@@ -9,16 +9,6 @@
 //! section of the hotpath bench to quantify the cost of exact simulation
 //! versus the analytic fast path.
 
-/// One cached line slot: tag plus the age stamp of its last use.
-/// `stamp == 0` marks an invalid (never-filled) slot.
-#[derive(Clone, Copy, Debug)]
-struct Line {
-    tag: u64,
-    stamp: u64,
-}
-
-const INVALID: Line = Line { tag: 0, stamp: 0 };
-
 /// One set-associative LRU cache level.
 ///
 /// Recency is tracked with an **age-stamp scheme**: every access gets a
@@ -27,9 +17,17 @@ const INVALID: Line = Line { tag: 0, stamp: 0 };
 /// fill first). Exact LRU, but `access` only scans the ways — no
 /// MRU-list `remove`/`insert` shifting per access like the original
 /// Vec-stack representation (the `cache_exact_100k_accesses` hot loop).
+///
+/// Storage is SoA: two flat preallocated arrays (tags and stamps),
+/// set-major, indexed by `set * ways + way`; `stamp == 0` marks an
+/// invalid (never-filled) slot. The tag scan — the hot half of every
+/// access — walks a contiguous `u64` run instead of striding through
+/// interleaved (tag, stamp) pairs, which halves the bytes touched on
+/// the common hit path (the `cache_sim_soa_stream` bench case).
 #[derive(Clone, Debug)]
 pub struct SetAssocCache {
-    lines: Vec<Line>, // n_sets * ways, flat, set-major
+    tags: Vec<u64>,   // n_sets * ways, flat, set-major
+    stamps: Vec<u64>, // parallel to tags; 0 = invalid
     ways: usize,
     line_bytes: u64,
     n_sets: u64,
@@ -45,8 +43,10 @@ impl SetAssocCache {
         assert!(line_bytes.is_power_of_two(), "line size must be 2^k");
         let n_lines = capacity_bytes / line_bytes;
         let n_sets = (n_lines / ways as u64).max(1);
+        let slots = n_sets as usize * ways as usize;
         SetAssocCache {
-            lines: vec![INVALID; n_sets as usize * ways as usize],
+            tags: vec![0; slots],
+            stamps: vec![0; slots],
             ways: ways as usize,
             line_bytes,
             n_sets,
@@ -63,24 +63,23 @@ impl SetAssocCache {
         let line = addr / self.line_bytes;
         let base = (line % self.n_sets) as usize * self.ways;
         self.tick += 1;
-        let set = &mut self.lines[base..base + self.ways];
+        let tags = &mut self.tags[base..base + self.ways];
+        let stamps = &mut self.stamps[base..base + self.ways];
         let mut victim = 0usize;
         let mut victim_stamp = u64::MAX;
-        for (way, slot) in set.iter_mut().enumerate() {
-            if slot.stamp != 0 && slot.tag == line {
-                slot.stamp = self.tick;
+        for (way, (tag, stamp)) in tags.iter().zip(stamps.iter_mut()).enumerate() {
+            if *stamp != 0 && *tag == line {
+                *stamp = self.tick;
                 self.hits += 1;
                 return true;
             }
-            if slot.stamp < victim_stamp {
-                victim_stamp = slot.stamp;
+            if *stamp < victim_stamp {
+                victim_stamp = *stamp;
                 victim = way;
             }
         }
-        set[victim] = Line {
-            tag: line,
-            stamp: self.tick,
-        };
+        tags[victim] = line;
+        stamps[victim] = self.tick;
         self.misses += 1;
         false
     }

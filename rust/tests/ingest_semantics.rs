@@ -1,0 +1,196 @@
+//! Semantics guards for the streaming CSV ingest path (the bounded-
+//! memory `profiler::ingest` pipeline behind `repro ingest`).
+//!
+//! The contract under test, in order of importance:
+//!
+//! 1. **Byte-identity**: `from_csv`/`from_csv_lenient` are thin wrappers
+//!    over the streaming core, so streaming a file and parsing it
+//!    in-memory must produce *identical* profiles — `Profile`'s exact
+//!    `PartialEq` plus string equality of both serialized forms (CSV and
+//!    JSON), for any chunk size.
+//! 2. **Bounded memory**: the aggregator's high-water mark
+//!    (`peak_resident_accumulators`) tracks unique kernels, never row
+//!    count — the O(unique kernels) guarantee as an observable number.
+//! 3. **Chunk-boundary robustness**: CRLF endings, quoted commas,
+//!    device stamps and unterminated trailing lines survive every
+//!    buffer-boundary placement, down to 1-byte chunks.
+//! 4. **Dedup accounting**: `IngestStats::dedup_ratio` reflects the
+//!    launch-to-kernel compression of the synthetic trace exactly.
+
+use hroofline::device::{GpuSpec, Precision};
+use hroofline::profiler::export::{from_csv, from_csv_lenient, profile_to_json, to_csv};
+use hroofline::profiler::ingest::from_reader;
+use hroofline::profiler::{IngestConfig, ProfileRequest, Session};
+use hroofline::sim::kernel::{KernelDesc, KernelInvocation};
+
+const HEADER: &str = "\"Kernel Name\",\"Metric Name\",\"Metric Value\",\"Invocations\"\n";
+
+/// A realistic export: run a small mixed trace through a session and
+/// serialize it, so the CSV carries quoted names, a device stamp, and
+/// the full Table II metric set.
+fn session_csv(spec: &GpuSpec) -> String {
+    let trace = vec![
+        KernelInvocation {
+            kernel: KernelDesc::streaming_elementwise(
+                "relu, \"fused\"",
+                1 << 14,
+                Precision::Fp32,
+                1,
+            ),
+            invocations: 4,
+            stream: 0,
+        },
+        KernelInvocation::once(KernelDesc::gemm(
+            "volta_hmma_gemm", 256, 256, 256, Precision::Fp16, true, 64, spec,
+        )),
+    ];
+    let profile = Session::standard(spec).run(&ProfileRequest::new(&trace)).unwrap();
+    to_csv(&profile)
+}
+
+/// A synthetic many-launch export: `kernels` distinct kernels, each
+/// emitting `metrics_per_kernel` rows repeated `repeats` times, so the
+/// expected dedup ratio is `metrics_per_kernel * repeats`.
+fn synthetic_csv(kernels: usize, metrics_per_kernel: usize, repeats: usize) -> String {
+    let metric_names =
+        ["sm__cycles_elapsed.avg", "dram__bytes.sum", "lts__t_bytes.sum", "l1tex__t_bytes.sum"];
+    let mut csv = String::from(HEADER);
+    for _ in 0..repeats {
+        for k in 0..kernels {
+            for m in 0..metrics_per_kernel {
+                let metric = metric_names[m % metric_names.len()];
+                // Same (kernel, metric) value on every repeat: repeated
+                // launches in a real export re-state the aggregate.
+                csv.push_str(&format!("\"kern_{k}\",\"{metric}\",{},{}\n", 100 * k + m, 1 + k % 3));
+            }
+        }
+    }
+    csv
+}
+
+#[test]
+fn streaming_and_in_memory_paths_are_byte_identical() {
+    let spec = GpuSpec::v100();
+    let csv = session_csv(&spec);
+
+    let in_memory = from_csv(&csv, &spec).unwrap();
+    for chunk in [1usize, 7, 64, 4096, IngestConfig::DEFAULT_CHUNK_BYTES] {
+        let out = from_reader(
+            &mut csv.as_bytes(),
+            &spec,
+            &IngestConfig::new().chunk_bytes(chunk),
+        )
+        .unwrap();
+        // Exact structural equality…
+        assert_eq!(out.profile, in_memory, "chunk_bytes={chunk}");
+        // …and string equality of both serialized forms — the literal
+        // byte-identity acceptance check.
+        assert_eq!(to_csv(&out.profile), to_csv(&in_memory), "csv bytes, chunk={chunk}");
+        assert_eq!(
+            profile_to_json(&out.profile).to_string_pretty(),
+            profile_to_json(&in_memory).to_string_pretty(),
+            "json bytes, chunk={chunk}"
+        );
+        assert!(out.diagnostics.is_empty());
+    }
+}
+
+#[test]
+fn dedup_ratio_matches_the_synthetic_trace() {
+    let spec = GpuSpec::v100();
+    let (kernels, metrics, repeats) = (20usize, 4usize, 25usize);
+    let csv = synthetic_csv(kernels, metrics, repeats);
+    let out = from_reader(&mut csv.as_bytes(), &spec, &IngestConfig::new()).unwrap();
+    assert_eq!(out.stats.unique_kernels, kernels);
+    assert_eq!(out.stats.rows, (kernels * metrics * repeats) as u64);
+    let expected = (metrics * repeats) as f64;
+    assert!(
+        (out.stats.dedup_ratio() - expected).abs() < 1e-12,
+        "dedup {} != {expected}",
+        out.stats.dedup_ratio()
+    );
+    // Repeated launches fold, they don't multiply: the profile holds
+    // each kernel once with its declared invocation count.
+    assert_eq!(out.profile.n_kernels(), kernels);
+    assert_eq!(out.profile.kernel("kern_5").unwrap().invocations, 1 + 5 % 3);
+}
+
+#[test]
+fn chunk_boundaries_survive_crlf_and_trailing_partial_lines() {
+    let spec = GpuSpec::v100();
+    // CRLF line endings, a device stamp, a quoted comma in a kernel
+    // name, and *no* trailing newline — the last row must be emitted
+    // from the residual buffer at EOF.
+    let csv = format!(
+        "# device=TestBox\r\n{header}\"k, one\",\"dram__bytes.sum\",123,2\r\n\
+         \"k2\",\"sm__cycles_elapsed.avg\",456,1",
+        header = HEADER.trim_end_matches('\n').to_string() + "\r\n"
+    );
+    let reference = from_reader(&mut csv.as_bytes(), &spec, &IngestConfig::new()).unwrap();
+    assert_eq!(reference.profile.device, "TestBox");
+    assert_eq!(reference.profile.kernel("k, one").unwrap().invocations, 2);
+    let k2 = reference.profile.kernel("k2").unwrap();
+    assert_eq!(k2.counters.get("sm__cycles_elapsed.avg"), 456.0);
+    // Every chunk size slices the CRLF pairs and the unterminated tail
+    // differently; the output must not notice.
+    for chunk in 1..=16usize {
+        let out =
+            from_reader(&mut csv.as_bytes(), &spec, &IngestConfig::new().chunk_bytes(chunk))
+                .unwrap();
+        assert_eq!(out.profile, reference.profile, "chunk_bytes={chunk}");
+        assert_eq!(out.stats, reference.stats, "chunk_bytes={chunk}");
+    }
+    // In-memory wrapper agreement on the same pathological text.
+    assert_eq!(from_csv(&csv, &spec).unwrap(), reference.profile);
+}
+
+#[test]
+fn lenient_streaming_matches_from_csv_lenient() {
+    let spec = GpuSpec::v100();
+    let csv = format!(
+        "{HEADER}\"k\",\"sm__cycles_elapsed.avg\",1000,1\n\
+         \"k\",\"dram__bytes.sum\",notanumber,1\n\
+         too,few\n\
+         \"k\",\"lts__t_bytes.sum\",800,2\n\
+         \"k2\",\"dram__bytes.sum\",50,1\n"
+    );
+    let (wrapper_profile, wrapper_diags) = from_csv_lenient(&csv, &spec).unwrap();
+    for chunk in [1usize, 5, 64] {
+        let out = from_reader(
+            &mut csv.as_bytes(),
+            &spec,
+            &IngestConfig::new().lenient(true).chunk_bytes(chunk),
+        )
+        .unwrap();
+        assert_eq!(out.profile, wrapper_profile, "chunk_bytes={chunk}");
+        assert_eq!(out.diagnostics, wrapper_diags, "chunk_bytes={chunk}");
+    }
+    // The diagnostics carry the streamed line numbers: bad value at 3,
+    // short row at 4, conflicting invocations at 5.
+    let lines: Vec<usize> = wrapper_diags.rows.iter().map(|d| d.line).collect();
+    assert_eq!(lines, [3, 4, 5]);
+    // Rejected rows still count in stats (they were read and parsed).
+    let out = from_reader(&mut csv.as_bytes(), &spec, &IngestConfig::new().lenient(true)).unwrap();
+    assert_eq!(out.stats.rows, 5);
+    assert_eq!(out.stats.unique_kernels, 2);
+}
+
+#[test]
+fn resident_accumulators_track_unique_kernels_not_rows() {
+    // The bounded-memory property: scale rows by 50x at constant kernel
+    // count and the accumulator high-water mark must not move.
+    let spec = GpuSpec::v100();
+    let kernels = 16usize;
+    let mut peaks = Vec::new();
+    for repeats in [1usize, 10, 50] {
+        let csv = synthetic_csv(kernels, 4, repeats);
+        let out = from_reader(&mut csv.as_bytes(), &spec, &IngestConfig::new()).unwrap();
+        assert_eq!(out.stats.rows, (kernels * 4 * repeats) as u64);
+        assert_eq!(
+            out.stats.peak_resident_accumulators, out.stats.unique_kernels,
+            "aggregation never evicts, so peak == unique"
+        );
+        peaks.push(out.stats.peak_resident_accumulators);
+    }
+    assert!(peaks.iter().all(|&p| p == kernels), "peak is row-count-invariant: {peaks:?}");
+}
